@@ -1,0 +1,57 @@
+"""Communication-cost table (the paper's 'Comm.' column, measured).
+
+Analytic bytes/round/node for each method + measured HLO link bytes for the
+gossip backends on a real sharded mesh (from the dry-run results when
+available)."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def analytic_rows(d_params: int = 1_000_000, n: int = 16, tau: int = 4, dtype_bytes: int = 4):
+    """Bytes each node sends per ROUND (tau iterations).
+
+    ring gossip: each node sends its buffer to 2 neighbors; DSE sends two
+    buffers (slow-tracking y and parameters x); GT-DSGD communicates x and y
+    every step; DSGD communicates x every step."""
+    pb = d_params * dtype_bytes
+    deg = 2
+    return [
+        {"method": "dsgd", "bytes_per_round": tau * deg * pb, "comm_events": tau},
+        {"method": "gt_dsgd", "bytes_per_round": tau * deg * 2 * pb, "comm_events": tau},
+        {"method": "dlsgd", "bytes_per_round": deg * pb, "comm_events": 1},
+        {"method": "pd_sgdm", "bytes_per_round": deg * pb, "comm_events": 1},
+        {"method": "slowmo_d", "bytes_per_round": deg * pb, "comm_events": 1},
+        {"method": "dse_sgd", "bytes_per_round": deg * 2 * pb, "comm_events": 1},
+        {"method": "dse_mvr", "bytes_per_round": deg * 2 * pb, "comm_events": 1},
+    ]
+
+
+def run():
+    rows = []
+    for r in analytic_rows():
+        rows.append({
+            "bench": "comm_analytic",
+            "method": r["method"],
+            "mbytes_per_round_per_node": r["bytes_per_round"] / 1e6,
+            "comm_events_per_round": r["comm_events"],
+        })
+    # measured gossip-backend traffic from the dry-run, if present
+    path = "benchmarks/results/dryrun.json"
+    if os.path.exists(path):
+        with open(path) as f:
+            res = json.load(f)
+        for key, rec in sorted(res.items()):
+            if rec.get("status") != "ok" or rec.get("shape") != "train_4k":
+                continue
+            cp = rec["hlo_costs"]["collective_link_bytes"].get("collective-permute", 0)
+            rows.append({
+                "bench": "comm_measured",
+                "arch": rec["arch"],
+                "mesh": rec["mesh"],
+                "gossip": rec["gossip"],
+                "permute_gbytes_per_round_per_dev": round(cp / 1e9, 3),
+                "total_link_gbytes_per_dev": round(rec["hlo_costs"]["total_link_bytes"] / 1e9, 3),
+            })
+    return rows

@@ -1,0 +1,172 @@
+"""Roofline analysis from the dry-run results (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+
+    compute term    = flops_per_device / PEAK_FLOPS          [s]
+    memory term     = hbm_bytes_per_device / HBM_BW          [s]
+    collective term = link_bytes_per_device / ICI_BW         [s]
+
+(the HLO analyzer reports per-device numbers from the SPMD-partitioned
+module, loop trip counts included — see repro.launch.hlo_analysis).
+
+MODEL_FLOPS uses the 6*N*D training rule (N = active params, D = tokens
+processed per device per round, with the MVR double-gradient counted as the
+paper's algorithm requires) — the ratio MODEL_FLOPS / HLO_FLOPS exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.shapes import SHAPES
+
+RESULTS = "benchmarks/results/dryrun.json"
+
+
+# ---------------------------------------------------------------- params
+def count_params(cfg) -> Dict[str, float]:
+    """Analytic parameter counts: total and active-per-token."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.hd
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    dense_mlp = 3 * d * f if cfg.activation in ("silu", "gelu") else 2 * d * f
+    per_kind = {}
+    moe_f = cfg.moe_d_ff or f
+    expert = 3 * d * moe_f
+    for kind in set(cfg.block_unit):
+        if kind in ("attn", "local", "shared_attn"):
+            per_kind[kind] = attn + dense_mlp
+        elif kind == "moe":
+            total = attn + cfg.n_experts * expert + cfg.n_shared_experts * expert
+            active = attn + cfg.top_k * expert + cfg.n_shared_experts * expert
+            if cfg.dense_residual:
+                total += dense_mlp
+                active += dense_mlp
+            per_kind[kind] = (total, active)
+        elif kind == "mamba":
+            di = cfg.ssm_expand * d
+            per_kind[kind] = d * (2 * di + 2 * cfg.ssm_state + di // cfg.ssm_head_dim) + di * d
+        elif kind == "rwkv":
+            per_kind[kind] = 5 * d * d + 2 * d * f + d * d
+    reps = cfg.repeats
+    total = active = 0.0
+    for i, kind in enumerate(cfg.block_unit):
+        p = per_kind[kind]
+        mult = 1 if kind == "shared_attn" else reps
+        if isinstance(p, tuple):
+            total += reps * p[0]
+            active += reps * p[1]
+        else:
+            total += mult * p
+            active += reps * p
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return {"total": total + embed, "active": active + embed}
+
+
+def model_flops(cfg, shape, tau: int, chips: int, mvr: bool = True) -> float:
+    """Analytic useful FLOPs per DEVICE for one step/round."""
+    pc = count_params(cfg)
+    n_active = pc["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * tau
+        grad_evals = 2 if mvr else 1   # MVR evaluates two gradients per step
+        return 6 * n_active * tokens * grad_evals / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_active * tokens / chips
+    tokens = shape.global_batch  # one token per sequence
+    return 2 * n_active * tokens / chips
+
+
+# ---------------------------------------------------------------- terms
+def derive_terms(rec: dict, chips: int = 256, tau: Optional[int] = None) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    hc = rec["hlo_costs"]
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    tau = tau or rec.get("tau", 4)
+    compute_t = hc["flops"] / PEAK_FLOPS
+    memory_t = hc["hbm_bytes"] / HBM_BW
+    coll_t = hc["total_link_bytes"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, tau, chips)
+    mem = rec.get("memory_analysis") or {}
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "gossip": rec.get("gossip"),
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": hc["flops"],
+        "useful_ratio": mf / hc["flops"] if hc["flops"] else float("nan"),
+        "hbm_gb_per_dev": (
+            (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 1e9
+            if mem else None
+        ),
+        "bound_s": max(terms.values()),
+    }
+
+
+def load_rows(path: str = RESULTS, mesh: str = "16x16", include_variants: bool = False):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        res = json.load(f)
+    rows = []
+    for key, rec in res.items():
+        if rec.get("mesh") != mesh:
+            continue
+        # baseline rows have exactly arch|shape|mesh|gossip keys; longer keys
+        # are perf-iteration variants (EXPERIMENTS.md §Perf)
+        if not include_variants and len(key.split("|")) != 4:
+            continue
+        if not include_variants and key.split("|")[3] != "roll":
+            continue
+        if rec.get("status") == "skip":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "dominant": "SKIP", "reason": rec["reason"][:60],
+            })
+            continue
+        t = derive_terms(rec, chips=256 if mesh == "16x16" else 512)
+        if t:
+            rows.append(t)
+    return rows
+
+
+def run():
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in load_rows(mesh=mesh):
+            out = {"bench": "roofline", **{
+                k: (round(v, 4) if isinstance(v, float) else v) for k, v in r.items()
+            }}
+            rows.append(out)
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = load_rows(mesh=mesh)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | mem GB/dev |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("dominant") == "SKIP":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | *skip: {r['reason']}* | — | — |")
+            continue
+        gb = f"{r['hbm_gb_per_dev']:.1f}" if r.get("hbm_gb_per_dev") is not None else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** | {r['useful_ratio']:.2f} | {gb} |"
+        )
+    return hdr + "\n".join(lines)

@@ -1,0 +1,75 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,curves,...] [--fast]
+
+Prints CSV rows ``name,us_per_call,derived`` and writes full JSON to
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _csv(rows):
+    for r in rows:
+        name = r.get("name") or "/".join(
+            str(r[k]) for k in ("bench", "method", "arch", "shape", "mesh", "omega", "tau", "b")
+            if k in r
+        )
+        us = r.get("us_per_call", "")
+        derived = ";".join(
+            f"{k}={v}" for k, v in r.items()
+            if k not in ("bench", "method", "name", "us_per_call") and not isinstance(v, (dict, list))
+        )
+        print(f"{name},{us},{derived}")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline")
+    p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
+    args = p.parse_args(argv)
+    only = set(args.only.split(","))
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    all_rows = []
+    t0 = time.time()
+
+    if "table2" in only:
+        from . import table2
+        rows = table2.run(steps=60 if args.fast else 200)
+        all_rows += rows
+        _csv(rows)
+    if "curves" in only:
+        from . import curves
+        rows = curves.run(steps=50 if args.fast else 150)
+        all_rows += rows
+        _csv(rows)
+    if "comm" in only:
+        from . import comm
+        rows = comm.run()
+        all_rows += rows
+        _csv(rows)
+    if "kernels" in only:
+        from . import kernels_bench
+        rows = kernels_bench.run()
+        all_rows += rows
+        _csv(rows)
+    if "roofline" in only:
+        from . import roofline
+        rows = roofline.run()
+        all_rows += rows
+        _csv(rows)
+
+    with open("benchmarks/results/benchmarks.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# {len(all_rows)} rows in {time.time()-t0:.0f}s -> benchmarks/results/benchmarks.json",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 2 analog: test accuracy / training loss across methods under
+varying batch size b, partial-average interval tau and heterogeneity omega.
+
+Scaled to this container (8-node ring, pseudo-MNIST MLP, T=200) — the check
+is the RANKING and the trends, not absolute accuracies.
+"""
+from __future__ import annotations
+
+import time
+
+METHODS = ["dlsgd", "slowmo_d", "pd_sgdm", "dse_sgd", "dse_mvr"]
+
+
+def run(steps: int = 200, seeds=(0,)):
+    from .common import run_method
+
+    rows = []
+    settings = [
+        # (omega, tau, b)   — paper's axes: non-iid/iid x tau x b
+        (0.5, 4, 16),
+        (0.5, 4, 64),
+        (0.5, 8, 16),
+        (10.0, 4, 16),
+        (10.0, 8, 16),
+    ]
+    for omega, tau, b in settings:
+        for m in METHODS:
+            accs, losses = [], []
+            t0 = time.time()
+            for s in seeds:
+                r = run_method(m, omega, tau, b, steps, seed=s)
+                accs.append(r["test_acc"])
+                losses.append(r["train_loss"])
+            rows.append({
+                "bench": "table2",
+                "method": m,
+                "omega": omega,
+                "tau": tau,
+                "b": b,
+                "test_acc": sum(accs) / len(accs),
+                "train_loss": sum(losses) / len(losses),
+                "us_per_call": (time.time() - t0) / max(steps, 1) * 1e6,
+            })
+    return rows

@@ -1,0 +1,60 @@
+"""End-to-end driver: decentralized DSE-MVR training of a transformer LM.
+
+Default invocation trains a ~20M-param llama-family model for 200 rounds on
+this CPU container (about 20-40 min); ``--full`` selects a ~100M model (the
+assignment's e2e scale — run it where you have more cores/accelerators).
+
+  PYTHONPATH=src python examples/decentralized_lm.py
+  PYTHONPATH=src python examples/decentralized_lm.py --full --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_cli
+from repro.models import ModelConfig
+
+
+def lm_20m():
+    return ModelConfig(
+        name="lm-20m", arch_type="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=8192,
+        block_unit=("attn",), tie_embeddings=True,
+    )
+
+
+def lm_100m():
+    return ModelConfig(
+        name="lm-100m", arch_type="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=16384,
+        block_unit=("attn",), tie_embeddings=True,
+    )
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="~100M params")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--tau", type=int, default=4)
+    p.add_argument("--out", default="/tmp/decentralized_lm")
+    args = p.parse_args()
+
+    cfg = lm_100m() if args.full else lm_20m()
+
+    # route through the production train CLI with a custom config
+    import repro.configs as configs
+
+    mod_name = cfg.name.replace("-", "_")
+    module = type(sys)("custom_cfg")
+    module.config = lambda: cfg
+    module.reduced = lambda: cfg
+    sys.modules[f"repro.configs.{mod_name}"] = module
+
+    train_cli.main([
+        "--arch", cfg.name, "--steps", str(args.steps), "--tau", str(args.tau),
+        "--seq-len", "128", "--global-batch", "8", "--lr", "0.1",
+        "--algorithm", "dse_mvr", "--out", args.out, "--ckpt-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    main()

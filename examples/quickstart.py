@@ -1,0 +1,69 @@
+"""Quickstart: DSE-MVR vs the baselines on a non-iid 8-node ring (CPU, ~2 min).
+
+Reproduces the paper's core claim at toy scale: under heterogeneous data with
+local updates, the dual-slow estimation + MVR reaches a better solution than
+plain decentralized local SGD, and drives the consensus distance to ~0.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import DSEMVR, DSESGD, DLSGD, Simulator, ring
+from repro.data import dirichlet_partition, make_pseudo_mnist, partition_to_node_data
+
+N_NODES, TAU, BATCH, STEPS = 8, 4, 32, 200
+
+
+def main():
+    import jax.numpy as jnp
+    import numpy as np
+
+    # --- non-iid data: Dirichlet(0.5) label skew over an 8-node ring ------
+    # (feature + label noise so the methods separate; the clean task
+    # saturates every method at accuracy 1.0)
+    x, y = make_pseudo_mnist(3000, side=14, seed=0)
+    rng = np.random.default_rng(1)
+    x = x + rng.normal(size=x.shape).astype(np.float32) * 2.5
+    flip = rng.random(len(y)) < 0.05
+    y = np.where(flip, rng.integers(0, 10, len(y)), y).astype(np.int32)
+    xtr, ytr, xte, yte = x[:2000], y[:2000], x[2000:], y[2000:]
+    parts = dirichlet_partition(ytr, N_NODES, omega=0.5, seed=0, min_per_node=20)
+    data = partition_to_node_data(xtr, ytr, parts)
+    top = ring(N_NODES)
+    print(f"ring of {N_NODES} nodes, lambda = {top.lam:.3f}, tau = {TAU}")
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (196, 64)) * 0.07,
+            "b1": jnp.zeros(64),
+            "w2": jax.random.normal(k2, (64, 10)) * 0.12,
+            "b2": jnp.zeros(10),
+        }
+
+    def loss(params, batch):
+        xb, yb = batch
+        h = jnp.tanh(xb @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits), yb[..., None], -1).mean()
+
+    def acc(params):
+        h = jnp.tanh(jnp.asarray(xte) @ params["w1"] + params["b1"])
+        pred = (h @ params["w2"] + params["b2"]).argmax(-1)
+        return {"test_acc": float((pred == jnp.asarray(yte)).mean())}
+
+    algs = {
+        "DLSGD   ": DLSGD(lr=0.3, tau=TAU),
+        "DSE-SGD ": DSESGD(lr=0.3, tau=TAU),
+        "DSE-MVR ": DSEMVR(lr=0.3, alpha=0.05, tau=TAU),
+    }
+    print(f"{'method':9s} {'train_loss':>10s} {'test_acc':>9s} {'consensus':>10s}")
+    for name, alg in algs.items():
+        sim = Simulator(alg, top, loss, data, batch_size=BATCH, eval_fn=acc)
+        out = sim.run(init(jax.random.key(0)), jax.random.key(1), STEPS, eval_every=STEPS)
+        m = out["history"][-1]
+        print(f"{name} {m['train_loss']:10.4f} {m['test_acc']:9.3f} {m['consensus']:10.2e}")
+
+
+if __name__ == "__main__":
+    main()

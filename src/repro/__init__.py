@@ -1,0 +1,2 @@
+"""repro: production-grade JAX framework implementing DSE-MVR decentralized training."""
+__version__ = "0.1.0"

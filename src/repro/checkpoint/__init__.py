@@ -1,0 +1,4 @@
+"""Pytree checkpointing (msgpack + raw numpy buffers, no external deps)."""
+from .checkpoint import save_checkpoint, load_checkpoint, latest_step, CheckpointManager
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager"]

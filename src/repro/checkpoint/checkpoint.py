@@ -1,0 +1,112 @@
+"""Simple, robust pytree checkpointing.
+
+Format: a directory per step containing ``manifest.msgpack`` (treedef, shapes,
+dtypes, metadata) and ``data.npz`` (flattened leaves).  Writes are atomic
+(tmp dir + rename) so a crashed save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [np.asarray(v) for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree, metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "dtypes": [str(l.dtype) for l in leaves],
+            "shapes": [list(l.shape) for l in leaves],
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        np.savez(os.path.join(tmp, "data.npz"), **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None, like: Optional[PyTree] = None):
+    """Returns (tree, metadata).  If ``like`` is given the result has its
+    treedef; otherwise a nested dict keyed by path segments is returned."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "data.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+    if like is not None:
+        _, treedef = jax.tree_util.tree_flatten(like)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["metadata"]
+    out: Dict[str, Any] = {}
+    for p, leaf in zip(manifest["paths"], leaves):
+        cur = out
+        parts = [seg for seg in p.replace("[", "/").replace("]", "").replace("'", "").split("/") if seg]
+        for seg in parts[:-1]:
+            cur = cur.setdefault(seg, {})
+        cur[parts[-1]] = leaf
+    return out, manifest["metadata"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(name.split("_")[1])
+        for name in os.listdir(directory)
+        if name.startswith("step_") and name.split("_")[1].isdigit()
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Keeps the newest ``keep`` checkpoints in a directory."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    def save(self, step: int, tree: PyTree, metadata: Optional[Dict] = None):
+        path = save_checkpoint(self.directory, step, tree, metadata)
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_")
+        )
+        for old in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{old:010d}"), ignore_errors=True)
+        return path
+
+    def restore(self, like: Optional[PyTree] = None, step: Optional[int] = None):
+        return load_checkpoint(self.directory, step, like)

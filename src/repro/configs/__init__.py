@@ -1,0 +1,41 @@
+"""Assigned architecture configs (public-literature pool) + smoke variants.
+
+Every ``config()`` matches the assignment table exactly; every ``reduced()``
+is a same-family variant small enough for a CPU forward/train step
+(<= a few layers, d_model <= 512, <= 4 experts).
+"""
+from importlib import import_module
+
+ARCH_IDS = [
+    "arctic_480b",
+    "qwen2_moe_a2_7b",
+    "zamba2_7b",
+    "qwen2_vl_2b",
+    "gemma2_2b",
+    "yi_9b",
+    "command_r_plus_104b",
+    "rwkv6_3b",
+    "hubert_xlarge",
+    "minitron_8b",
+]
+
+# canonical dashed ids used on the CLI
+CLI_IDS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def _mod(arch: str):
+    arch = CLI_IDS.get(arch, arch).replace("-", "_").replace(".", "_")
+    arch = arch.replace("_reduced", "")
+    return import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str):
+    return _mod(arch).config()
+
+
+def get_reduced(arch: str):
+    return _mod(arch).reduced()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

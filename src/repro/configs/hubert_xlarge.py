@@ -1,0 +1,46 @@
+"""HuBERT X-Large: 48L d_model=1280 16H d_ff=5120 vocab=504 (codebook units),
+encoder-only (bidirectional attention, same arch as wav2vec2).  The
+mel/conv feature frontend is a STUB: ``input_specs`` provides 512-dim frame
+features.  [arXiv:2106.07447]
+"""
+from repro.models import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        arch_type="audio",
+        n_layers=48,
+        d_model=1280,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        block_unit=("attn",),
+        causal=False,
+        head="frame",
+        activation="gelu_plain",
+        use_bias=True,
+        audio_frontend_dim=512,
+        tie_embeddings=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-reduced",
+        arch_type="audio",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab_size=64,
+        block_unit=("attn",),
+        causal=False,
+        head="frame",
+        activation="gelu_plain",
+        use_bias=True,
+        audio_frontend_dim=32,
+        tie_embeddings=False,
+    )

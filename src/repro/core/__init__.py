@@ -1,0 +1,27 @@
+"""Paper core: DSE-MVR / DSE-SGD, baselines, topologies, gossip, simulation."""
+from .topology import Topology, ring, torus, fully_connected, star, metropolis_hastings, spectral_gap, check_mixing_matrix
+from .dse import DSEMVR, DSESGD, DSEState
+from .baselines import DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD
+from .mixing import dense_mix, allgather_mix, ring_mix, make_mix_fn, identity_mix
+from .simulate import Simulator, NodeData, node_mean, consensus_distance
+
+ALGORITHMS = {
+    "dse_mvr": DSEMVR,
+    "dse_sgd": DSESGD,
+    "dsgd": DSGD,
+    "dlsgd": DLSGD,
+    "gt_dsgd": GTDSGD,
+    "gt_hsgd": GTHSGD,
+    "pd_sgdm": PDSGDM,
+    "slowmo_d": SlowMoD,
+}
+
+__all__ = [
+    "Topology", "ring", "torus", "fully_connected", "star",
+    "metropolis_hastings", "spectral_gap", "check_mixing_matrix",
+    "DSEMVR", "DSESGD", "DSEState",
+    "DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD",
+    "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",
+    "Simulator", "NodeData", "node_mean", "consensus_distance",
+    "ALGORITHMS",
+]

@@ -1,0 +1,280 @@
+"""Baseline decentralized algorithms the paper compares against.
+
+All expose the same protocol as ``DSEMVR``:
+
+    init(params, full_grad_fn=None)            -> state
+    local_step(state, grad_fn)                 -> state
+    round_end(state, mix_fn, reset_grad_fn)    -> state
+    step(state, grad_fn, mix_fn, ...)          -> state   (python dispatch)
+
+References:
+  DSGD      Lian et al. 2017  (decentralized parallel SGD, gossip every step)
+  DLSGD     Li et al. 2019    (decentralized local SGD: tau local steps + gossip)
+  GT-DSGD   Xin et al. 2021   (gradient tracking every step)
+  PD-SGDM   Gao & Huang 2020  (periodic decentralized momentum SGD)
+  SlowMo-D  Wang et al. 2019  (slow momentum outer update on gossiped iterates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dse import GradFn, MixFn, PyTree, ScheduleOrFloat, _cast_like, _sched, tree_axpy, tree_sub
+
+__all__ = ["DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD"]
+
+
+def _zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SGDState:
+    params: PyTree
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DLSGD:
+    """tau local SGD steps, then gossip the parameters."""
+
+    lr: ScheduleOrFloat
+    tau: int = 1
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> SGDState:
+        del full_grad_fn
+        return SGDState(params=params, step=jnp.zeros((), jnp.int32))
+
+    def local_step(self, state: SGDState, grad_fn: GradFn) -> SGDState:
+        gamma = _sched(self.lr, state.step)
+        g = grad_fn(state.params)
+        return dataclasses.replace(
+            state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
+        )
+
+    def round_end(self, state: SGDState, mix_fn: MixFn, grad_fn: GradFn) -> SGDState:
+        state = self.local_step(state, grad_fn)
+        return dataclasses.replace(state, params=mix_fn(state.params))
+
+    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % self.tau == 0:
+            return self.round_end(state, mix_fn, grad_fn)
+        return self.local_step(state, grad_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGD(DLSGD):
+    """Decentralized SGD: gossip after every step (DLSGD with tau=1)."""
+
+    tau: int = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GTState:
+    params: PyTree
+    y: PyTree          # tracked global gradient estimate
+    g_prev: PyTree     # g_t (for the tracking correction)
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GTDSGD:
+    """Gradient-tracking DSGD (communicates x and y every step).
+
+      x_{t+1} = mix(x_t) - gamma * y_t
+      y_{t+1} = mix(y_t) + g_{t+1} - g_t
+    """
+
+    lr: ScheduleOrFloat
+    tau: int = 1  # fixed: GT-DSGD is a non-local-update method
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTState:
+        g0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
+        return GTState(params=params, y=g0, g_prev=g0, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: GTState, grad_fn, mix_fn, reset_grad_fn=None, t=None) -> GTState:
+        gamma = _sched(self.lr, state.step)
+        x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
+        g_new = grad_fn(x_new)
+        y_new = jax.tree.map(
+            lambda ym, gn, gp: (ym + gn - gp).astype(ym.dtype),
+            mix_fn(state.y),
+            g_new,
+            state.g_prev,
+        )
+        return GTState(params=x_new, y=y_new, g_prev=g_new, step=state.step + 1)
+
+    local_step = step  # uniform protocol
+
+    def round_end(self, state, mix_fn, grad_fn):
+        raise NotImplementedError("GT-DSGD communicates every step; use step()")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GTHSGDState:
+    params: PyTree
+    v: PyTree          # hybrid variance-reduced local estimator
+    y: PyTree          # tracked global direction
+    v_prev: PyTree
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GTHSGD:
+    """GT-HSGD (Xin, Khan & Kar 2021) — the paper's closest theoretical
+    competitor (Table 1): hybrid (STORM-style) variance reduction + gradient
+    tracking, communicating every iteration (no local updates).
+
+      v_t   = g(x_t; xi) + (1 - beta)(v_{t-1} - g(x_{t-1}; xi))   # same xi
+      y_t   = mix(y_{t-1}) + v_t - v_{t-1}
+      x_{t+1} = mix(x_t) - gamma y_t
+    """
+
+    lr: ScheduleOrFloat
+    beta: float = 0.1
+    tau: int = 1  # communicates every step
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTHSGDState:
+        v0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
+        return GTHSGDState(
+            params=params, v=v0, y=jax.tree.map(jnp.copy, v0),
+            v_prev=jax.tree.map(jnp.copy, v0), step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state: GTHSGDState, grad_fn, mix_fn, reset_grad_fn=None, t=None) -> GTHSGDState:
+        gamma = _sched(self.lr, state.step)
+        x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
+        g_new = grad_fn(x_new)
+        g_old = grad_fn(state.params)
+        v_new = jax.tree.map(
+            lambda gn, v, go: (gn + (1.0 - self.beta) * (v - go)).astype(v.dtype),
+            g_new, state.v, g_old,
+        )
+        y_new = jax.tree.map(
+            lambda ym, vn, vp: (ym + vn - vp).astype(ym.dtype),
+            mix_fn(state.y), v_new, state.v,
+        )
+        return GTHSGDState(params=x_new, v=v_new, y=y_new,
+                           v_prev=state.v, step=state.step + 1)
+
+    local_step = step
+
+    def round_end(self, state, mix_fn, grad_fn):
+        raise NotImplementedError("GT-HSGD communicates every step; use step()")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MomentumState:
+    params: PyTree
+    m: PyTree
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class PDSGDM:
+    """Periodic decentralized SGD with (local) momentum."""
+
+    lr: ScheduleOrFloat
+    tau: int = 1
+    beta: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> MomentumState:
+        del full_grad_fn
+        return MomentumState(params=params, m=_zeros_like(params), step=jnp.zeros((), jnp.int32))
+
+    def local_step(self, state: MomentumState, grad_fn: GradFn) -> MomentumState:
+        gamma = _sched(self.lr, state.step)
+        g = grad_fn(state.params)
+        m_new = jax.tree.map(lambda m, gi: (self.beta * m + gi).astype(m.dtype), state.m, g)
+        d = (
+            jax.tree.map(lambda m, gi: self.beta * m + gi, m_new, g)
+            if self.nesterov
+            else m_new
+        )
+        return MomentumState(
+            params=tree_axpy(-gamma, d, state.params), m=m_new, step=state.step + 1
+        )
+
+    def round_end(self, state, mix_fn, grad_fn) -> MomentumState:
+        state = self.local_step(state, grad_fn)
+        return dataclasses.replace(state, params=mix_fn(state.params))
+
+    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % self.tau == 0:
+            return self.round_end(state, mix_fn, grad_fn)
+        return self.local_step(state, grad_fn)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SlowMoState:
+    params: PyTree
+    x_ref: PyTree      # params at round start
+    u: PyTree          # slow momentum buffer
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowMoD:
+    """SlowMo with Local-SGD inner optimizer, decentralized (gossip) averaging.
+
+    Inner: tau local SGD steps.  Outer (every tau steps):
+      x_avg    = mix(x_inner)
+      u_{k+1}  = beta * u_k + (x_ref - x_avg) / gamma
+      x_{k+1}  = x_ref - slow_lr * gamma * u_{k+1}
+    """
+
+    lr: ScheduleOrFloat
+    tau: int = 1
+    slow_lr: float = 1.0
+    beta: float = 0.95
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> SlowMoState:
+        del full_grad_fn
+        return SlowMoState(
+            params=params,
+            x_ref=jax.tree.map(jnp.copy, params),
+            u=_zeros_like(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def local_step(self, state: SlowMoState, grad_fn: GradFn) -> SlowMoState:
+        gamma = _sched(self.lr, state.step)
+        g = grad_fn(state.params)
+        return dataclasses.replace(
+            state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
+        )
+
+    def round_end(self, state: SlowMoState, mix_fn: MixFn, grad_fn: GradFn) -> SlowMoState:
+        gamma = _sched(self.lr, state.step)
+        state = self.local_step(state, grad_fn)
+        x_avg = mix_fn(state.params)
+        u_new = jax.tree.map(
+            lambda u, xr, xa: (self.beta * u + (xr.astype(jnp.float32) - xa.astype(jnp.float32)) / gamma).astype(u.dtype),
+            state.u,
+            state.x_ref,
+            x_avg,
+        )
+        x_new = tree_axpy(-self.slow_lr * gamma, u_new, _cast_like(state.x_ref, state.params))
+        return SlowMoState(
+            params=x_new,
+            x_ref=jax.tree.map(jnp.copy, x_new),
+            u=u_new,
+            step=state.step,
+        )
+
+    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % self.tau == 0:
+            return self.round_end(state, mix_fn, grad_fn)
+        return self.local_step(state, grad_fn)

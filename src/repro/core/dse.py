@@ -1,0 +1,243 @@
+"""DSE-MVR and DSE-SGD — the paper's algorithms (Alg. 1 / Alg. 2).
+
+The algorithms are written *per node* over arbitrary parameter pytrees and are
+agnostic to where the node lives:
+
+  * in the CPU simulation engine (``repro.core.simulate``) the state carries a
+    leading node axis and ``mix_fn`` is a dense ``W`` contraction;
+  * in the distributed runtime (``repro.launch.distributed``) the state is the
+    per-node shard inside ``shard_map`` and ``mix_fn`` is built from
+    ``lax.ppermute`` / ``lax.all_gather`` over the node mesh axis.
+
+Update rules (Alg. 1, DSE-MVR), node index dropped:
+
+  local step t (mod(t+1, tau) != 0):
+      x_{t+1}   = x_t - gamma_t * v_t
+      v_{t+1}   = g(x_{t+1}; xi) + (1 - alpha) * (v_t - g(x_t; xi))   # same xi!
+  communication step (mod(t+1, tau) == 0):
+      x_half    = x_t - gamma_t * v_t
+      h_{t+1}   = x_ref - x_half            # accumulated descent this round
+      y_{t+1}   = mix(y + h_{t+1} - h_prev) # SGT: slow gradient tracking
+      x_{t+1}   = mix(x_ref - y_{t+1})      # SPA: slow partial averaging
+      v_{t+1}   = full_grad(x_{t+1})        # MVR reset keeps E[V_t] unbiased
+
+DSE-SGD (Alg. 2) is the special case alpha = 1 with no reset (v_t == g_t).
+
+``fuse_tracking_buffers=True`` stores ``z = y - h_prev`` instead of ``(y, h_prev)``
+(one fewer param-sized state buffer; exact same iterates since mix is linear) —
+a beyond-paper memory optimization, equivalence-tested in
+``tests/test_dse_algorithms.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+GradFn = Callable[[PyTree], PyTree]          # params -> grads (batch closed over)
+MixFn = Callable[[PyTree], PyTree]           # gossip: tree -> mixed tree
+ScheduleOrFloat = Any
+
+__all__ = ["DSEState", "DSEMVR", "DSESGD", "tree_axpy", "tree_sub", "tree_add"]
+
+
+def _sched(v: ScheduleOrFloat, t) -> jnp.ndarray:
+    if callable(v):
+        return jnp.asarray(v(t), dtype=jnp.float32)
+    return jnp.asarray(v, dtype=jnp.float32)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, preserving y's dtype."""
+    return jax.tree.map(lambda xi, yi: (alpha * xi + yi).astype(yi.dtype), x, y)
+
+
+def _cast_like(src: PyTree, ref: PyTree) -> PyTree:
+    return jax.tree.map(lambda s, r: s.astype(r.dtype), src, ref)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DSEState:
+    """State of DSE-MVR / DSE-SGD for one node (or node-stacked in simulation).
+
+    ``y`` and ``h_prev`` are None when tracking buffers are fused into ``z``;
+    ``z`` is None otherwise.  ``v`` is None for DSE-SGD (no momentum buffer).
+    """
+
+    params: PyTree
+    x_ref: PyTree                 # x at the start of the current round  (x_{tau(t)})
+    v: Optional[PyTree]           # MVR direction estimate
+    y: Optional[PyTree]           # SGT tracked global accumulated direction
+    h_prev: Optional[PyTree]      # h_{tau(t)} from the previous round
+    z: Optional[PyTree]           # fused y - h_prev buffer
+    step: jnp.ndarray             # global iteration t
+
+
+def _zeros_like_f32(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype or p.dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSEMVR:
+    """Decentralized local updates with Dual-Slow Estimation + MVR (Alg. 1)."""
+
+    lr: ScheduleOrFloat
+    alpha: ScheduleOrFloat = 1.0
+    tau: int = 1
+    fuse_tracking_buffers: bool = False
+    state_dtype: Any = None        # None => match params dtype
+
+    # -- state ------------------------------------------------------------
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> DSEState:
+        """v_0 = full local gradient (Alg. 1 line 3); zeros if fn not given."""
+        dt = self.state_dtype
+        v0 = (
+            _cast_like(full_grad_fn(params), _zeros_like_f32(params, dt))
+            if full_grad_fn is not None
+            else _zeros_like_f32(params, dt)
+        )
+        zeros = _zeros_like_f32(params, dt)
+        if self.fuse_tracking_buffers:
+            y = h_prev = None
+            z = zeros
+        else:
+            y, h_prev = zeros, _zeros_like_f32(params, dt)
+            z = None
+        return DSEState(
+            params=params,
+            x_ref=jax.tree.map(jnp.copy, params),
+            v=v0,
+            y=y,
+            h_prev=h_prev,
+            z=z,
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    # -- inner (local) update ----------------------------------------------
+    def local_step(self, state: DSEState, grad_fn: GradFn) -> DSEState:
+        """One local MVR step.  ``grad_fn`` closes over ONE minibatch xi and is
+        evaluated at both x_{t+1} and x_t (the paper's same-sample requirement).
+        """
+        gamma = _sched(self.lr, state.step)
+        alpha = _sched(self.alpha, state.step + 1)
+        x_new = tree_axpy(-gamma, state.v, state.params)
+        g_new = grad_fn(x_new)
+        g_old = grad_fn(state.params)
+        # v_{t+1} = g_{t+1} + (1 - alpha) (v_t - g_t)
+        v_new = jax.tree.map(
+            lambda gn, v, go: (gn + (1.0 - alpha) * (v.astype(gn.dtype) - go)).astype(v.dtype),
+            g_new,
+            state.v,
+            g_old,
+        )
+        return dataclasses.replace(state, params=x_new, v=v_new, step=state.step + 1)
+
+    # -- communication round -------------------------------------------------
+    def round_end(
+        self,
+        state: DSEState,
+        mix_fn: MixFn,
+        reset_grad_fn: Optional[GradFn] = None,
+    ) -> DSEState:
+        """The SGT + SPA + v-reset step (Alg. 1 lines 7-11).
+
+        ``reset_grad_fn`` computes the (full or large-batch) local gradient for
+        the MVR reset; if None the v buffer is kept (used by DSE-SGD subclass).
+        """
+        gamma = _sched(self.lr, state.step)
+        x_half = tree_axpy(-gamma, state.v, state.params)
+        h_new = tree_sub(_cast_like(state.x_ref, x_half), x_half)  # x_ref - x_half
+        h_new = _cast_like(h_new, state.v)
+        if self.fuse_tracking_buffers:
+            y_new = mix_fn(tree_add(state.z, h_new))
+            z_new = tree_sub(y_new, h_new)
+            y_upd = dict(z=z_new)
+        else:
+            y_new = mix_fn(tree_add(state.y, tree_sub(h_new, state.h_prev)))
+            y_upd = dict(y=y_new, h_prev=h_new)
+        # SPA: x_{t+1} = mix(x_ref - y_{t+1})
+        x_new = mix_fn(tree_axpy(-1.0, _cast_like(y_new, state.x_ref), state.x_ref))
+        x_new = _cast_like(x_new, state.params)
+        v_new = state.v
+        if reset_grad_fn is not None:
+            v_new = _cast_like(reset_grad_fn(x_new), state.v)
+        return dataclasses.replace(
+            state,
+            params=x_new,
+            x_ref=jax.tree.map(jnp.copy, x_new),
+            v=v_new,
+            step=state.step + 1,
+            **y_upd,
+        )
+
+    # -- convenience: python-level dispatch (simulation / small jobs) -------
+    def step(
+        self,
+        state: DSEState,
+        grad_fn: GradFn,
+        mix_fn: MixFn,
+        reset_grad_fn: Optional[GradFn] = None,
+        t: Optional[int] = None,
+    ) -> DSEState:
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % self.tau == 0:
+            return self.round_end(state, mix_fn, reset_grad_fn or grad_fn)
+        return self.local_step(state, grad_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSESGD(DSEMVR):
+    """DSE-SGD (Alg. 2): plain minibatch SGD inner update + dual-slow estimation.
+
+    Equivalent to DSE-MVR with alpha == 1 and no reset; implemented directly so
+    no extra ``g_old`` evaluation is wasted.
+    """
+
+    alpha: ScheduleOrFloat = 1.0
+
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> DSEState:
+        # v_0 = g_0 (Alg. 2 line 2); the first local_step supplies the gradient.
+        return super().init(params, full_grad_fn)
+
+    def local_step(self, state: DSEState, grad_fn: GradFn) -> DSEState:
+        gamma = _sched(self.lr, state.step)
+        x_new = tree_axpy(-gamma, state.v, state.params)
+        g_new = _cast_like(grad_fn(x_new), state.v)
+        return dataclasses.replace(state, params=x_new, v=g_new, step=state.step + 1)
+
+    def round_end(
+        self,
+        state: DSEState,
+        mix_fn: MixFn,
+        reset_grad_fn: Optional[GradFn] = None,
+    ) -> DSEState:
+        state = super().round_end(state, mix_fn, reset_grad_fn=None)
+        if reset_grad_fn is not None:  # v_{t+1} = g(x_{t+1}) — fresh minibatch
+            v_new = _cast_like(reset_grad_fn(state.params), state.v)
+            state = dataclasses.replace(state, v=v_new)
+        return state
+
+    def step(
+        self,
+        state: DSEState,
+        grad_fn: GradFn,
+        mix_fn: MixFn,
+        reset_grad_fn: Optional[GradFn] = None,
+        t: Optional[int] = None,
+    ) -> DSEState:
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % self.tau == 0:
+            return self.round_end(state, mix_fn, reset_grad_fn or grad_fn)
+        return self.local_step(state, grad_fn)

@@ -1,0 +1,159 @@
+"""Gossip (mixing) backends.
+
+Three interchangeable implementations of ``x_i <- sum_j w_ij x_j``:
+
+  * ``dense_mix``      — node-stacked pytrees (leading axis N), dense einsum
+                         with W.  Used by the CPU simulation engine.
+  * ``allgather_mix``  — inside ``shard_map``: the *paper-faithful mechanical
+                         port*: every node all-gathers all N replicas and
+                         contracts with its own row of W.  Link bytes:
+                         O((N-1) * |x|) per node.
+  * ``ring_mix``       — inside ``shard_map``: the TPU-native backend.  For a
+                         shift-structured topology (ring/torus) only the
+                         actual graph neighbors move, via ``lax.ppermute``
+                         (collective-permute).  Link bytes: O(deg * |x|),
+                         deg = 2 for a ring — independent of N.
+
+All backends compute the same linear operator (property-tested); they differ
+only in collective footprint, which is exactly what EXPERIMENTS.md §Perf
+quantifies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .topology import Topology
+
+PyTree = Any
+MixFn = Callable[[PyTree], PyTree]
+
+AxisName = Union[str, tuple[str, ...]]
+
+__all__ = ["dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix"]
+
+
+def identity_mix(tree: PyTree) -> PyTree:
+    """No-op mixing (single node / centralized degenerate case)."""
+    return tree
+
+
+def dense_mix(w: np.ndarray) -> MixFn:
+    """Mixing for node-stacked pytrees: leaf shape (N, ...) -> (N, ...)."""
+    w = jnp.asarray(w)
+
+    def mix(tree: PyTree) -> PyTree:
+        def one(x):
+            xf = x.reshape(x.shape[0], -1)
+            out = jnp.einsum(
+                "ij,jk->ik", w.astype(jnp.float32), xf.astype(jnp.float32)
+            )
+            return out.reshape(x.shape).astype(x.dtype)
+
+        return jax.tree.map(one, tree)
+
+    return mix
+
+
+def allgather_mix(w: np.ndarray, axis_name: AxisName) -> MixFn:
+    """Paper-faithful dense gossip inside shard_map: all_gather + W-row contraction."""
+    w = jnp.asarray(w, jnp.float32)
+
+    def mix(tree: PyTree) -> MixFn:
+        idx = lax.axis_index(axis_name)
+        row = w[idx]  # (N,)
+
+        def one(x):
+            full = lax.all_gather(x, axis_name, axis=0, tiled=False)  # (N, ...)
+            out = jnp.tensordot(row, full.astype(jnp.float32), axes=(0, 0))
+            return out.astype(x.dtype)
+
+        return jax.tree.map(one, tree)
+
+    return mix
+
+
+def ring_mix(topology: Topology, axis_name: AxisName) -> MixFn:
+    """Sparse gossip via collective-permute for shift-structured topologies.
+
+    node i receives from i-s for every shift s, weighted by w[0, s]; plus the
+    self-weight.  For the Metropolis-Hastings ring this is
+    ``x/3 + left/3 + right/3`` with two collective-permutes.
+    """
+    if not topology.shifts:
+        raise ValueError(
+            f"topology {topology.name!r} is not shift-structured; use allgather_mix"
+        )
+    n = topology.n
+    shifts = topology.shifts
+    weights = topology.shift_weights()
+    w_self = topology.self_weight()
+    perms = [[(j, (j + s) % n) for j in range(n)] for s in shifts]
+
+    def mix(tree: PyTree) -> PyTree:
+        def one(x):
+            acc = w_self * x.astype(jnp.float32)
+            for perm, wgt in zip(perms, weights):
+                acc = acc + wgt * lax.ppermute(
+                    x.astype(jnp.float32), axis_name, perm=perm
+                )
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(one, tree)
+
+    return mix
+
+
+def roll_mix(topology: Topology) -> MixFn:
+    """Sparse gossip on *node-stacked* pytrees (leading axis N = nodes).
+
+    ``jnp.roll`` along a node-sharded leading axis lowers to
+    ``collective-permute`` under GSPMD — the jit-level (no shard_map)
+    TPU-native backend: only graph neighbors move, O(deg * |x|) link bytes.
+    Exactly equivalent to ``dense_mix`` for shift-structured topologies
+    (property-tested)."""
+    if topology.n == 1:
+        return identity_mix
+    if not topology.shifts:
+        raise ValueError(f"{topology.name} is not shift-structured; use dense_mix")
+    w_self = topology.self_weight()
+    shifts = topology.shifts
+    weights = topology.shift_weights()
+
+    def mix(tree: PyTree) -> PyTree:
+        def one(x):
+            acc = w_self * x.astype(jnp.float32)
+            for s, w in zip(shifts, weights):
+                # x_i <- ... + w * x_{(i+s) mod n}
+                acc = acc + w * jnp.roll(x.astype(jnp.float32), -s, axis=0)
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(one, tree)
+
+    return mix
+
+
+def make_mix_fn(
+    topology: Topology,
+    backend: str,
+    axis_name: AxisName = None,
+) -> MixFn:
+    """Factory: backend in {'dense', 'roll', 'allgather', 'ring'}."""
+    if topology.n == 1:
+        return identity_mix
+    if backend == "dense":
+        return dense_mix(topology.w)
+    if backend == "roll":
+        return roll_mix(topology)
+    if backend == "allgather":
+        assert axis_name is not None
+        return allgather_mix(topology.w, axis_name)
+    if backend == "ring":
+        assert axis_name is not None
+        return ring_mix(topology, axis_name)
+    raise ValueError(f"unknown gossip backend {backend!r}")

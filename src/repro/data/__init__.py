@@ -1,0 +1,10 @@
+"""Data pipeline: synthetic datasets, Dirichlet non-iid partitioning, LM batching."""
+from .synthetic import make_classification, make_pseudo_mnist, make_lm_tokens
+from .partition import dirichlet_partition, iid_partition, partition_to_node_data
+from .pipeline import TokenPipeline, ShardedBatcher
+
+__all__ = [
+    "make_classification", "make_pseudo_mnist", "make_lm_tokens",
+    "dirichlet_partition", "iid_partition", "partition_to_node_data",
+    "TokenPipeline", "ShardedBatcher",
+]

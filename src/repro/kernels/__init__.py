@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with CPU interpret fallback + custom VJP) and ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+"""
+from . import flash_attention, rms_norm, mvr_update, wkv_chunk
+__all__ = ["flash_attention", "rms_norm", "mvr_update", "wkv_chunk"]

@@ -1,0 +1,68 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Layout adapter (model uses (B, S, H, D); kernel uses (B, H, S, D)), CPU
+interpret-mode fallback, and a custom VJP whose backward pass recomputes
+attention with the jnp oracle (flash backward kernel is tracked as a perf
+iteration; forward is the serving/prefill hot spot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+)
+def flash_attention(
+    q: jnp.ndarray,          # (B, S, H, D)
+    k: jnp.ndarray,          # (B, S, K, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal,
+        sliding_window=sliding_window,
+        softcap=softcap,
+        interpret=not _on_tpu(),
+    )
+    return out.swapaxes(1, 2)
+
+
+def _fwd(q, k, v, causal, sliding_window, softcap):
+    return flash_attention(q, k, v, causal, sliding_window, softcap), (q, k, v)
+
+
+def _bwd(causal, sliding_window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(
+            q_, k_, v_, causal=causal, sliding_window=sliding_window, softcap=softcap
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

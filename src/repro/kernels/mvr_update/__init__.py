@@ -1,0 +1,3 @@
+from .ops import mvr_update, mvr_update_tree
+from .ref import mvr_update_ref
+__all__ = ["mvr_update", "mvr_update_tree", "mvr_update_ref"]

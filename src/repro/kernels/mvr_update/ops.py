@@ -1,0 +1,37 @@
+"""Jit'd wrapper: applies the fused MVR update over whole pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mvr_update_fwd
+from .ref import mvr_update_ref
+
+__all__ = ["mvr_update", "mvr_update_tree"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def mvr_update(g_new: jnp.ndarray, v: jnp.ndarray, g_old: jnp.ndarray, alpha) -> jnp.ndarray:
+    n = v.size
+    flat = lambda t: t.reshape(n)
+    blk = 1 << 16
+    while n % blk:
+        blk //= 2
+    if blk < 256:   # ragged small arrays: not worth a kernel launch
+        return mvr_update_ref(g_new, v, g_old, alpha)
+    out = mvr_update_fwd(
+        flat(g_new), flat(v), flat(g_old), jnp.asarray(alpha, jnp.float32),
+        block=blk, interpret=not _on_tpu(),
+    )
+    return out.reshape(v.shape)
+
+
+def mvr_update_tree(g_new, v, g_old, alpha):
+    """Pytree-wide fused MVR update (the optimizer hot loop)."""
+    return jax.tree.map(lambda gn, vv, go: mvr_update(gn, vv, go, alpha), g_new, v, g_old)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused MVR direction update (Alg. 1 line 16).
+
+v_new = g_new + (1 - alpha) * (v - g_old), computed in fp32, cast to v.dtype.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mvr_update_ref(g_new: jnp.ndarray, v: jnp.ndarray, g_old: jnp.ndarray, alpha) -> jnp.ndarray:
+    a = jnp.float32(alpha)
+    out = g_new.astype(jnp.float32) + (1.0 - a) * (
+        v.astype(jnp.float32) - g_old.astype(jnp.float32)
+    )
+    return out.astype(v.dtype)

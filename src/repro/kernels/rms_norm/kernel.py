@@ -1,0 +1,51 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Memory-bound op: one HBM read of x, one write of y (XLA sometimes splits the
+reduction and the scale into separate passes).  Rows are tiled (BLOCK_ROWS,
+d) into VMEM; the fp32 reduction and scale happen in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
+    x = x_ref[...].astype(jnp.float32)                 # (R, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    o_ref[...] = (y * w[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "plus_one", "block_rows", "interpret"))
+def rms_norm_fwd(
+    x: jnp.ndarray,          # (rows, d) — callers flatten leading dims
+    weight: jnp.ndarray,     # (d,)
+    eps: float = 1e-6,
+    plus_one: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    kernel = functools.partial(_rms_kernel, eps=eps, plus_one=plus_one)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, weight)

@@ -1,0 +1,48 @@
+"""Jit'd wrapper: arbitrary leading dims, interpret fallback off-TPU,
+custom VJP (backward via the jnp oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rms_norm_fwd
+from .ref import rms_norm_ref
+
+__all__ = ["rms_norm"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6, plus_one: bool = False):
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    # pick a block size that divides rows
+    br = 256
+    while rows % br:
+        br //= 2
+    out = rms_norm_fwd(x2, weight, eps=eps, plus_one=plus_one, block_rows=max(br, 1), interpret=not _on_tpu())
+    return out.reshape(shape)
+
+
+def _fwd(x, weight, eps, plus_one):
+    return rms_norm(x, weight, eps, plus_one), (x, weight)
+
+
+def _bwd(eps, plus_one, res, g):
+    x, weight = res
+    _, vjp = jax.vjp(lambda x_, w_: rms_norm_ref(x_, w_, eps, plus_one), x, weight)
+    return vjp(g)
+
+
+rms_norm.defvjp(_fwd, _bwd)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6, plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (y * w).astype(dt)

@@ -1,0 +1,3 @@
+from .ops import wkv_chunk
+from .ref import wkv_ref
+__all__ = ["wkv_chunk", "wkv_ref"]

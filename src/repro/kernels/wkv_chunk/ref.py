@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the chunked RWKV-6 (wkv) kernel: the exact per-token
+recurrence (the ground truth both the XLA-chunked path and the Pallas kernel
+must match)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, s0=None):
+    """Per-token recurrence.
+
+    r/k/v/logw: (B, S, H, P); logw < 0 (log decay).  Returns
+    (y (B, S, H, P) fp32, s_final (B, H, P, P) fp32).  NOTE: y excludes the
+    current-token bonus term (handled outside the kernel, it is diagonal).
+    """
+    b, s, h, p = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, p), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = (t.astype(jnp.float32) for t in inp)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, state)
+        s_new = jnp.exp(wt)[..., None] * state + kt[..., None] * vt[..., None, :]
+        return s_new, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, logw))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_final

@@ -1,0 +1,10 @@
+"""Launch layer: production meshes, distributed step builders, dry-run."""
+from .mesh import make_production_mesh, make_test_mesh, PEAK_FLOPS, HBM_BW, ICI_BW
+from .sharding import ShardingProfile, PROFILES, profile_for_arch
+from .shapes import SHAPES, InputShape, shape_applicability
+
+__all__ = [
+    "make_production_mesh", "make_test_mesh", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+    "ShardingProfile", "PROFILES", "profile_for_arch",
+    "SHAPES", "InputShape", "shape_applicability",
+]

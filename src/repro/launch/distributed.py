@@ -1,0 +1,361 @@
+"""Distributed decentralized training / serving step builders.
+
+Training (the paper's algorithm as a first-class runtime feature):
+
+  * decentralized nodes = mesh slices along the profile's node axes; every
+    DSE state tensor carries a leading node dim sharded over those axes.
+  * per-node model compute = ``jax.vmap`` over the node dim, with logical
+    sharding constraints resolving to the within-node layout (tp/fsdp/2d).
+  * one jitted ``train_step`` = one communication round: ``lax.scan`` over
+    tau-1 MVR microsteps, then the SGT+SPA gossip and the v-reset gradient.
+  * gossip backends: 'dense' (paper-faithful X@W -> all-gather) and 'roll'
+    (ring neighbors only -> collective-permute), selectable per job.
+
+Serving: standard single-model layout (batch over data axes, TP over model);
+``prefill`` builds caches, ``decode_step`` advances one token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import DSEMVR, DSESGD, DSEState, ring
+from ..core.mixing import dense_mix, identity_mix, roll_mix
+from ..models import Model, ModelConfig, axis_rules, resolve_specs
+from .sharding import ShardingProfile, cache_specs, profile_for_arch
+
+PyTree = Any
+
+__all__ = ["TrainJob", "ServeJob", "make_train_job", "make_serve_job"]
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+@dataclasses.dataclass
+class TrainJob:
+    """A compiled-able decentralized training round."""
+
+    model: Model
+    mesh: Any
+    profile: ShardingProfile
+    algorithm: Any
+    tau: int
+    n_nodes: int
+    gossip: str
+    step_fn: Callable                 # (state, batches) -> (state, metrics)
+    state_shardings: PyTree
+    batch_shardings: PyTree
+    abstract_state: PyTree
+    abstract_batch_fn: Callable       # (seq_len, global_batch) -> batch SDS tree
+
+    def lower(self, seq_len: int, global_batch: int):
+        batches = self.abstract_batch_fn(seq_len, global_batch)
+        return jax.jit(
+            self.step_fn,
+            in_shardings=(self.state_shardings, self.batch_shardings),
+            out_shardings=(self.state_shardings, None),
+        ).lower(self.abstract_state, batches)
+
+    def init_state(self, key) -> PyTree:
+        """Materialized initial state (small models / tests)."""
+        params = self.model.init(key)
+        n = self.n_nodes
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params
+        )
+        return self.algorithm.init(stacked)
+
+
+def _node_batch_struct(model: Model, tau: int, n_nodes: int, seq_len: int, global_batch: int):
+    """(tau, N, b_node, ...) ShapeDtypeStructs for one round of batches."""
+    per_node = global_batch // max(n_nodes, 1)
+    spec = model.input_specs(seq_len, per_node)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((tau, n_nodes) + s.shape, s.dtype), spec
+    )
+
+
+def make_train_job(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    algorithm: str = "dse_mvr",
+    tau: int = 4,
+    lr: float = 1e-3,
+    alpha: float = 0.05,
+    gossip: str = "roll",
+    profile: Optional[ShardingProfile] = None,
+    state_dtype=jnp.float32,
+    grad_accum: int = 1,
+) -> TrainJob:
+    profile = profile or profile_for_arch(cfg.name)
+    node_axes = profile.node_axes(mesh)
+    n_nodes = profile.n_nodes(mesh)
+    topology = ring(n_nodes)
+    model = Model(cfg)
+
+    if algorithm == "dse_mvr":
+        alg = DSEMVR(lr=lr, alpha=alpha, tau=tau, fuse_tracking_buffers=True,
+                     state_dtype=state_dtype)
+    elif algorithm == "dse_sgd":
+        alg = DSESGD(lr=lr, tau=tau, fuse_tracking_buffers=True, state_dtype=state_dtype)
+    else:
+        raise ValueError(algorithm)
+
+    if n_nodes == 1:
+        mix_fn = identity_mix
+    elif gossip == "dense":
+        mix_fn = dense_mix(topology.w)
+    elif gossip == "roll":
+        mix_fn = roll_mix(topology)
+    else:
+        raise ValueError(gossip)
+
+    rules = profile.train_rules(mesh)
+    param_rules = profile.train_param_rules(mesh)
+
+    # ---- per-node loss/grad, vmapped over the node axis ----
+    def node_loss(params, batch):
+        return model.loss(params, batch, dtype=jnp.bfloat16)
+
+    vgrad_full = jax.vmap(jax.grad(node_loss))
+    vloss = jax.vmap(node_loss)
+
+    def vgrad(p, batch):
+        """Per-node gradients, optionally microbatched (gradient accumulation
+        inside each local step: activation memory divides by grad_accum at
+        the cost of re-walking the weights per microbatch — §Perf A5)."""
+        if grad_accum <= 1:
+            return vgrad_full(p, batch)
+
+        def split(x):  # (N, b, ...) -> (accum, N, b/accum, ...)
+            n, b = x.shape[0], x.shape[1]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape(n, grad_accum, b // grad_accum, *x.shape[2:]).swapaxes(0, 1)
+
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
+        def body(acc, mb):
+            g = vgrad_full(p, mb)
+            return jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), acc, g), ()
+
+        total, _ = lax.scan(body, zero, mbs)
+        return jax.tree.map(lambda t, pp: (t / grad_accum).astype(pp.dtype), total, p)
+
+    def train_step(state: DSEState, batches):
+        with axis_rules(rules, mesh, param_rules=param_rules):
+            tau_ = alg.tau
+            if tau_ > 1:
+                micro_batches = jax.tree.map(lambda x: x[: tau_ - 1], batches)
+
+                def micro(st, mb):
+                    gf = lambda p: vgrad(p, mb)
+                    return alg.local_step(st, gf), ()
+
+                state, _ = lax.scan(micro, state, micro_batches)
+            reset_batch = jax.tree.map(lambda x: x[-1], batches)
+            loss_cell = []
+
+            def rf(p):
+                if grad_accum > 1:
+                    # metrics loss from the first microbatch (cheap); grads
+                    # accumulate over all microbatches
+                    mb0 = jax.tree.map(lambda x: x[:, : x.shape[1] // grad_accum], reset_batch)
+                    loss_cell.append(vloss(p, mb0).mean())
+                    return vgrad(p, reset_batch)
+                losses, grads = jax.vmap(jax.value_and_grad(node_loss))(p, reset_batch)
+                loss_cell.append(losses.mean())
+                return grads
+
+            state = alg.round_end(state, mix_fn, reset_grad_fn=rf)
+            metrics = {
+                "loss": loss_cell[0] if loss_cell else jnp.zeros(()),
+                "v_norm": sum(
+                    jnp.sum(v.astype(jnp.float32) ** 2) for v in jax.tree.leaves(state.v)
+                ),
+            }
+            return state, metrics
+
+    # ---- shardings ----
+    with axis_rules(rules, mesh, param_rules=param_rules):
+        node_prefix = (node_axes if node_axes else None,)
+        param_spec = resolve_specs(model.param_specs(), prefix=node_prefix)
+
+    state_spec = DSEState(
+        params=param_spec,
+        x_ref=param_spec,
+        v=param_spec,
+        y=None,
+        h_prev=None,
+        z=param_spec,
+        step=P(),
+    )
+    state_shardings = _named(mesh, state_spec)
+
+    batch_rule = rules.get("batch")
+    def batch_spec(s):
+        # (tau, N, b, ...) -> P(None, node_axes, batch_rule, None...)
+        # batch_rule drops out when the per-node batch is not divisible by the
+        # within-node axis (e.g. fsdp on the multi-pod mesh: 256/32 nodes = 8
+        # rows < 16-way model axis)
+        rule = batch_rule
+        seq_rule = None
+        if rule is not None and s.shape[2] % max(1, _axsize(mesh, rule)):
+            # batch not divisible: shard the sequence dim instead when the
+            # profile provides a 'seq' rule (fsdp multi-pod, EXPERIMENTS A6)
+            sr = rules.get("seq")
+            if sr is not None and len(s.shape) >= 4 and s.shape[3] % max(1, _axsize(mesh, sr)) == 0:
+                seq_rule = sr
+            rule = None
+        extra = (None,) * (len(s.shape) - 4) if len(s.shape) >= 4 else ()
+        dims = [None, node_axes if node_axes else None, rule]
+        if len(s.shape) >= 4:
+            dims.append(seq_rule)
+        return NamedSharding(mesh, P(*dims, *extra))
+
+    def abstract_batch_fn(seq_len, global_batch):
+        return _node_batch_struct(model, alg.tau, n_nodes, seq_len, global_batch)
+
+    probe_seq = max(512, cfg.n_vision_tokens + 64)
+    probe = abstract_batch_fn(probe_seq, max(n_nodes, 1))
+    batch_shardings = jax.tree.map(batch_spec, probe)
+
+    # ---- abstract state (dry-run, no allocation) ----
+    shapes = model.param_shapes(dtype=jnp.float32)
+    def stacked(s, dtype=None):
+        return jax.ShapeDtypeStruct((n_nodes,) + s.shape, dtype or s.dtype)
+
+    f32 = lambda s: jax.ShapeDtypeStruct((n_nodes,) + s.shape, state_dtype)
+    abstract_state = DSEState(
+        params=jax.tree.map(stacked, shapes),
+        x_ref=jax.tree.map(f32, shapes),
+        v=jax.tree.map(f32, shapes),
+        y=None,
+        h_prev=None,
+        z=jax.tree.map(f32, shapes),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+    return TrainJob(
+        model=model,
+        mesh=mesh,
+        profile=profile,
+        algorithm=alg,
+        tau=alg.tau,
+        n_nodes=n_nodes,
+        gossip=gossip,
+        step_fn=train_step,
+        state_shardings=state_shardings,
+        batch_shardings=batch_shardings,
+        abstract_state=abstract_state,
+        abstract_batch_fn=abstract_batch_fn,
+    )
+
+
+# ==========================================================================
+# serving
+# ==========================================================================
+@dataclasses.dataclass
+class ServeJob:
+    model: Model
+    mesh: Any
+    profile: ShardingProfile
+    prefill_fn: Callable
+    decode_fn: Callable
+    param_shardings: PyTree
+    abstract_params: PyTree
+
+    def lower_prefill(self, seq_len: int, batch: int):
+        spec = self.model.input_specs(seq_len, batch, for_loss=False)
+        batch_axes = self.profile.data_axes(self.mesh)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(
+                self.mesh,
+                P(batch_axes if s.shape[0] % max(1, _axsize(self.mesh, batch_axes)) == 0 else None,
+                  *([None] * (len(s.shape) - 1))),
+            ),
+            spec,
+        )
+        return jax.jit(
+            self.prefill_fn, in_shardings=(self.param_shardings, shardings)
+        ).lower(self.abstract_params, spec)
+
+    def lower_decode(self, cache_len: int, batch: int, seq_shard_cache: bool = False):
+        cache = jax.eval_shape(lambda: self.model.init_cache(batch, cache_len, jnp.bfloat16))
+        batch_axes = self.profile.data_axes(self.mesh)
+        if batch % max(1, _axsize(self.mesh, batch_axes)):
+            batch_axes = None
+        c_specs = cache_specs(
+            cache, batch_axes, mesh=self.mesh,
+            seq_shard_axes=self.profile.data_axes(self.mesh) if seq_shard_cache else None,
+        )
+        c_shard = _named(self.mesh, c_specs)
+        tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        tok_shard = NamedSharding(self.mesh, P(batch_axes, None))
+        pos_shard = NamedSharding(self.mesh, P(batch_axes))
+        return jax.jit(
+            self.decode_fn,
+            in_shardings=(self.param_shardings, c_shard, tok_shard, pos_shard),
+            out_shardings=(None, c_shard),
+        ).lower(self.abstract_params, cache, tok, pos)
+
+
+def _axsize(mesh, axes):
+    if not axes or axes is None:
+        return 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= shape[a]
+    return n
+
+
+def make_serve_job(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    profile: Optional[ShardingProfile] = None,
+    param_dtype=jnp.bfloat16,
+) -> ServeJob:
+    profile = profile or profile_for_arch(cfg.name)
+    model = Model(cfg)
+    rules = profile.serve_rules(mesh)
+    param_rules = profile.serve_param_rules(mesh)
+
+    def prefill_fn(params, batch):
+        with axis_rules(rules, mesh, param_rules=param_rules):
+            return model.prefill(params, batch, dtype=jnp.bfloat16)
+
+    def decode_fn(params, caches, tokens, position):
+        with axis_rules(rules, mesh, param_rules=param_rules):
+            return model.decode_step(params, caches, tokens, position, dtype=jnp.bfloat16)
+
+    with axis_rules(rules, mesh, param_rules=param_rules):
+        param_spec = resolve_specs(model.param_specs())
+    param_shardings = _named(mesh, param_spec)
+    abstract_params = model.param_shapes(dtype=param_dtype)
+
+    return ServeJob(
+        model=model,
+        mesh=mesh,
+        profile=profile,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        param_shardings=param_shardings,
+        abstract_params=abstract_params,
+    )

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x input-shape x
+mesh) combination on placeholder devices; record memory analysis, loop-aware
+HLO costs and the collective inventory for the roofline report.
+
+The two XLA_FLAGS lines above MUST run before any other import (jax locks the
+device count at first init); do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out benchmarks/results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp  # noqa: F401
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.distributed import make_train_job, make_serve_job
+from repro.launch.hlo_analysis import analyze_module
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, shape_applicability
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = [
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes", "generated_code_size_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *, gossip: str = "roll",
+            tau: int = 4, seq_shard_cache: bool = False, attn_impl: str = "xla",
+            state_dtype: str = "f32", rwkv_chunk: int = 0,
+            moe_dispatch: str = "auto", profile: str = None, grad_accum: int = 1,
+            verbose: bool = True):
+    """Returns a result record (or a skip record) for one combination."""
+    import dataclasses
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if attn_impl != "xla":
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if rwkv_chunk:
+        cfg = dataclasses.replace(cfg, rwkv_chunk=rwkv_chunk)
+    if moe_dispatch != "auto":
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    rec = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "gossip": gossip,
+        "tau": tau,
+        "seq_shard_cache": seq_shard_cache,
+        "attn_impl": attn_impl,
+        "state_dtype": state_dtype,
+        "rwkv_chunk": rwkv_chunk,
+    }
+    skip = shape_applicability(arch, shape_name)
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        prof = None
+        if profile:
+            from repro.launch.sharding import PROFILES
+            prof = PROFILES[profile]
+        if shape.kind == "train":
+            sdt = {"f32": jnp.float32, "bf16": jnp.bfloat16}[state_dtype]
+            job = make_train_job(cfg, mesh, tau=tau, gossip=gossip, state_dtype=sdt,
+                                 profile=prof, grad_accum=grad_accum)
+            rec["n_nodes"] = job.n_nodes
+            rec["profile"] = job.profile.name
+            lowered = job.lower(shape.seq_len, shape.global_batch)
+        elif shape.kind == "prefill":
+            job = make_serve_job(cfg, mesh, profile=prof)
+            rec["profile"] = job.profile.name
+            lowered = job.lower_prefill(shape.seq_len, shape.global_batch)
+        else:  # decode
+            job = make_serve_job(cfg, mesh, profile=prof)
+            rec["profile"] = job.profile.name
+            lowered = job.lower_decode(
+                cache_len=shape.seq_len, batch=shape.global_batch,
+                seq_shard_cache=seq_shard_cache,
+            )
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["memory_analysis"] = _mem_dict(compiled)
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "transcendentals")
+        }
+        costs = analyze_module(compiled.as_text())
+        rec["hlo_costs"] = costs.as_dict()
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        msg = rec["status"]
+        if rec["status"] == "ok":
+            glf = rec["hlo_costs"]["flops"] / 1e9
+            lnk = rec["hlo_costs"]["total_link_bytes"] / 1e6
+            msg += f"  flops/dev={glf:.1f}G  link={lnk:.1f}MB  compile={rec['compile_s']}s"
+        print(f"[dryrun] {rec['arch']:22s} {shape_name:12s} {rec['mesh']:8s} {msg}", flush=True)
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--gossip", default="roll", choices=["roll", "dense"])
+    p.add_argument("--tau", type=int, default=4)
+    p.add_argument("--seq-shard-cache", action="store_true")
+    p.add_argument("--attn-impl", default="xla", choices=["xla", "blockwise", "pallas"])
+    p.add_argument("--state-dtype", default="f32", choices=["f32", "bf16"])
+    p.add_argument("--rwkv-chunk", type=int, default=0)
+    p.add_argument("--moe-dispatch", default="auto", choices=["auto", "gather_tokens", "grouped"])
+    p.add_argument("--profile", default=None, choices=[None, "tp", "fsdp", "2d"])
+    p.add_argument("--grad-accum", type=int, default=1)
+    p.add_argument("--out", default="benchmarks/results/dryrun.json")
+    args = p.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape}|{'multi' if multi else 'single'}|{args.gossip}"
+                if args.seq_shard_cache:
+                    key += "|seqcache"
+                if args.attn_impl != "xla":
+                    key += f"|{args.attn_impl}"
+                if args.state_dtype != "f32":
+                    key += f"|{args.state_dtype}"
+                if args.rwkv_chunk:
+                    key += f"|rwkvchunk{args.rwkv_chunk}"
+                if args.moe_dispatch != "auto":
+                    key += f"|{args.moe_dispatch}"
+                if args.profile:
+                    key += f"|{args.profile}"
+                if args.grad_accum > 1:
+                    key += f"|accum{args.grad_accum}"
+                rec = run_one(
+                    arch, shape, multi, gossip=args.gossip, tau=args.tau,
+                    seq_shard_cache=args.seq_shard_cache, attn_impl=args.attn_impl,
+                    state_dtype=args.state_dtype, rwkv_chunk=args.rwkv_chunk,
+                    moe_dispatch=args.moe_dispatch, profile=args.profile,
+                    grad_accum=args.grad_accum,
+                )
+                results[key] = rec
+                with open(args.out, "w") as f:   # incremental persist
+                    json.dump(results, f, indent=1)
+                # free compilation caches between heavy combos
+                jax.clear_caches()
+
+    ok = sum(1 for r in results.values() if r["status"] == "ok")
+    skip = sum(1 for r in results.values() if r["status"] == "skip")
+    err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"[dryrun] done: {ok} ok, {skip} documented skips, {err} errors")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Sharding profiles: how each architecture maps onto the production mesh.
+
+A profile decides (a) which mesh axes form the decentralized *node* axis
+(the paper's network nodes — parameters are distinct across it between
+communication rounds), and (b) the within-node layout of params/activations.
+
+  'tp'    nodes = all data-parallel axes; within a node, feature dims
+          (ffn/heads/vocab/experts) shard over 'model', activations are
+          node-replicated (Megatron TP).  Default for <= ~10B archs.
+  'fsdp'  nodes = data axes; params shard their 'embed' dim over 'model' and
+          the per-node batch shards over 'model' (GSPMD inserts per-layer
+          weight all-gathers = ZeRO-3).
+  '2d'    for models too big for one 16-device slice (arctic-480b,
+          command-r-plus-104b): nodes = ('pod',) only; within the node the
+          full 16x16 slice is used — params shard 2-D
+          (experts/embed -> 'data', features -> 'model'), batch -> 'data'.
+          Single-pod meshes then have N=1 node (degenerate gossip, noted in
+          DESIGN.md) — the technique engages across pods, where links are
+          slowest and the paper's comm reduction matters most.
+
+Serving ('serve' rules) has no node axis: batch shards over all data axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingProfile", "PROFILES", "profile_for_arch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    name: str
+
+    def data_axes(self, mesh) -> Tuple[str, ...]:
+        return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def node_axes(self, mesh) -> Tuple[str, ...]:
+        if self.name == "2d":
+            return ("pod",) if "pod" in mesh.axis_names else ()
+        return self.data_axes(mesh)
+
+    def n_nodes(self, mesh) -> int:
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n = 1
+        for a in self.node_axes(mesh):
+            n *= shape[a]
+        return n
+
+    # -- rules tables ------------------------------------------------------
+    def train_rules(self, mesh) -> Dict[str, Any]:
+        """Activation rules for the training step (inside vmap over nodes)."""
+        if self.name == "tp":
+            return {
+                "batch": None, "ffn": "model", "heads": "model",
+                "kv_heads": "model", "vocab": "model", "experts": "model",
+                "heads_flat": "model", "ssm_in": "model", "embed": None,
+            }
+        if self.name == "fsdp":
+            # 'seq' is the fallback when the per-node batch is not divisible
+            # by the model axis (multi-pod: 256/32 nodes = 8 rows < 16): the
+            # resolver skips 'batch' and shards the sequence dim instead
+            # (attention then all-gathers K/V per layer) — EXPERIMENTS A6.
+            return {"batch": "model", "seq": "model", "embed": None,
+                    "ffn": None, "vocab": "model"}
+        if self.name == "2d":
+            return {
+                "batch": "data", "ffn": "model", "heads": "model",
+                "kv_heads": "model", "vocab": "model", "experts": "model",
+                "expert_cap": "data",   # shard expert queues over data axis
+                "expert_group": "data",  # grouped dispatch: groups = data shards
+                "heads_flat": "model", "ssm_in": "model", "embed": None,
+            }
+        raise ValueError(self.name)
+
+    def train_param_rules(self, mesh) -> Dict[str, Any]:
+        if self.name == "tp":
+            return {
+                "ffn": "model", "heads": "model", "kv_heads": "model",
+                "vocab": "model", "experts": "model", "heads_flat": "model",
+                "ssm_in": "model", "embed": None, "layers": None,
+            }
+        if self.name == "fsdp":
+            return {"embed": "model", "vocab": "model", "experts": "model", "layers": None}
+        if self.name == "2d":
+            return {
+                "experts": "data", "embed": "data",
+                "ffn": "model", "heads": "model", "kv_heads": "model",
+                "vocab": "model", "heads_flat": "model", "ssm_in": "model",
+                "layers": None,
+            }
+        raise ValueError(self.name)
+
+    # serving: one logical model, batch over all data axes, TP over model
+    def serve_rules(self, mesh) -> Dict[str, Any]:
+        batch_axes = self.data_axes(mesh)
+        return {
+            "batch": batch_axes if batch_axes else None,
+            "ffn": "model", "heads": "model", "kv_heads": "model",
+            "vocab": "model", "experts": "model", "heads_flat": "model",
+            "ssm_in": "model", "embed": None,
+        }
+
+    def serve_param_rules(self, mesh) -> Dict[str, Any]:
+        return {
+            "ffn": "model", "heads": "model", "kv_heads": "model",
+            "vocab": "model", "experts": "model", "heads_flat": "model",
+            "ssm_in": "model", "embed": None, "layers": None,
+        }
+
+
+PROFILES = {name: ShardingProfile(name) for name in ("tp", "fsdp", "2d")}
+
+# per-architecture default profile (see DESIGN.md §3)
+ARCH_PROFILE = {
+    "arctic-480b": "2d",
+    "command-r-plus-104b": "2d",
+    "qwen2-moe-a2.7b": "tp",
+    "zamba2-7b": "tp",
+    "qwen2-vl-2b": "tp",
+    "gemma2-2b": "tp",
+    "yi-9b": "fsdp",
+    "rwkv6-3b": "tp",
+    "hubert-xlarge": "tp",
+    "minitron-8b": "fsdp",
+}
+
+
+def profile_for_arch(name: str) -> ShardingProfile:
+    base = name.replace("_", "-").replace("-reduced", "")
+    base = base.replace(".", ".")  # cli ids keep dots (qwen2-moe-a2.7b)
+    return PROFILES[ARCH_PROFILE.get(base, "tp")]
+
+
+# ---------------------------------------------------------------- caches
+def cache_specs(cache: Any, batch_axes, model_axis="model", mesh=None,
+                seq_shard_axes=None) -> Any:
+    """PartitionSpec tree for a decode-cache pytree (stacked over repeats).
+
+    Leaf layouts (after the leading repeats dim):
+      k/v   (B, S, K, D)   -> (None, batch, None, model-if-divisible, None)
+      pos   (B, S)         -> (None, batch, None)
+      conv  (B, W, C)      -> (None, batch, None, model)
+      ssm   (B, H, P, N)   -> (None, batch, model, None, None)
+      wkv   (B, H, P, P)   -> (None, batch, model, None, None)
+      shift (B, 1, d)      -> (None, batch, None, None)
+    """
+    import jax
+
+    def axis_ok(size, ax):
+        if mesh is None or ax is None:
+            return True
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axes:
+            n *= shape[a]
+        return size % n == 0
+
+    def spec_for(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        shp = leaf.shape  # includes leading repeats dim
+        b_ax = batch_axes if axis_ok(shp[1], batch_axes) else None
+        # sequence-sharded KV cache (beyond-paper opt for batch=1 long-context
+        # decode: the 500k cache shards over the data axes instead of being
+        # replicated; softmax partial-reduces with an all-reduce)
+        s_ax = None
+        if seq_shard_axes and b_ax is None and axis_ok(shp[2], seq_shard_axes):
+            s_ax = seq_shard_axes
+        if name in ("k", "v"):
+            m = model_axis if axis_ok(shp[3], model_axis) else None
+            return P(None, b_ax, s_ax, m, None)
+        if name == "pos":
+            return P(None, b_ax, s_ax)
+        if name == "conv":
+            m = model_axis if axis_ok(shp[3], model_axis) else None
+            return P(None, b_ax, None, m)
+        if name in ("ssm", "wkv"):
+            m = model_axis if axis_ok(shp[2], model_axis) else None
+            return P(None, b_ax, m, None, None)
+        if name in ("shift_t", "shift_c"):
+            return P(None, b_ax, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

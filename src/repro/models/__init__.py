@@ -1,0 +1,13 @@
+"""Model zoo: unified transformer/MoE/SSM/hybrid assembly."""
+from .common import axis_rules, logical_constraint, resolve_specs, LogicalAxes, Initializer, cross_entropy_loss
+from .transformer import Model, ModelConfig
+from .attention import AttentionConfig
+from .mlp import MLPConfig, MoEConfig
+from .mamba import MambaConfig
+from .rwkv import RWKVConfig
+
+__all__ = [
+    "Model", "ModelConfig", "AttentionConfig", "MLPConfig", "MoEConfig",
+    "MambaConfig", "RWKVConfig", "axis_rules", "logical_constraint",
+    "resolve_specs", "LogicalAxes", "Initializer", "cross_entropy_loss",
+]

@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD) block: chunked selective-state-space scan + decode recurrence.
+
+Full-sequence path uses the standard Mamba-2 chunked algorithm (state-space
+duality): within a chunk the output is a masked decay-weighted attention-like
+contraction; across chunks a small recurrent state (B, H, P, N) is carried by
+``lax.scan``.  Decode advances the same recurrence one token at a time with a
+rolling conv window — O(1) per token, the sub-quadratic path used for
+``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, logical_constraint, rms_norm
+
+__all__ = ["MambaConfig", "init_mamba", "mamba_forward", "init_mamba_cache", "mamba_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int                  # typically 2 * d_model
+    state_dim: int = 64           # N
+    head_dim: int = 64            # P
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_mamba(cfg: MambaConfig, ini: Initializer):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.state_dim, cfg.n_heads
+    return {
+        # fused input projection -> [z, x, B, C, dt]
+        "w_in": ini.param((d, 2 * di + 2 * n + h), ("embed", "ssm_in")),
+        "conv_w": ini.param((cfg.conv_width, di + 2 * n), (None, "ssm_in"), scale=0.5),
+        "a_log": ini.param((h,), ("heads",), init="zeros"),
+        "d_skip": ini.param((h,), ("heads",), init="ones"),
+        "dt_bias": ini.param((h,), ("heads",), init="zeros"),
+        "norm": ini.param((di,), ("ffn",), init="ones"),
+        "w_out": ini.param((di, d), ("ffn", "embed")),
+    }
+
+
+def _project(cfg: MambaConfig, params, u):
+    """u: (B, S, d) -> z (B,S,di), xbc (B,S,di+2N), dt (B,S,H) raw."""
+    proj = jnp.einsum("bsd,de->bse", u, params["w_in"].astype(u.dtype))
+    di, n, h = cfg.d_inner, cfg.state_dim, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt_raw = proj[..., 2 * di + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _conv(cfg: MambaConfig, xbc, conv_w, conv_state=None):
+    """Causal depthwise conv over time. xbc: (B, S, C). Returns (y, new_state)."""
+    w = conv_w.astype(xbc.dtype)  # (W, C)
+    kw = cfg.conv_width
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def _split_xbc(cfg: MambaConfig, xbc):
+    di, n = cfg.d_inner, cfg.state_dim
+    x = xbc[..., :di]
+    b_in = xbc[..., di : di + n]
+    c_in = xbc[..., di + n :]
+    return x, b_in, c_in
+
+
+def _ssd_chunked(cfg: MambaConfig, a, xh, b_in, c_in, dt, h0=None):
+    """Chunked SSD scan.
+
+    a: (H,) negative per-head decay rate.
+    xh: (B, S, H, P); b_in/c_in: (B, S, N); dt: (B, S, H) post-softplus.
+    Returns y (B, S, H, P), final state (B, H, P, N) fp32.
+    """
+    bsz, s, nh, p = xh.shape
+    n = b_in.shape[-1]
+    lc = min(cfg.chunk, s)
+    assert s % lc == 0, (s, lc)
+    nchunk = s // lc
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def reshape_c(t):
+        return t.reshape(bsz, nchunk, lc, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (reshape_c(xh), reshape_c(b_in), reshape_c(c_in), reshape_c(dt))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+
+    def chunk_body(h_prev, inp):
+        xk, bk, ck, dtk = inp  # (B,lc,H,P), (B,lc,N), (B,lc,N), (B,lc,H)
+        xk32 = xk.astype(jnp.float32)
+        dtk32 = dtk.astype(jnp.float32)
+        loga = dtk32 * a  # (B, lc, H)
+        cum = jnp.cumsum(loga, axis=1)
+        total = cum[:, -1]  # (B, H)
+        # decay matrix L[t, j] = exp(cum_t - cum_j), j <= t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, lc, lc, H)
+        l_mat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bjn->btj", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        scores = cb[..., None] * l_mat * dtk32[:, None, :, :]        # (B,t,j,H)
+        y_intra = jnp.einsum("btjh,bjhp->bthp", scores, xk32)
+        y_state = (
+            jnp.einsum("btn,bhpn->bthp", ck.astype(jnp.float32), h_prev)
+            * jnp.exp(cum)[..., None]
+        )
+        w_j = jnp.exp(total[:, None, :] - cum) * dtk32               # (B, lc, H)
+        dh = jnp.einsum("bjh,bjn,bjhp->bhpn", w_j, bk.astype(jnp.float32), xk32)
+        h_new = jnp.exp(total)[..., None, None] * h_prev + dh
+        return h_new, (y_intra + y_state).astype(xh.dtype)
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, nh, p)
+    return y, h_final
+
+
+def mamba_forward(cfg: MambaConfig, params, u, return_cache: bool = False):
+    """Full-sequence forward. u: (B, S, d_model)."""
+    z, xbc, dt_raw = _project(cfg, params, u)
+    xbc, conv_state = _conv(cfg, xbc, params["conv_w"])
+    x, b_in, c_in = _split_xbc(cfg, xbc)
+    bsz, s, _ = x.shape
+    xh = x.reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, h_final = _ssd_chunked(cfg, a, xh, b_in, c_in, dt)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * params["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    y = logical_constraint(y, "batch", "seq", "ffn")
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(y.dtype))
+    out = logical_constraint(out, "batch", "seq", "embed")
+    if return_cache:
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+def init_mamba_cache(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.state_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.state_dim), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: MambaConfig, params, u, cache):
+    """One-token decode. u: (B, 1, d_model)."""
+    z, xbc, dt_raw = _project(cfg, params, u)
+    xbc, conv_state = _conv(cfg, xbc, params["conv_w"], conv_state=cache["conv"])
+    x, b_in, c_in = _split_xbc(cfg, xbc)
+    bsz = x.shape[0]
+    xh = x.reshape(bsz, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # (B, H)
+    h = cache["ssm"]
+    dh = jnp.einsum("bh,bn,bhp->bhpn", dt, b_in[:, 0].astype(jnp.float32), xh)
+    h_new = decay[..., None, None] * h + dh
+    y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), h_new)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(y.dtype))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h_new}

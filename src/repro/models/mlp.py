@@ -1,0 +1,218 @@
+"""Feed-forward blocks: dense (SwiGLU / GELU) and Mixture-of-Experts.
+
+MoE uses Switch-style capacity-based dispatch (TPU-friendly: static shapes,
+no sorting), supports shared experts (qwen2-moe) and a parallel dense
+residual branch (arctic).  Experts shard over the 'model' mesh axis
+(expert parallelism) via the 'experts' logical axis.
+
+Dispatch layouts (see EXPERIMENTS.md §Perf for the measured comparison):
+  'auto'           single global queue set; GSPMD places the scatter/gather.
+  'gather_tokens'  replicate tokens before dispatch (refuted experiment —
+                   kept selectable for reproducibility of the perf log).
+  'grouped'        hierarchical dispatch: tokens split into dispatch_groups
+                   groups aligned with the data mesh axis; every group builds
+                   per-expert queues with a *local* capacity, so the dispatch
+                   scatter and combine gather never cross shards — only
+                   expert weights move (textbook expert parallelism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, force_replicated, logical_constraint
+
+__all__ = ["MLPConfig", "init_mlp", "mlp_forward", "MoEConfig", "init_moe", "moe_forward"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"      # 'silu' (SwiGLU), 'gelu' (GeGLU), 'gelu_plain'
+    use_bias: bool = False
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name in ("gelu", "gelu_plain"):
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # nemotron/minitron squared ReLU
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(cfg: MLPConfig, ini: Initializer):
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.activation in ("silu", "gelu")
+    p = {
+        "w_up": ini.param((d, f), ("embed", "ffn")),
+        "w_down": ini.param((f, d), ("ffn", "embed")),
+    }
+    if gated:
+        p["w_gate"] = ini.param((d, f), ("embed", "ffn"))
+    if cfg.use_bias:
+        p["b_up"] = ini.param((f,), ("ffn",), init="zeros")
+        p["b_down"] = ini.param((d,), ("embed",), init="zeros")
+    return p
+
+
+def mlp_forward(cfg: MLPConfig, params, x):
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    if cfg.use_bias:
+        up = up + params["b_up"].astype(x.dtype)
+    if "w_gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = _act(cfg.activation, gate) * up
+    else:
+        h = _act(cfg.activation, up)
+    h = logical_constraint(h, "batch", "seq", "ffn")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    if cfg.use_bias:
+        y = y + params["b_down"].astype(x.dtype)
+    return logical_constraint(y, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0      # qwen2-moe: always-on shared experts
+    dense_residual: bool = False   # arctic: parallel dense FFN branch
+    dense_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    dispatch_layout: str = "auto"  # 'auto' | 'gather_tokens' | 'grouped'
+    dispatch_groups: int = 16
+
+
+def init_moe(cfg: MoEConfig, ini: Initializer):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": ini.param((d, e), ("embed", "experts")),
+        "w_gate": ini.param((e, d, f), ("experts", "embed", "ffn")),
+        "w_up": ini.param((e, d, f), ("experts", "embed", "ffn")),
+        "w_down": ini.param((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.n_shared_experts:
+        shared = MLPConfig(d, f * cfg.n_shared_experts, cfg.activation)
+        p["shared"] = init_mlp(shared, ini)
+    if cfg.dense_residual:
+        dense = MLPConfig(d, cfg.dense_d_ff or f, cfg.activation)
+        p["dense"] = init_mlp(dense, ini)
+    return p
+
+
+def _dispatch_compute_combine(cfg: MoEConfig, params, tokens, capacity: int, constrain=True):
+    """Core capacity-based MoE on a 2-D token matrix (T, d).
+
+    Returns (y (T, d), probs (T, E), onehot (T, k, E), z_sq (scalar)) —
+    probs/onehot/z_sq feed the aux losses.  Pure function of its inputs so it
+    can be vmapped over token groups for the 'grouped' layout.
+    """
+    n_tok, d = tokens.shape
+    logits = jnp.einsum(
+        "td,de->te", tokens.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(expert_idx, cfg.n_experts, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(n_tok * cfg.top_k, cfg.n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)  # exclusive prefix count
+    pos = (pos_in_expert * flat).sum(-1).reshape(n_tok, cfg.top_k)
+    keep = pos < capacity
+
+    # scatter-based dispatch: build (E, C, d) expert queues without ever
+    # materializing a (T, E, C) one-hot (65k tokens x 128 experts would be
+    # tens of GB).  Dropped tokens (pos >= capacity) scatter into a trash row.
+    e_flat = expert_idx.reshape(-1)                    # (T*k,)
+    pos_flat = jnp.where(keep, pos, capacity).reshape(-1)
+    tok_rep = jnp.repeat(jnp.arange(n_tok), cfg.top_k)
+    expert_in = jnp.zeros((cfg.n_experts, capacity + 1, d), tokens.dtype)
+    expert_in = expert_in.at[e_flat, pos_flat].add(tokens[tok_rep])
+    expert_in = expert_in[:, :capacity]
+    if constrain:
+        expert_in = logical_constraint(expert_in, "experts", "expert_cap", "embed")
+
+    # expert computation (all experts in one einsum; sharded over 'experts')
+    gate = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"].astype(expert_in.dtype))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"].astype(expert_in.dtype))
+    h = _act(cfg.activation, gate) * up
+    if constrain:
+        h = logical_constraint(h, "experts", "expert_cap", "ffn")
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(h.dtype))
+
+    # gather-based combine: token t sums gate_k * expert_out[e_k, pos_k]
+    gathered = expert_out[e_flat, jnp.minimum(pos_flat, capacity - 1)]  # (T*k, d)
+    gathered = gathered * (keep.reshape(-1, 1) * gate_vals.reshape(-1, 1)).astype(gathered.dtype)
+    y = gathered.reshape(n_tok, cfg.top_k, d).sum(axis=1)
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    return y, probs, onehot, jnp.mean(z * z)
+
+
+def moe_forward(cfg: MoEConfig, params, x, return_aux: bool = False):
+    """x: (B, S, d).  Returns (y, aux_losses)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    n_tok = b * s
+    if cfg.dispatch_layout == "gather_tokens":
+        tokens = force_replicated(tokens)
+
+    groups = cfg.dispatch_groups if cfg.dispatch_layout == "grouped" else 1
+    if n_tok % max(groups, 1):
+        groups = 1
+    if groups > 1:
+        per = n_tok // groups
+        capacity = int(max(cfg.top_k, cfg.capacity_factor * per * cfg.top_k / cfg.n_experts))
+        capacity = min(capacity, per)
+        toks_g = tokens.reshape(groups, per, d)
+        toks_g = logical_constraint(toks_g, "expert_group", None, "embed")
+        # the group dim carries the data-axis sharding; inner constraints are
+        # DISABLED: under vmap a with_sharding_constraint would pin the group
+        # dim to replicated (None dims are authoritative) and undo the outer
+        # group sharding — measured in EXPERIMENTS.md §Perf A3.3.
+        y, probs, onehot, z_sq = jax.vmap(
+            lambda t: _dispatch_compute_combine(cfg, params, t, capacity, constrain=False)
+        )(toks_g)
+        y = logical_constraint(y, "expert_group", None, "embed")
+        y = y.reshape(b, s, d)
+        probs = probs.reshape(n_tok, cfg.n_experts)
+        onehot = onehot.reshape(n_tok, cfg.top_k, cfg.n_experts)
+        z_sq = z_sq.mean()
+    else:
+        capacity = int(max(cfg.top_k, cfg.capacity_factor * n_tok * cfg.top_k / cfg.n_experts))
+        capacity = min(capacity, n_tok)
+        y, probs, onehot, z_sq = _dispatch_compute_combine(cfg, params, tokens, capacity)
+        y = y.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        shared_cfg = MLPConfig(cfg.d_model, cfg.d_ff * cfg.n_shared_experts, cfg.activation)
+        y = y + mlp_forward(shared_cfg, params["shared"], x)
+    if cfg.dense_residual:
+        dense_cfg = MLPConfig(cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.activation)
+        y = y + mlp_forward(dense_cfg, params["dense"], x)
+
+    y = logical_constraint(y, "batch", "seq", "embed")
+    if not return_aux:
+        return y, None
+
+    # aux losses: router z-loss + load-balance (Switch) — fp32
+    z_loss = cfg.router_z_loss * z_sq
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32).sum(1), axis=0)       # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    lb_loss = cfg.load_balance_loss * cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return y, z_loss + lb_loss

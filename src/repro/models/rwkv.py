@@ -1,0 +1,260 @@
+"""RWKV-6 (Finch) block: attention-free time-mix with data-dependent decay.
+
+Time-mix recurrence per head (state S: head_dim x head_dim):
+
+    w_t = exp(-exp(w0 + lora_w(x~_t)))            # data-dependent decay (Finch)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T S_{t-1} + (r_t . (u . k_t)) v_t   # u = per-channel bonus
+
+plus token-shift lerps on the inputs and a squared-ReLU channel-mix.  The
+sequence path scans chunks of the recurrence; decode is the O(1) single-step
+recurrence (the ``long_500k`` path — state size is independent of context).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, logical_constraint, rms_norm
+
+__all__ = ["RWKVConfig", "init_rwkv", "timemix_forward", "chanmix_forward",
+           "init_rwkv_cache", "timemix_decode", "chanmix_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 0        # 0 = per-token scan; >0 = chunked linear attention
+    chunk_bf16: bool = False  # bf16 chunk operands (f32 accumulation + state)
+    use_pallas: bool = False  # chunked wkv via the Pallas kernel (VMEM state)
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_model % self.head_dim == 0
+        return self.d_model // self.head_dim
+
+
+def init_rwkv(cfg: RWKVConfig, ini: Initializer):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        # time-mix
+        "mix_r": ini.param((d,), ("embed",), init="zeros"),
+        "mix_k": ini.param((d,), ("embed",), init="zeros"),
+        "mix_v": ini.param((d,), ("embed",), init="zeros"),
+        "mix_w": ini.param((d,), ("embed",), init="zeros"),
+        "mix_g": ini.param((d,), ("embed",), init="zeros"),
+        "w_r": ini.param((d, d), ("embed", "heads_flat")),
+        "w_k": ini.param((d, d), ("embed", "heads_flat")),
+        "w_v": ini.param((d, d), ("embed", "heads_flat")),
+        "w_g": ini.param((d, d), ("embed", "heads_flat")),
+        "w_o": ini.param((d, d), ("heads_flat", "embed")),
+        "decay_base": ini.param((d,), ("heads_flat",), init="zeros"),
+        "decay_lora_a": ini.param((d, cfg.decay_lora), ("embed", None)),
+        "decay_lora_b": ini.param((cfg.decay_lora, d), (None, "heads_flat"), scale=0.1),
+        "bonus_u": ini.param((d,), ("heads_flat",), init="zeros"),
+        "ln_x": ini.param((d,), ("heads_flat",), init="ones"),
+        # channel-mix
+        "cmix_k": ini.param((d,), ("embed",), init="zeros"),
+        "cmix_r": ini.param((d,), ("embed",), init="zeros"),
+        "cw_k": ini.param((d, f), ("embed", "ffn")),
+        "cw_v": ini.param((f, d), ("ffn", "embed")),
+        "cw_r": ini.param((d, d), ("embed", "embed")),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} with x_{-1} = prev (or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * jax.nn.sigmoid(mu.astype(x.dtype))
+
+
+def _timemix_inputs(cfg, params, x, shifted):
+    r_in = _lerp(x, shifted, params["mix_r"])
+    k_in = _lerp(x, shifted, params["mix_k"])
+    v_in = _lerp(x, shifted, params["mix_v"])
+    w_in = _lerp(x, shifted, params["mix_w"])
+    g_in = _lerp(x, shifted, params["mix_g"])
+    dt = x.dtype
+    r = r_in @ params["w_r"].astype(dt)
+    k = k_in @ params["w_k"].astype(dt)
+    v = v_in @ params["w_v"].astype(dt)
+    g = jax.nn.silu(g_in @ params["w_g"].astype(dt))
+    lora = jnp.tanh(w_in @ params["decay_lora_a"].astype(dt)) @ params["decay_lora_b"].astype(dt)
+    logw = -jnp.exp(
+        params["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32)
+    )  # log decay < 0
+    return r, k, v, g, logw
+
+
+def _heads(cfg, t):
+    b, s, d = t.shape
+    return t.reshape(b, s, cfg.n_heads, cfg.head_dim)
+
+
+_CLAMP = 25.0
+
+
+def _chunked_wkv(cfg: RWKVConfig, rh, kh, vh, wh, s0):
+    """Chunked RWKV-6 recurrence (the memory-roofline fix; see EXPERIMENTS.md
+    §Perf).  Instead of streaming the (B,H,P,P) state through HBM per token,
+    tokens are processed in chunks of length L: within a chunk the output is
+    a masked matmul of decay-weighted r/k (GLA-style kernelization), and the
+    state is updated once per chunk — state HBM traffic drops by L and the
+    inner products run on the MXU.
+
+    rh/kh/vh: (B,S,H,P); wh: (B,S,H,P) log-decay (<0); s0: (B,H,P,P) fp32.
+    Returns (y (B,S,H,P) fp32, s_final).
+    """
+    b, s, h, p = rh.shape
+    lc = min(cfg.chunk, s)
+    assert s % lc == 0, (s, lc)
+    n = s // lc
+    resh = lambda t: t.reshape(b, n, lc, h, p).swapaxes(0, 1)
+    rs, ks, vs, ws = resh(rh.astype(jnp.float32)), resh(kh.astype(jnp.float32)), \
+        resh(vh.astype(jnp.float32)), resh(wh.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((lc, lc), bool), k=-1)   # strict: y_t reads S_{t-1}
+
+    def body(s_prev, inp):
+        r_, k_, v_, w_ = inp                              # (B, L, H, P)
+        cum = jnp.cumsum(w_, axis=1)                      # inclusive, <= 0
+        cex = cum - w_                                    # exclusive
+        total = cum[:, -1]                                # (B, H, P)
+        r_t = r_ * jnp.exp(jnp.maximum(cex, -_CLAMP))
+        k_t = k_ * jnp.exp(jnp.minimum(-cum, _CLAMP))
+        mm = jnp.bfloat16 if cfg.chunk_bf16 else jnp.float32
+        f32 = jnp.float32
+        scores = jnp.einsum(
+            "blhp,bmhp->bhlm", r_t.astype(mm), k_t.astype(mm),
+            preferred_element_type=f32,
+        )
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = jnp.einsum(
+            "bhlm,bmhp->blhp", scores.astype(mm), v_.astype(mm),
+            preferred_element_type=f32,
+        )
+        # incoming-state contribution
+        y = y + jnp.einsum(
+            "blhp,bhpq->blhq", r_t.astype(mm), s_prev.astype(mm),
+            preferred_element_type=f32,
+        )
+        # state update: S <- diag(exp(total)) S + sum_j k_j exp(total - cum_j) v_j^T
+        k_s = k_ * jnp.exp(jnp.maximum(total[:, None] - cum, -_CLAMP))
+        s_new = jnp.exp(total)[..., None] * s_prev + jnp.einsum(
+            "blhp,blhq->bhpq", k_s.astype(mm), v_.astype(mm),
+            preferred_element_type=f32,
+        )
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(body, s0, (rs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y, s_final
+
+
+def timemix_forward(cfg: RWKVConfig, params, x, return_cache: bool = False):
+    """Full-sequence time-mix. x: (B, S, d) (already layer-normed)."""
+    b, s, d = x.shape
+    shifted = _shift(x)
+    r, k, v, g, logw = _timemix_inputs(cfg, params, x, shifted)
+    rh, kh, vh = _heads(cfg, r), _heads(cfg, k), _heads(cfg, v)
+    wh = _heads(cfg, logw.astype(jnp.float32))
+    u = params["bonus_u"].astype(jnp.float32).reshape(cfg.n_heads, cfg.head_dim)
+
+    if cfg.chunk and s % cfg.chunk == 0:
+        s0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+        if cfg.use_pallas:
+            from ..kernels.wkv_chunk import wkv_chunk
+
+            y, s_final = wkv_chunk(rh, kh, vh, wh, cfg.chunk)
+        else:
+            y, s_final = _chunked_wkv(cfg, rh, kh, vh, wh, s0)
+        # bonus (current-token) term, diagonal in t
+        bonus = jnp.einsum(
+            "bshp,bshp->bsh", rh.astype(jnp.float32), u[None, None] * kh.astype(jnp.float32)
+        )[..., None] * vh.astype(jnp.float32)
+        y = (y + bonus).reshape(b, s, d).astype(x.dtype)
+        y = rms_norm(y, params["ln_x"]) * g
+        y = logical_constraint(y, "batch", "seq", "embed")
+        out = y @ params["w_o"].astype(y.dtype)
+        if return_cache:
+            return out, {"wkv": s_final, "shift_t": x[:, -1:]}
+        return out
+
+    def step(s_prev, inp):
+        rt, kt, vt, lw = inp  # (B,H,P) x3, (B,H,P)
+        rt32, kt32, vt32 = (t.astype(jnp.float32) for t in (rt, kt, vt))
+        y = jnp.einsum("bhp,bhpq->bhq", rt32, s_prev)
+        y = y + jnp.einsum("bhp,bhp->bh", rt32, u[None] * kt32)[..., None] * vt32
+        s_new = jnp.exp(lw)[..., None] * s_prev + kt32[..., None] * vt32[..., None, :]
+        return s_new, y
+
+    s0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (rh, kh, vh, wh))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"]) * g
+    y = logical_constraint(y, "batch", "seq", "embed")
+    out = y @ params["w_o"].astype(y.dtype)
+    if return_cache:
+        return out, {"wkv": s_final, "shift_t": x[:, -1:]}
+    return out
+
+
+def chanmix_forward(cfg: RWKVConfig, params, x, return_cache: bool = False):
+    """Full-sequence channel-mix (squared ReLU). x: (B, S, d) normed."""
+    shifted = _shift(x)
+    kc = _lerp(x, shifted, params["cmix_k"]) @ params["cw_k"].astype(x.dtype)
+    kc = jnp.square(jax.nn.relu(kc))
+    kc = logical_constraint(kc, "batch", "seq", "ffn")
+    rc = jax.nn.sigmoid(_lerp(x, shifted, params["cmix_r"]) @ params["cw_r"].astype(x.dtype))
+    out = rc * (kc @ params["cw_v"].astype(kc.dtype))
+    out = logical_constraint(out, "batch", "seq", "embed")
+    if return_cache:
+        return out, {"shift_c": x[:, -1:]}
+    return out
+
+
+def init_rwkv_cache(cfg: RWKVConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "shift_t": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def timemix_decode(cfg: RWKVConfig, params, x, cache):
+    """One-token time-mix decode. x: (B, 1, d) normed."""
+    b = x.shape[0]
+    shifted = cache["shift_t"].astype(x.dtype)
+    r, k, v, g, logw = _timemix_inputs(cfg, params, x, shifted)
+    rh = _heads(cfg, r)[:, 0].astype(jnp.float32)
+    kh = _heads(cfg, k)[:, 0].astype(jnp.float32)
+    vh = _heads(cfg, v)[:, 0].astype(jnp.float32)
+    wh = _heads(cfg, logw.astype(jnp.float32))[:, 0]
+    u = params["bonus_u"].astype(jnp.float32).reshape(cfg.n_heads, cfg.head_dim)
+    s_prev = cache["wkv"]
+    y = jnp.einsum("bhp,bhpq->bhq", rh, s_prev)
+    y = y + jnp.einsum("bhp,bhp->bh", rh, u[None] * kh)[..., None] * vh
+    s_new = jnp.exp(wh)[..., None] * s_prev + kh[..., None] * vh[..., None, :]
+    y = y.reshape(b, 1, cfg.d_model).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"]) * g
+    out = y @ params["w_o"].astype(y.dtype)
+    return out, {"wkv": s_new, "shift_t": x.astype(cache["shift_t"].dtype)}
+
+
+def chanmix_decode(cfg: RWKVConfig, params, x, cache):
+    shifted = cache["shift_c"].astype(x.dtype)
+    kc = _lerp(x, shifted, params["cmix_k"]) @ params["cw_k"].astype(x.dtype)
+    kc = jnp.square(jax.nn.relu(kc))
+    rc = jax.nn.sigmoid(_lerp(x, shifted, params["cmix_r"]) @ params["cw_r"].astype(x.dtype))
+    out = rc * (kc @ params["cw_v"].astype(kc.dtype))
+    return out, {"shift_c": x.astype(cache["shift_c"].dtype)}

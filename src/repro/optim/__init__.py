@@ -1,0 +1,9 @@
+"""Inner optimizers and LR schedules (no optax dependency)."""
+from .optimizers import sgd, momentum, adam, apply_updates, global_norm, clip_by_global_norm
+from .schedules import constant, step_decay, cosine, warmup_cosine, paper_mnist_schedule, paper_cifar_schedule
+
+__all__ = [
+    "sgd", "momentum", "adam", "apply_updates", "global_norm", "clip_by_global_norm",
+    "constant", "step_decay", "cosine", "warmup_cosine",
+    "paper_mnist_schedule", "paper_cifar_schedule",
+]

@@ -1,0 +1,83 @@
+"""Minimal pytree optimizers (optax-style init/update pairs).
+
+These serve as *inner* optimizers for baselines (PD-SGDM momentum, SlowMo
+inner SGD) and as the reference centralized optimizers in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["sgd", "momentum", "adam", "apply_updates", "global_norm", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]  # (g, state, params) -> (updates, state)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree)
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        step = state if state else 0
+        g = jax.tree.map(lambda x: -_lr(lr, 0) * x, grads)
+        return g, ()
+
+    return Optimizer(init, update)
+
+
+def _lr(lr, t):
+    return lr(t) if callable(lr) else lr
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda mm, g: beta * mm + g, state["m"], grads)
+        d = jax.tree.map(lambda mm, g: beta * mm + g, m, grads) if nesterov else m
+        g = jax.tree.map(lambda x: -_lr(lr, state["t"]) * x, d)
+        return g, {"m": m, "t": state["t"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** t.astype(jnp.float32)), v)
+        upd = jax.tree.map(lambda mm, vv: -_lr(lr, t) * mm / (jnp.sqrt(vv) + eps), mh, vh)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

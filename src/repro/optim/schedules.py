@@ -1,0 +1,63 @@
+"""LR / control-parameter schedules, including the paper's exact recipes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "constant", "step_decay", "cosine", "warmup_cosine",
+    "paper_mnist_schedule", "paper_cifar_schedule", "decay_weight",
+]
+
+
+def constant(value: float):
+    return lambda t: jnp.float32(value)
+
+
+def step_decay(base: float, boundaries, factors):
+    """Piecewise: value = base * factor[i] for t >= boundaries[i]."""
+    bs = jnp.asarray(boundaries)
+    fs = jnp.asarray([1.0] + list(factors), jnp.float32)
+
+    def fn(t):
+        idx = jnp.sum(jnp.asarray(t) >= bs)
+        return base * fs[idx]
+
+    return fn
+
+
+def cosine(base: float, total_steps: int, final_frac: float = 0.0):
+    def fn(t):
+        frac = jnp.clip(jnp.asarray(t, jnp.float32) / total_steps, 0.0, 1.0)
+        return base * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+
+    return fn
+
+
+def warmup_cosine(base: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(base, max(total_steps - warmup, 1), final_frac)
+
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        return jnp.where(t < warmup, base * (t + 1) / warmup, cos(t - warmup))
+
+    return fn
+
+
+def paper_mnist_schedule(base: float, total_steps: int):
+    """Paper §6: divide LR by 2 at 0.5T and 0.75T (MNIST, T=400)."""
+    return step_decay(base, [int(0.5 * total_steps), int(0.75 * total_steps)], [0.5, 0.25])
+
+
+def paper_cifar_schedule(base: float, total_steps: int):
+    """Paper §6: 0.1x at 0, 1x at 0.1T, 0.1x at 0.75T, 0.01x at 0.9T
+    (values relative to the mid-phase base)."""
+    return step_decay(
+        base,
+        [int(0.1 * total_steps), int(0.75 * total_steps), int(0.9 * total_steps)],
+        [10.0, 1.0, 0.1],
+    )
+
+
+def decay_weight(base: float, rate: float = 0.99):
+    """Paper's alpha decay: alpha_t = base * rate^t."""
+    return lambda t: jnp.float32(base) * jnp.float32(rate) ** jnp.asarray(t, jnp.float32)

@@ -1,0 +1,51 @@
+"""Benchmark-harness smoke tests (fast modes only)."""
+import json
+import os
+
+import pytest
+
+
+def test_comm_analytic_table():
+    from benchmarks.comm import analytic_rows
+
+    rows = {r["method"]: r for r in analytic_rows(d_params=1000, n=16, tau=4)}
+    # DSE communicates once per round with 2 buffers; DSGD tau times with 1
+    assert rows["dse_mvr"]["comm_events"] == 1
+    assert rows["dsgd"]["comm_events"] == 4
+    assert rows["dse_mvr"]["bytes_per_round"] == 2 * 2 * 4000
+    assert rows["dsgd"]["bytes_per_round"] == 4 * 2 * 4000
+    # per-round bytes: DSE < DSGD at tau >= 3 (the paper's comm saving)
+    assert rows["dse_mvr"]["bytes_per_round"] < rows["dsgd"]["bytes_per_round"]
+
+
+def test_kernel_bench_rows():
+    from benchmarks import kernels_bench
+
+    rows = kernels_bench.run()
+    assert len(rows) == 3
+    for r in rows:
+        assert r["us_per_call"] > 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists("benchmarks/results/dryrun.json"),
+    reason="dry-run results not generated yet",
+)
+def test_roofline_rows_derive():
+    from benchmarks.roofline import load_rows
+
+    rows = load_rows()
+    ok = [r for r in rows if r.get("dominant") not in (None, "SKIP")]
+    assert len(ok) >= 10
+    for r in ok:
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 < r["useful_ratio"] < 10
+
+
+def test_run_method_single():
+    from benchmarks.common import run_method
+
+    r = run_method("dse_mvr", omega=10.0, tau=2, b=16, steps=10)
+    assert 0 <= r["test_acc"] <= 1
+    assert r["train_loss"] > 0

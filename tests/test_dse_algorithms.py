@@ -1,0 +1,303 @@
+"""Unit + property tests for DSE-MVR / DSE-SGD and baselines.
+
+Validates the algorithm math directly against a transparent numpy
+re-implementation of Alg. 1, plus the paper's structural invariants.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DSEMVR, DSESGD, DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD,
+    dense_mix, fully_connected, node_mean, ring, consensus_distance,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+N, D = 4, 3
+
+
+def quad_setup(seed=0, het=1.0):
+    """Per-node quadratic f_i(x) = 0.5||x - c_i||^2; F minimized at mean(c)."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(N, D)).astype(np.float32) * het
+    return jnp.asarray(c)
+
+
+def stacked_params(x0=None):
+    p = jnp.zeros((N, D), jnp.float32) if x0 is None else x0
+    return {"w": p}
+
+
+def grad_fn_factory(c, noise_key=None, sigma=0.0):
+    """grad of 0.5||x - c_i||^2 (+ optional fixed noise sample)."""
+    noise = (
+        jax.random.normal(noise_key, c.shape) * sigma if noise_key is not None else 0.0
+    )
+
+    def gf(params):
+        return {"w": params["w"] - c + noise}
+
+    return gf
+
+
+# ---------------------------------------------------------------- reference
+def numpy_dse_mvr_round(x, v, y, h_prev, x_ref, w, gamma, alpha, grads_seq, c):
+    """Transparent numpy re-implementation of one full round of Alg. 1.
+
+    grads_seq: list of tau noise-free closures is emulated by exact gradients
+    g(x) = x - c (deterministic), so MVR with the same sample twice reduces to
+    v_{t+1} = g(x_{t+1}) + (1-alpha)(v_t - g(x_t)).
+    """
+    tau = len(grads_seq)
+    for t in range(tau - 1):
+        x_new = x - gamma * v
+        g_new = x_new - c
+        g_old = x - c
+        v = g_new + (1 - alpha) * (v - g_old)
+        x = x_new
+    # communication step
+    x_half = x - gamma * v
+    h_new = x_ref - x_half
+    y_new = w @ (y + h_new - h_prev)  # rows are nodes: x_i <- sum_j w_ij x_j
+    x_new = w @ (x_ref - y_new)
+    v_new = x_new - c  # full gradient reset (deterministic quadratic)
+    return x_new, v_new, y_new, h_new, x_new
+
+
+def run_alg_rounds(alg, c, rounds, mix, key=None):
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    tau = alg.tau
+    for t in range(rounds * tau):
+        gf = grad_fn_factory(c)
+        state = alg.step(state, gf, mix, reset_grad_fn=grad_fn_factory(c), t=t)
+    return state
+
+
+# ---------------------------------------------------------------- tests
+def test_dse_mvr_matches_numpy_reference():
+    c = quad_setup()
+    gamma, alpha, tau = 0.1, 0.3, 3
+    top = ring(N)
+    alg = DSEMVR(lr=gamma, alpha=alpha, tau=tau)
+    mix = dense_mix(top.w)
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+
+    # numpy mirror. mixing: x_i <- sum_j w_ij x_j; node axis is rows =>
+    # result row i = sum_j w[i, j] x[j] = (W @ X)_i ; W symmetric so X^T W == (W X)
+    x = np.zeros((N, D), np.float32)
+    v = np.asarray(c) * -1.0 + x  # v0 = full grad at x0 = x0 - c
+    v = x - np.asarray(c)
+    y = np.zeros_like(x)
+    h_prev = np.zeros_like(x)
+    x_ref = x.copy()
+    w = np.asarray(top.w, np.float32)
+
+    for r in range(4):
+        for t in range(tau):
+            gf = grad_fn_factory(c)
+            state = alg.step(
+                state, gf, mix, reset_grad_fn=grad_fn_factory(c), t=r * tau + t
+            )
+        x, v, y, h_prev, x_ref = numpy_dse_mvr_round(
+            x, v, y, h_prev, x_ref, w, gamma, alpha, [None] * tau, np.asarray(c)
+        )
+        np.testing.assert_allclose(np.asarray(state.params["w"]), x, rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(state.v["w"]), v, rtol=2e-5, atol=2e-6)
+
+
+def test_fused_tracking_buffers_equivalent():
+    """z = y - h_prev fusion must give identical iterates (beyond-paper memory opt)."""
+    c = quad_setup(seed=3)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    a1 = DSEMVR(lr=0.1, alpha=0.2, tau=4, fuse_tracking_buffers=False)
+    a2 = DSEMVR(lr=0.1, alpha=0.2, tau=4, fuse_tracking_buffers=True)
+    s1 = run_alg_rounds(a1, c, 5, mix)
+    s2 = run_alg_rounds(a2, c, 5, mix)
+    np.testing.assert_allclose(
+        np.asarray(s1.params["w"]), np.asarray(s2.params["w"]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(s1.v["w"]), np.asarray(s2.v["w"]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_gossip_preserves_mean():
+    """Doubly-stochastic W preserves the node mean (basis of the analysis)."""
+    c = quad_setup(seed=1)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    x = {"w": jax.random.normal(jax.random.key(0), (N, D))}
+    mixed = mix(x)
+    np.testing.assert_allclose(
+        np.asarray(node_mean(x)["w"]), np.asarray(node_mean(mixed)["w"]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_dse_sgd_centralized_reduction():
+    """W = Q (fully connected) and tau = 1: DSE-SGD average iterate == centralized
+    gradient descent on F (paper eq. (12): xbar_{t+1} = xbar_t - gamma gbar_t)."""
+    c = quad_setup(seed=2)
+    top = fully_connected(N)
+    mix = dense_mix(top.w)
+    alg = DSESGD(lr=0.2, tau=1)
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    xbar = np.zeros(D, np.float32)
+    cbar = np.asarray(c).mean(axis=0)
+    for t in range(10):
+        gbar_pred = xbar - cbar
+        state = alg.step(state, grad_fn_factory(c), mix, reset_grad_fn=grad_fn_factory(c), t=t)
+        xbar = xbar - 0.2 * gbar_pred
+        np.testing.assert_allclose(
+            np.asarray(node_mean(state.params)["w"]), xbar, rtol=1e-4, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize(
+    "alg_factory",
+    [
+        lambda: DSEMVR(lr=0.15, alpha=0.3, tau=3),
+        lambda: DSESGD(lr=0.15, tau=3),
+        lambda: DLSGD(lr=0.15, tau=3),
+        lambda: DSGD(lr=0.15),
+        lambda: PDSGDM(lr=0.05, tau=3, beta=0.8),
+        lambda: SlowMoD(lr=0.15, tau=3, slow_lr=0.7, beta=0.6),
+        lambda: GTDSGD(lr=0.15),
+        lambda: GTHSGD(lr=0.15, beta=0.2),
+    ],
+)
+def test_all_algorithms_converge_on_quadratic(alg_factory):
+    """Deterministic heterogeneous quadratic: every method must reach a
+    neighborhood of the global optimum xbar* = mean(c).  (Local-SGD-style
+    methods keep an O(gamma*tau*varsigma) heterogeneity bias — the paper's
+    motivation — so the tolerance here is deliberately loose; the *exact*
+    convergence of the DSE methods is asserted separately below.)"""
+    c = quad_setup(seed=5, het=2.0)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    alg = alg_factory()
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    tau = getattr(alg, "tau", 1)
+    for t in range(60 * tau):
+        state = alg.step(state, grad_fn_factory(c), mix, reset_grad_fn=grad_fn_factory(c), t=t)
+    xbar = np.asarray(node_mean(state.params)["w"])
+    cbar = np.asarray(c).mean(axis=0)
+    np.testing.assert_allclose(xbar, cbar, rtol=0, atol=0.25)
+
+
+def _final_error(alg, c, mix, rounds=80):
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    tau = getattr(alg, "tau", 1)
+    for t in range(rounds * tau):
+        state = alg.step(state, grad_fn_factory(c), mix, reset_grad_fn=grad_fn_factory(c), t=t)
+    xbar = np.asarray(node_mean(state.params)["w"])
+    cbar = np.asarray(c).mean(axis=0)
+    return float(np.linalg.norm(xbar - cbar)), float(consensus_distance(state.params))
+
+
+def test_dse_methods_beat_dlsgd_under_heterogeneity():
+    """The paper's Theorem-2 story: with heterogeneous local objectives and
+    local updates, DLSGD stalls with a persistent consensus error (nodes
+    disagree at stationarity) while the dual-slow estimation drives the
+    consensus distance to ~0 (SPA applies the *tracked global* direction to
+    every node) and reaches a smaller optimality gap."""
+    rng = np.random.default_rng(0)
+    n, d = 8, 6
+    a = np.stack([np.diag(rng.uniform(0.2, 2.0, d)) for _ in range(n)]).astype(np.float32)
+    c = (rng.normal(size=(n, d)) * 2).astype(np.float32)
+    a_j, c_j = jnp.asarray(a), jnp.asarray(c)
+    xstar = np.linalg.solve(a.sum(0), np.einsum("nij,nj->i", a, c))
+
+    def gf(params):
+        return {"w": jnp.einsum("nij,nj->ni", a_j, params["w"] - c_j)}
+
+    mix = dense_mix(ring(n).w)
+
+    def run(alg, rounds=400):
+        state = alg.init({"w": jnp.zeros((n, d), jnp.float32)}, full_grad_fn=gf)
+        for t in range(rounds * alg.tau):
+            state = alg.step(state, gf, mix, reset_grad_fn=gf, t=t)
+        xbar = np.asarray(node_mean(state.params)["w"])
+        return np.linalg.norm(xbar - xstar), float(consensus_distance(state.params))
+
+    err_mvr, cons_mvr = run(DSEMVR(lr=0.05, alpha=0.3, tau=3))
+    err_sgd, cons_sgd = run(DSESGD(lr=0.05, tau=3))
+    err_dl, cons_dl = run(DLSGD(lr=0.05, tau=3))
+    assert cons_mvr < 1e-8 and cons_sgd < 1e-8, (cons_mvr, cons_sgd)
+    assert cons_dl > 1.0, cons_dl
+    assert err_mvr < 0.7 * err_dl and err_sgd < 0.7 * err_dl
+
+
+def test_mvr_reduces_variance_of_direction():
+    """With stochastic gradients, the MVR direction v should have lower variance
+    around the true gradient than the raw stochastic gradient (paper's motivation)."""
+    c = quad_setup(seed=7)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    sigma = 1.0
+    alpha = 0.05
+    alg = DSEMVR(lr=0.05, alpha=alpha, tau=100000)  # no comm: isolate MVR
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    key = jax.random.key(0)
+    err_v, err_g = [], []
+    for t in range(300):
+        key, k = jax.random.split(key)
+        gf = grad_fn_factory(c, noise_key=k, sigma=sigma)
+        state = alg.local_step(state, gf)
+        true_g = np.asarray(state.params["w"] - c)
+        err_v.append(np.mean((np.asarray(state.v["w"]) - true_g) ** 2))
+        key, k2 = jax.random.split(key)
+        raw = grad_fn_factory(c, noise_key=k2, sigma=sigma)(state.params)["w"]
+        err_g.append(np.mean((np.asarray(raw) - true_g) ** 2))
+    # after burn-in, MVR error should be well below raw stochastic gradient error
+    assert np.mean(err_v[100:]) < 0.5 * np.mean(err_g[100:])
+
+
+def test_dse_sgd_is_dse_mvr_alpha_one():
+    """Paper: DSE-SGD == DSE-MVR with alpha=1 + no full-grad reset (same batch)."""
+    c = quad_setup(seed=11)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    tau = 3
+    mvr = DSEMVR(lr=0.1, alpha=1.0, tau=tau)
+    sgd = DSESGD(lr=0.1, tau=tau)
+    s1 = mvr.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    s2 = sgd.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    for t in range(9):
+        gf = grad_fn_factory(c)
+        # deterministic gradients => same-batch requirement is trivially met;
+        # use minibatch gradient as the reset for both so they coincide.
+        s1 = s1_next = mvr.step(s1, gf, mix, reset_grad_fn=gf, t=t)
+        s2 = sgd.step(s2, gf, mix, reset_grad_fn=gf, t=t)
+        np.testing.assert_allclose(
+            np.asarray(s1.params["w"]), np.asarray(s2.params["w"]), rtol=1e-5, atol=1e-6
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10000), st.integers(1, 5))
+def test_property_mean_dynamics(seed, tau):
+    """Property (paper eq. 42): for DSE-MVR the node-average follows
+    xbar_{t+1} = xbar_t - gamma vbar_t for EVERY t (incl. communication steps,
+    because W is doubly stochastic and ybar_{t+1} = hbar_{t+1})."""
+    c = quad_setup(seed=seed)
+    top = ring(N)
+    mix = dense_mix(top.w)
+    gamma = 0.07
+    alg = DSEMVR(lr=gamma, alpha=0.25, tau=tau)
+    state = alg.init(stacked_params(), full_grad_fn=grad_fn_factory(c))
+    for t in range(2 * tau + 1):
+        xbar = np.asarray(node_mean(state.params)["w"])
+        vbar = np.asarray(node_mean(state.v)["w"])
+        state = alg.step(state, grad_fn_factory(c), mix, reset_grad_fn=grad_fn_factory(c), t=t)
+        np.testing.assert_allclose(
+            np.asarray(node_mean(state.params)["w"]),
+            xbar - gamma * vbar,
+            rtol=1e-4,
+            atol=1e-5,
+        )

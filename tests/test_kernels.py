@@ -1,0 +1,210 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis, vs jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in Python,
+so the block/mask/online-softmax logic is what is being validated).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.mvr_update import mvr_update, mvr_update_ref
+from repro.kernels.rms_norm import rms_norm, rms_norm_ref
+
+
+def _qkv(key, b, s, h, kh, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d)).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kh,d,window,softcap,causal",
+    [
+        (1, 128, 2, 2, 64, None, None, True),     # MHA causal
+        (2, 256, 4, 2, 64, None, None, True),     # GQA
+        (1, 256, 4, 1, 128, None, None, True),    # MQA, d=128
+        (1, 256, 2, 2, 64, 128, None, True),      # sliding window
+        (1, 256, 2, 2, 64, 64, 50.0, True),       # window + softcap (gemma2 local)
+        (1, 128, 2, 2, 64, None, 30.0, True),     # softcap
+        (1, 128, 2, 2, 64, None, None, False),    # bidirectional (encoder)
+        (1, 384, 2, 2, 256, None, None, True),    # gemma2 head_dim 256
+    ],
+)
+def test_flash_attention_sweep(b, s, h, kh, d, window, softcap, causal, dtype):
+    q, k, v = _qkv(jax.random.key(42), b, s, h, kh, d, dtype)
+    out = flash_attention(q, k, v, causal, window, softcap)
+    ref = flash_attention_ref(q, k, v, causal=causal, sliding_window=window, softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+def test_flash_attention_nonsquare_blocks():
+    """Uneven q/k block sizes still cover the sequence."""
+    q, k, v = _qkv(jax.random.key(0), 1, 256, 2, 2, 64, jnp.float32)
+    out = flash_attention_fwd(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=True, block_q=64, block_k=128, interpret=True,
+    ).swapaxes(1, 2)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    """custom_vjp backward (oracle recompute) must match jnp autodiff."""
+    q, k, v = _qkv(jax.random.key(1), 1, 128, 2, 2, 64, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, True, None, None) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (flash_attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([128, 256]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([64, 128]),
+    window=st.sampled_from([None, 64, 128]),
+)
+def test_flash_attention_property(s, h, d, window):
+    q, k, v = _qkv(jax.random.key(s * h * d), 1, s, h, h, d, jnp.float32)
+    out = flash_attention(q, k, v, True, window, None)
+    ref = flash_attention_ref(q, k, v, causal=True, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- rms norm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (2, 64, 256), (1, 3, 5, 512), (256, 1024)])
+@pytest.mark.parametrize("plus_one", [False, True])
+def test_rms_norm_sweep(shape, dtype, plus_one):
+    x = jax.random.normal(jax.random.key(0), shape).astype(dtype)
+    w = jax.random.normal(jax.random.key(1), shape[-1:])
+    out = rms_norm(x, w, 1e-6, plus_one)
+    ref = rms_norm_ref(x, w, 1e-6, plus_one)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+def test_rms_norm_grad():
+    x = jax.random.normal(jax.random.key(2), (16, 128))
+    w = jax.random.normal(jax.random.key(3), (128,))
+    g1 = jax.grad(lambda x_: rms_norm(x_, w).sum())(x)
+    g2 = jax.grad(lambda x_: rms_norm_ref(x_, w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- mvr update
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1024,), (512, 128), (3, 7, 11)])
+@pytest.mark.parametrize("alpha", [0.0, 0.05, 1.0])
+def test_mvr_update_sweep(shape, dtype, alpha):
+    ks = jax.random.split(jax.random.key(0), 3)
+    gn = jax.random.normal(ks[0], shape).astype(dtype)
+    v = jax.random.normal(ks[1], shape).astype(dtype)
+    go = jax.random.normal(ks[2], shape).astype(dtype)
+    out = mvr_update(gn, v, go, alpha)
+    ref = mvr_update_ref(gn, v, go, alpha)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 4096), alpha=st.floats(0.0, 1.0))
+def test_mvr_update_property(n, alpha):
+    """Any size works (kernel for lane-aligned sizes, oracle fallback else)."""
+    ks = jax.random.split(jax.random.key(n), 3)
+    gn, v, go = (jax.random.normal(k, (n,)) for k in ks)
+    out = mvr_update(gn, v, go, alpha)
+    ref = mvr_update_ref(gn, v, go, alpha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_mvr_alpha_one_is_sgd():
+    """alpha=1 collapses MVR to the plain gradient (DSE-SGD reduction)."""
+    ks = jax.random.split(jax.random.key(5), 3)
+    gn, v, go = (jax.random.normal(k, (512,)) for k in ks)
+    np.testing.assert_allclose(np.asarray(mvr_update(gn, v, go, 1.0)), np.asarray(gn), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- wkv chunk
+from repro.kernels.wkv_chunk import wkv_chunk, wkv_ref
+
+
+def _wkv_inputs(key, b, s, h, p, decay_mag=1.0, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    r = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, s, h, p)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, s, h, p)) * 0.5).astype(dtype)
+    # log-decay magnitude ~ decay_mag (trained RWKV channels are mostly mild,
+    # |logw| << 1; the fp32 clamp bounds chunk_len * |logw| <~ 25)
+    logw = -decay_mag * jnp.exp(jax.random.normal(ks[3], (b, s, h, p)) * 0.3)
+    return r, k, v, logw.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,chunk",
+    [
+        (1, 32, 1, 16, 16),
+        (2, 64, 2, 32, 16),
+        (1, 64, 4, 64, 16),     # production head size
+        (1, 64, 1, 32, 32),     # longer chunk, mild decay
+    ],
+)
+def test_wkv_chunk_sweep(b, s, h, p, chunk, dtype):
+    # chunk > 16 is only numerically safe for mild decay (clamp envelope:
+    # chunk * |logw| < ~25) — measured in EXPERIMENTS A1
+    r, k, v, logw = _wkv_inputs(jax.random.key(7), b, s, h, p,
+                                decay_mag=0.3 if chunk > 16 else 1.0, dtype=dtype)
+    y1, s1 = wkv_chunk(r, k, v, logw, chunk)
+    y2, s2 = wkv_ref(r, k, v, logw)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2, np.float32), **tol)
+
+
+def test_wkv_chunk_grad_matches_oracle():
+    r, k, v, logw = _wkv_inputs(jax.random.key(9), 1, 32, 1, 16)
+
+    def f_kernel(r, k, v, w):
+        y, s = wkv_chunk(r, k, v, w, 16)
+        return (y ** 2).sum() + (s ** 2).sum()
+
+    def f_ref(r, k, v, w):
+        y, s = wkv_ref(r, k, v, w)
+        return (y ** 2).sum() + (s ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(r, k, v, logw)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2, 3))(r, k, v, logw)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.sampled_from([32, 64]), p=st.sampled_from([16, 32]))
+def test_wkv_chunk_property(s, p):
+    r, k, v, logw = _wkv_inputs(jax.random.key(s * p), 1, s, 2, p)
+    y1, s1 = wkv_chunk(r, k, v, logw, 16)
+    y2, s2 = wkv_ref(r, k, v, logw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-5)

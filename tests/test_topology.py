@@ -1,0 +1,77 @@
+"""Topology / mixing-matrix tests (paper Assumption 5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 16, 20, 40])
+def test_ring_is_doubly_stochastic(n):
+    t = topo.ring(n)
+    topo.check_mixing_matrix(t.w)
+    assert t.n == n
+
+
+def test_ring_metropolis_hastings_weights():
+    # paper: ring with MH weights => w_ij = 1/(deg+1) = 1/3
+    t = topo.ring(8)
+    assert np.isclose(t.w[0, 1], 1 / 3)
+    assert np.isclose(t.w[0, 0], 1 / 3)
+    assert np.isclose(t.w[0, 7], 1 / 3)
+    assert t.w[0, 2] == 0.0
+
+
+@pytest.mark.parametrize("n", [3, 8, 16])
+def test_lambda_in_unit_interval(n):
+    t = topo.ring(n)
+    assert 0.0 < t.lam < 1.0
+
+
+def test_fully_connected_lambda_zero():
+    t = topo.fully_connected(6)
+    assert t.lam < 1e-9
+    assert np.allclose(t.w, np.full((6, 6), 1 / 6))
+
+
+def test_torus():
+    t = topo.torus(4, 4)
+    topo.check_mixing_matrix(t.w)
+    assert t.n == 16
+    # row-wraparound edges are not flat cyclic shifts, so the torus is not
+    # shift-structured in flattened node order (uses the allgather backend)
+    assert t.shifts == ()
+    # torus mixes faster than ring on same node count
+    assert t.lam < topo.ring(16).lam
+
+
+def test_star():
+    t = topo.star(8)
+    topo.check_mixing_matrix(t.w)
+    assert t.shifts == ()
+
+
+def test_shift_weights_match_w():
+    t = topo.ring(10)
+    for s, w in zip(t.shifts, t.shift_weights()):
+        assert np.isclose(t.w[0, s], w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 24))
+def test_ring_consensus_contraction(n):
+    """Assumption 5 eq (7): ||XW - Xbar||_F <= lambda ||X - Xbar||_F."""
+    t = topo.ring(n)
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(5, n))
+    xbar = x.mean(axis=1, keepdims=True)
+    lhs = np.linalg.norm(x @ t.w - xbar)
+    rhs = t.lam * np.linalg.norm(x - xbar)
+    assert lhs <= rhs + 1e-9
+
+
+def test_bad_matrices_rejected():
+    with pytest.raises(ValueError):
+        topo.check_mixing_matrix(np.array([[0.5, 0.5], [0.9, 0.1]]))
+    with pytest.raises(ValueError):
+        topo.metropolis_hastings(np.array([[1, 0], [0, 1]], dtype=bool))
