@@ -10,22 +10,23 @@ import os
 
 
 def analytic_rows(d_params: int = 1_000_000, n: int = 16, tau: int = 4, dtype_bytes: int = 4):
-    """Bytes each node sends per ROUND (tau iterations).
+    """Bytes each node sends per ROUND (tau iterations), derived from each
+    algorithm's declarative CommSpec: comm events per round times gossiped
+    buffers times ring degree (each node sends to 2 neighbors)."""
+    from repro.core import ALGORITHMS
 
-    ring gossip: each node sends its buffer to 2 neighbors; DSE sends two
-    buffers (slow-tracking y and parameters x); GT-DSGD communicates x and y
-    every step; DSGD communicates x every step."""
     pb = d_params * dtype_bytes
     deg = 2
-    return [
-        {"method": "dsgd", "bytes_per_round": tau * deg * pb, "comm_events": tau},
-        {"method": "gt_dsgd", "bytes_per_round": tau * deg * 2 * pb, "comm_events": tau},
-        {"method": "dlsgd", "bytes_per_round": deg * pb, "comm_events": 1},
-        {"method": "pd_sgdm", "bytes_per_round": deg * pb, "comm_events": 1},
-        {"method": "slowmo_d", "bytes_per_round": deg * pb, "comm_events": 1},
-        {"method": "dse_sgd", "bytes_per_round": deg * 2 * pb, "comm_events": 1},
-        {"method": "dse_mvr", "bytes_per_round": deg * 2 * pb, "comm_events": 1},
-    ]
+    rows = []
+    for method, cls in ALGORITHMS.items():
+        spec = cls.comm
+        events = spec.comm_events_per_round(tau)
+        rows.append({
+            "method": method,
+            "bytes_per_round": events * deg * len(spec.buffers) * pb,
+            "comm_events": events,
+        })
+    return rows
 
 
 def run():

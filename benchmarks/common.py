@@ -65,6 +65,9 @@ def make_paper_problem(
 
 
 def make_algorithm(name: str, lr: float, tau: int, total_steps: int, alpha: float = 0.05):
+    """Paper-tuned hyperparameters per method, on top of the core registry."""
+    from repro.core import make_algorithm as registry_make
+
     sched = paper_mnist_schedule(lr, total_steps)
     if name == "dse_mvr":
         return DSEMVR(lr=sched, alpha=decay_weight(alpha, 0.99), tau=tau)
@@ -76,6 +79,8 @@ def make_algorithm(name: str, lr: float, tau: int, total_steps: int, alpha: floa
         return PDSGDM(lr=paper_mnist_schedule(lr * 0.3, total_steps), tau=tau, beta=0.9)
     if name == "slowmo_d":
         return SlowMoD(lr=sched, tau=tau, slow_lr=0.7, beta=0.6)
+    if name in ALGORITHMS:  # every-step baselines: dsgd, gt_dsgd, gt_hsgd
+        return registry_make(name, lr=paper_mnist_schedule(lr * 0.5, total_steps), tau=tau)
     raise ValueError(name)
 
 

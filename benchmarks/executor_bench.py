@@ -1,0 +1,118 @@
+"""Per-round wall-clock: legacy python-dispatch loop vs the scanned executor.
+
+The pre-refactor Simulator stepped through a Python loop — one jitted call
+per iteration plus a host round-trip for the ``(t+1) % tau`` dispatch — while
+the redesigned engine scans whole communication rounds on-device.  This
+benchmark times both drivers running the SAME algorithm (identical iterates,
+equivalence-tested in tests/test_unified_api.py) on the synthetic logistic-
+regression workload and writes a ``BENCH_*.json``-compatible record to
+``benchmarks/results/BENCH_executor.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Simulator, dense_mix, make_algorithm, ring
+from repro.data import iid_partition, make_classification, partition_to_node_data
+
+N_NODES = 8
+DIM, CLASSES = 32, 4
+
+
+def _problem(seed=0):
+    x, y = make_classification(2000, DIM, CLASSES, seed=seed, class_sep=1.5)
+    parts = iid_partition(len(x), N_NODES, seed=seed)
+    return partition_to_node_data(x, y, parts)
+
+
+def _loss(params, batch):
+    xb, yb = batch
+    logits = xb @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, yb[..., None], axis=-1).mean()
+
+
+def _params():
+    return {"w": jnp.zeros((DIM, CLASSES), jnp.float32), "b": jnp.zeros(CLASSES)}
+
+
+def _legacy_loop(alg, data, top, num_steps, batch_size, key):
+    """Pre-refactor driver: per-step jitted calls + python tau dispatch."""
+    mix = dense_mix(top.w)
+    vgrad = jax.vmap(jax.grad(_loss))
+    full = (jnp.asarray(data.x), jnp.asarray(data.y))
+    stacked = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (top.n,) + p.shape), _params()
+    )
+    state = alg.init(stacked, lambda p: vgrad(p, full))
+
+    local = jax.jit(lambda s, b: alg.local_update(s, lambda p: vgrad(p, b)))
+    rnd = jax.jit(
+        lambda s, b, fx, fy: alg.comm_update(
+            s, mix, lambda p: vgrad(p, b), lambda p: vgrad(p, (fx, fy))
+        )
+    )
+    tau = alg.tau
+    for t in range(num_steps):
+        key, sk = jax.random.split(key)
+        batch = data.sample(sk, batch_size)
+        if (t + 1) % tau == 0:  # the host-sync the redesign removes
+            state = rnd(state, batch, *full)
+        else:
+            state = local(state, batch)
+    jax.block_until_ready(state.params)
+    return state
+
+
+def run(steps: int = 512, tau: int = 4, batch_size: int = 32):
+    data = _problem()
+    top = ring(N_NODES)
+    alg = make_algorithm("dse_mvr", lr=0.2, alpha=0.1, tau=tau)
+    rows = []
+
+    # warmup runs use the SAME step counts as the timed runs so both drivers
+    # are measured post-compilation (scan length is a static argument)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        _legacy_loop(alg, data, top, steps, batch_size, jax.random.key(0))  # compile
+        t0 = time.perf_counter()
+        _legacy_loop(alg, data, top, steps, batch_size, jax.random.key(1))
+        legacy_s = time.perf_counter() - t0
+
+    sim = Simulator(alg, top, _loss, data, batch_size=batch_size)
+    out = sim.run(_params(), jax.random.key(0), num_steps=steps)  # compile
+    jax.block_until_ready(out["state"].params)
+    t0 = time.perf_counter()
+    out = sim.run(_params(), jax.random.key(1), num_steps=steps)
+    jax.block_until_ready(out["state"].params)
+    scanned_s = time.perf_counter() - t0
+
+    n_rounds = steps // tau
+    for name, wall in (("python_dispatch_loop", legacy_s), ("scanned_round_executor", scanned_s)):
+        rows.append({
+            "bench": "executor",
+            "name": f"executor/{name}",
+            "method": "dse_mvr",
+            "tau": tau,
+            "steps": steps,
+            "us_per_call": wall / max(n_rounds, 1) * 1e6,   # per round
+            "us_per_step": wall / steps * 1e6,
+            "wall_s": round(wall, 4),
+            "speedup_vs_python_dispatch": round(legacy_s / wall, 2),
+        })
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_executor.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], f"{r['us_per_call']:.0f} us/round", f"x{r['speedup_vs_python_dispatch']}")

@@ -30,7 +30,7 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
     args = p.parse_args(argv)
     only = set(args.only.split(","))
@@ -62,6 +62,11 @@ def main(argv=None):
     if "roofline" in only:
         from . import roofline
         rows = roofline.run()
+        all_rows += rows
+        _csv(rows)
+    if "executor" in only:
+        from . import executor_bench
+        rows = executor_bench.run(steps=128 if args.fast else 512)
         all_rows += rows
         _csv(rows)
 

@@ -8,7 +8,7 @@ plain decentralized local SGD, and drives the consensus distance to ~0.
 """
 import jax
 
-from repro.core import DSEMVR, DSESGD, DLSGD, Simulator, ring
+from repro.core import Simulator, make_algorithm, ring
 from repro.data import dirichlet_partition, make_pseudo_mnist, partition_to_node_data
 
 N_NODES, TAU, BATCH, STEPS = 8, 4, 32, 200
@@ -52,10 +52,14 @@ def main():
         pred = (h @ params["w2"] + params["b2"]).argmax(-1)
         return {"test_acc": float((pred == jnp.asarray(yte)).mean())}
 
+    # one registry, one execution path: local-update methods and every-step
+    # gossip baselines run through the same scanned round executor
     algs = {
-        "DLSGD   ": DLSGD(lr=0.3, tau=TAU),
-        "DSE-SGD ": DSESGD(lr=0.3, tau=TAU),
-        "DSE-MVR ": DSEMVR(lr=0.3, alpha=0.05, tau=TAU),
+        "DSGD    ": make_algorithm("dsgd", lr=0.1),
+        "GT-DSGD ": make_algorithm("gt_dsgd", lr=0.1),
+        "DLSGD   ": make_algorithm("dlsgd", lr=0.3, tau=TAU),
+        "DSE-SGD ": make_algorithm("dse_sgd", lr=0.3, tau=TAU),
+        "DSE-MVR ": make_algorithm("dse_mvr", lr=0.3, alpha=0.05, tau=TAU),
     }
     print(f"{'method':9s} {'train_loss':>10s} {'test_acc':>9s} {'consensus':>10s}")
     for name, alg in algs.items():

@@ -1,5 +1,32 @@
-"""Paper core: DSE-MVR / DSE-SGD, baselines, topologies, gossip, simulation."""
+"""Paper core: DSE-MVR / DSE-SGD, baselines, topologies, gossip, simulation.
+
+The algorithm contract (``repro.core.algorithm``)
+-------------------------------------------------
+
+Every decentralized method implements :class:`DecentralizedAlgorithm` — two
+pure, jit/scan-compatible transitions plus a declarative schedule:
+
+    init(params, full_grad_fn=None)                    -> state
+    local_update(state, grad_fn)                       -> state   # no comm
+    comm_update(state, mix_fn, grad_fn, reset_grad_fn) -> state   # gossip
+    comm : CommSpec   # cadence ("every_step" | "every_tau"), gossiped
+                      # buffers, and the v-reset gradient kind
+
+``ALGORITHMS`` is the single registry consumed by the simulator
+(``Simulator``), the sharded runtime (``repro.launch.distributed.
+make_train_job``), the train CLI, the benchmarks and the examples; all of
+them drive any registered algorithm through the one generic round executor
+:func:`make_round_step`.  Construct instances uniformly with
+:func:`make_algorithm`, which filters a common hyperparameter vocabulary
+(lr, tau, alpha, beta, ...) down to each class's dataclass fields.
+
+The legacy ``local_step`` / ``round_end`` / python-dispatch ``step`` protocol
+remains available as thin deprecation shims on every class.
+"""
+import dataclasses as _dataclasses
+
 from .topology import Topology, ring, torus, fully_connected, star, metropolis_hastings, spectral_gap, check_mixing_matrix
+from .algorithm import CommSpec, DecentralizedAlgorithm, make_round_step
 from .dse import DSEMVR, DSESGD, DSEState
 from .baselines import DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD
 from .mixing import dense_mix, allgather_mix, ring_mix, make_mix_fn, identity_mix
@@ -16,9 +43,29 @@ ALGORITHMS = {
     "slowmo_d": SlowMoD,
 }
 
+
+def make_algorithm(name: str, **hyperparams) -> DecentralizedAlgorithm:
+    """Instantiate a registered algorithm from a shared hyperparameter set.
+
+    Keys that are not fields of the target class are silently dropped, so one
+    call site can serve the whole registry (e.g. ``alpha`` only reaches
+    DSE-MVR, ``fuse_tracking_buffers`` only the DSE family).  ``tau`` is
+    dropped for every-step methods, whose cadence fixes the round length to 1.
+    """
+    try:
+        cls = ALGORITHMS[name]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {name!r}; known: {sorted(ALGORITHMS)}")
+    if cls.comm.cadence == "every_step":
+        hyperparams.pop("tau", None)
+    fields = {f.name for f in _dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in hyperparams.items() if k in fields})
+
+
 __all__ = [
     "Topology", "ring", "torus", "fully_connected", "star",
     "metropolis_hastings", "spectral_gap", "check_mixing_matrix",
+    "CommSpec", "DecentralizedAlgorithm", "make_round_step", "make_algorithm",
     "DSEMVR", "DSESGD", "DSEState",
     "DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD",
     "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",

@@ -1,0 +1,180 @@
+"""Unified algorithm interface: ``DecentralizedAlgorithm`` + ``CommSpec``.
+
+Every decentralized method in this repo factors into two pure, jit/scan
+compatible transitions (the seam identified by the gradient-tracking
+literature: *local update* + *what/when to communicate*):
+
+    init(params, full_grad_fn=None)                    -> state
+    local_update(state, grad_fn)                       -> state   # no comm
+    comm_update(state, mix_fn, grad_fn, reset_grad_fn) -> state   # gossip step
+
+plus a declarative :class:`CommSpec` (class attribute ``comm``) naming which
+state buffers are communicated and on what cadence.  The spec — not
+``isinstance`` checks or a Python-level ``step()`` dispatch — is what the
+execution engines consume:
+
+  * ``repro.core.simulate.Simulator`` drives any algorithm through one
+    generic ``lax.scan``-able round executor (:func:`make_round_step`);
+  * ``repro.launch.distributed.make_train_job`` builds a sharded train step
+    for any registered algorithm from the same executor.
+
+The legacy protocol (``local_step`` / ``round_end`` / python-dispatch
+``step(..., t=int)``) is kept as thin deprecation shims on each class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax import lax
+
+PyTree = Any
+GradFn = Callable[[PyTree], PyTree]       # params -> grads (batch closed over)
+MixFn = Callable[[PyTree], PyTree]        # gossip: tree -> mixed tree
+
+__all__ = ["CommSpec", "DecentralizedAlgorithm", "make_round_step"]
+
+CADENCES = ("every_step", "every_tau")
+RESETS = ("none", "minibatch", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Declarative communication schedule of a decentralized algorithm.
+
+    cadence:  "every_step" — the method gossips at every iteration (its
+              ``local_update`` is undefined; the executor calls ``comm_update``
+              each step).  "every_tau" — tau-1 local updates, then one
+              ``comm_update`` closes the round.
+    buffers:  names of the param-sized messages gossiped per communication
+              event (bandwidth accounting; e.g. DSE sends the SGT tracking
+              buffer *and* the parameters => two messages per round).
+    reset:    which gradient the executor should hand to ``comm_update`` as
+              ``reset_grad_fn``: "full" (full/large-batch local gradient —
+              the DSE-MVR v-reset), "minibatch" (a fresh minibatch gradient —
+              DSE-SGD), or "none".
+    """
+
+    cadence: str = "every_tau"
+    buffers: Tuple[str, ...] = ("params",)
+    reset: str = "none"
+
+    def __post_init__(self):
+        if self.cadence not in CADENCES:
+            raise ValueError(f"cadence {self.cadence!r} not in {CADENCES}")
+        if self.reset not in RESETS:
+            raise ValueError(f"reset {self.reset!r} not in {RESETS}")
+
+    def round_len(self, tau: int) -> int:
+        """Steps per communication round (1 for every-step methods)."""
+        return 1 if self.cadence == "every_step" else max(int(tau), 1)
+
+    def comm_events_per_round(self, tau: int) -> int:
+        """Communication events in a window of ``tau`` iterations."""
+        return tau if self.cadence == "every_step" else 1
+
+
+_warned: set = set()
+
+
+class DecentralizedAlgorithm:
+    """Base class / protocol for all decentralized optimization methods.
+
+    Subclasses are frozen dataclasses holding hyperparameters and implement
+    ``init`` / ``local_update`` / ``comm_update`` as *pure* functions of the
+    state (scan-compatible: no host syncs, no data-dependent Python control
+    flow).  ``comm`` declares the communication schedule.
+    """
+
+    comm: CommSpec = CommSpec()
+
+    # -- to implement ------------------------------------------------------
+    def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> Any:
+        raise NotImplementedError
+
+    def local_update(self, state: Any, grad_fn: GradFn) -> Any:
+        raise NotImplementedError(
+            f"{type(self).__name__} communicates every step and has no "
+            "communication-free local update; drive it via comm_update()"
+        )
+
+    def comm_update(
+        self,
+        state: Any,
+        mix_fn: MixFn,
+        grad_fn: Optional[GradFn] = None,
+        reset_grad_fn: Optional[GradFn] = None,
+    ) -> Any:
+        raise NotImplementedError
+
+    # -- legacy protocol (deprecation shims) -------------------------------
+    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
+        """DEPRECATED python-level dispatch (host-syncs on ``int(t)``).
+
+        Kept so pre-refactor call sites keep working; new code should use
+        :func:`make_round_step` (or the Simulator / make_train_job drivers),
+        which never leave the device.
+        """
+        if type(self) not in _warned:
+            _warned.add(type(self))
+            warnings.warn(
+                f"{type(self).__name__}.step() is deprecated; drive the "
+                "algorithm through repro.core.make_round_step / Simulator",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        rl = self.comm.round_len(getattr(self, "tau", 1))
+        t_ = int(t if t is not None else state.step)
+        if (t_ + 1) % rl == 0:
+            return self.comm_update(state, mix_fn, grad_fn, reset_grad_fn)
+        return self.local_update(state, grad_fn)
+
+
+def make_round_step(
+    algorithm: DecentralizedAlgorithm,
+    mix_fn: MixFn,
+    grad_of_batch: Callable[[PyTree, Any], PyTree],
+    full_grad_fn: Optional[GradFn] = None,
+    comm_grad_of_batch: Optional[Callable[[PyTree, Any], PyTree]] = None,
+):
+    """The ONE generic round executor shared by simulator and runtime.
+
+    Returns ``(round_step, round_len)`` where ``round_step(state, batches)``
+    advances the algorithm by one communication round:  ``batches`` is a
+    pytree whose leaves carry a leading ``round_len`` axis (one minibatch per
+    iteration of the round); the first ``round_len - 1`` are consumed by a
+    ``lax.scan`` of ``local_update`` and the last one closes the round with
+    ``comm_update``.  Cadence, round length and the reset gradient are all
+    taken from the algorithm's :class:`CommSpec` — no isinstance dispatch,
+    no host syncs, fully jit/scan compatible.
+
+    ``comm_grad_of_batch`` optionally substitutes a different gradient
+    function for the communication step only (the distributed runtime passes
+    a loss-capturing ``value_and_grad`` there; it must NOT be used inside the
+    local-update scan, where captured values would be leaked tracers).
+    """
+    spec = algorithm.comm
+    round_len = spec.round_len(getattr(algorithm, "tau", 1))
+    comm_gb = comm_grad_of_batch or grad_of_batch
+
+    def round_step(state, batches):
+        if round_len > 1:
+            micro = jax.tree.map(lambda x: x[: round_len - 1], batches)
+
+            def body(st, mb):
+                return algorithm.local_update(st, lambda p: grad_of_batch(p, mb)), ()
+
+            state, _ = lax.scan(body, state, micro)
+        last = jax.tree.map(lambda x: x[round_len - 1], batches)
+        gf = lambda p: comm_gb(p, last)
+        if spec.reset == "full" and full_grad_fn is not None:
+            rf: Optional[GradFn] = full_grad_fn
+        elif spec.reset in ("full", "minibatch"):
+            rf = gf
+        else:
+            rf = None
+        return algorithm.comm_update(state, mix_fn, gf, rf)
+
+    return round_step, round_len

@@ -1,16 +1,22 @@
 """Baseline decentralized algorithms the paper compares against.
 
-All expose the same protocol as ``DSEMVR``:
+All implement the unified :class:`~repro.core.algorithm.DecentralizedAlgorithm`
+interface (see ``core/algorithm.py``):
 
-    init(params, full_grad_fn=None)            -> state
-    local_step(state, grad_fn)                 -> state
-    round_end(state, mix_fn, reset_grad_fn)    -> state
-    step(state, grad_fn, mix_fn, ...)          -> state   (python dispatch)
+    init(params, full_grad_fn=None)                    -> state
+    local_update(state, grad_fn)                       -> state
+    comm_update(state, mix_fn, grad_fn, reset_grad_fn) -> state
+    comm : CommSpec                                    (declarative schedule)
+
+plus thin deprecation shims for the legacy ``local_step`` / ``round_end`` /
+``step`` protocol.  Every-step methods (DSGD, GT-DSGD, GT-HSGD) declare
+``cadence="every_step"`` and are driven exclusively through ``comm_update``.
 
 References:
   DSGD      Lian et al. 2017  (decentralized parallel SGD, gossip every step)
   DLSGD     Li et al. 2019    (decentralized local SGD: tau local steps + gossip)
   GT-DSGD   Xin et al. 2021   (gradient tracking every step)
+  GT-HSGD   Xin et al. 2021   (hybrid variance reduction + gradient tracking)
   PD-SGDM   Gao & Huang 2020  (periodic decentralized momentum SGD)
   SlowMo-D  Wang et al. 2019  (slow momentum outer update on gossiped iterates)
 """
@@ -22,6 +28,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .algorithm import CommSpec, DecentralizedAlgorithm
 from .dse import GradFn, MixFn, PyTree, ScheduleOrFloat, _cast_like, _sched, tree_axpy, tree_sub
 
 __all__ = ["DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD"]
@@ -39,32 +46,34 @@ class SGDState:
 
 
 @dataclasses.dataclass(frozen=True)
-class DLSGD:
+class DLSGD(DecentralizedAlgorithm):
     """tau local SGD steps, then gossip the parameters."""
 
     lr: ScheduleOrFloat
     tau: int = 1
 
+    comm = CommSpec(cadence="every_tau", buffers=("params",))
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> SGDState:
         del full_grad_fn
         return SGDState(params=params, step=jnp.zeros((), jnp.int32))
 
-    def local_step(self, state: SGDState, grad_fn: GradFn) -> SGDState:
+    def local_update(self, state: SGDState, grad_fn: GradFn) -> SGDState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
         return dataclasses.replace(
             state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
         )
 
-    def round_end(self, state: SGDState, mix_fn: MixFn, grad_fn: GradFn) -> SGDState:
-        state = self.local_step(state, grad_fn)
+    def comm_update(self, state, mix_fn, grad_fn=None, reset_grad_fn=None) -> SGDState:
+        state = self.local_update(state, grad_fn)
         return dataclasses.replace(state, params=mix_fn(state.params))
 
-    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
-        t_ = int(t if t is not None else state.step)
-        if (t_ + 1) % self.tau == 0:
-            return self.round_end(state, mix_fn, grad_fn)
-        return self.local_step(state, grad_fn)
+    # -- legacy protocol shims ---------------------------------------------
+    local_step = local_update
+
+    def round_end(self, state: SGDState, mix_fn: MixFn, grad_fn: GradFn) -> SGDState:
+        return self.comm_update(state, mix_fn, grad_fn)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +81,8 @@ class DSGD(DLSGD):
     """Decentralized SGD: gossip after every step (DLSGD with tau=1)."""
 
     tau: int = 1
+
+    comm = CommSpec(cadence="every_step", buffers=("params",))
 
 
 @jax.tree_util.register_dataclass
@@ -84,7 +95,7 @@ class GTState:
 
 
 @dataclasses.dataclass(frozen=True)
-class GTDSGD:
+class GTDSGD(DecentralizedAlgorithm):
     """Gradient-tracking DSGD (communicates x and y every step).
 
       x_{t+1} = mix(x_t) - gamma * y_t
@@ -94,11 +105,13 @@ class GTDSGD:
     lr: ScheduleOrFloat
     tau: int = 1  # fixed: GT-DSGD is a non-local-update method
 
+    comm = CommSpec(cadence="every_step", buffers=("params", "y"))
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTState:
         g0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
         return GTState(params=params, y=g0, g_prev=g0, step=jnp.zeros((), jnp.int32))
 
-    def step(self, state: GTState, grad_fn, mix_fn, reset_grad_fn=None, t=None) -> GTState:
+    def comm_update(self, state: GTState, mix_fn, grad_fn=None, reset_grad_fn=None) -> GTState:
         gamma = _sched(self.lr, state.step)
         x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
         g_new = grad_fn(x_new)
@@ -110,10 +123,9 @@ class GTDSGD:
         )
         return GTState(params=x_new, y=y_new, g_prev=g_new, step=state.step + 1)
 
-    local_step = step  # uniform protocol
-
+    # -- legacy protocol shims ---------------------------------------------
     def round_end(self, state, mix_fn, grad_fn):
-        raise NotImplementedError("GT-DSGD communicates every step; use step()")
+        return self.comm_update(state, mix_fn, grad_fn)
 
 
 @jax.tree_util.register_dataclass
@@ -127,7 +139,7 @@ class GTHSGDState:
 
 
 @dataclasses.dataclass(frozen=True)
-class GTHSGD:
+class GTHSGD(DecentralizedAlgorithm):
     """GT-HSGD (Xin, Khan & Kar 2021) — the paper's closest theoretical
     competitor (Table 1): hybrid (STORM-style) variance reduction + gradient
     tracking, communicating every iteration (no local updates).
@@ -141,6 +153,8 @@ class GTHSGD:
     beta: float = 0.1
     tau: int = 1  # communicates every step
 
+    comm = CommSpec(cadence="every_step", buffers=("params", "y"))
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTHSGDState:
         v0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
         return GTHSGDState(
@@ -148,7 +162,7 @@ class GTHSGD:
             v_prev=jax.tree.map(jnp.copy, v0), step=jnp.zeros((), jnp.int32),
         )
 
-    def step(self, state: GTHSGDState, grad_fn, mix_fn, reset_grad_fn=None, t=None) -> GTHSGDState:
+    def comm_update(self, state: GTHSGDState, mix_fn, grad_fn=None, reset_grad_fn=None) -> GTHSGDState:
         gamma = _sched(self.lr, state.step)
         x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
         g_new = grad_fn(x_new)
@@ -164,10 +178,9 @@ class GTHSGD:
         return GTHSGDState(params=x_new, v=v_new, y=y_new,
                            v_prev=state.v, step=state.step + 1)
 
-    local_step = step
-
+    # -- legacy protocol shims ---------------------------------------------
     def round_end(self, state, mix_fn, grad_fn):
-        raise NotImplementedError("GT-HSGD communicates every step; use step()")
+        return self.comm_update(state, mix_fn, grad_fn)
 
 
 @jax.tree_util.register_dataclass
@@ -179,7 +192,7 @@ class MomentumState:
 
 
 @dataclasses.dataclass(frozen=True)
-class PDSGDM:
+class PDSGDM(DecentralizedAlgorithm):
     """Periodic decentralized SGD with (local) momentum."""
 
     lr: ScheduleOrFloat
@@ -187,11 +200,13 @@ class PDSGDM:
     beta: float = 0.9
     nesterov: bool = False
 
+    comm = CommSpec(cadence="every_tau", buffers=("params",))
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> MomentumState:
         del full_grad_fn
         return MomentumState(params=params, m=_zeros_like(params), step=jnp.zeros((), jnp.int32))
 
-    def local_step(self, state: MomentumState, grad_fn: GradFn) -> MomentumState:
+    def local_update(self, state: MomentumState, grad_fn: GradFn) -> MomentumState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
         m_new = jax.tree.map(lambda m, gi: (self.beta * m + gi).astype(m.dtype), state.m, g)
@@ -204,15 +219,15 @@ class PDSGDM:
             params=tree_axpy(-gamma, d, state.params), m=m_new, step=state.step + 1
         )
 
-    def round_end(self, state, mix_fn, grad_fn) -> MomentumState:
-        state = self.local_step(state, grad_fn)
+    def comm_update(self, state, mix_fn, grad_fn=None, reset_grad_fn=None) -> MomentumState:
+        state = self.local_update(state, grad_fn)
         return dataclasses.replace(state, params=mix_fn(state.params))
 
-    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
-        t_ = int(t if t is not None else state.step)
-        if (t_ + 1) % self.tau == 0:
-            return self.round_end(state, mix_fn, grad_fn)
-        return self.local_step(state, grad_fn)
+    # -- legacy protocol shims ---------------------------------------------
+    local_step = local_update
+
+    def round_end(self, state, mix_fn, grad_fn) -> MomentumState:
+        return self.comm_update(state, mix_fn, grad_fn)
 
 
 @jax.tree_util.register_dataclass
@@ -225,7 +240,7 @@ class SlowMoState:
 
 
 @dataclasses.dataclass(frozen=True)
-class SlowMoD:
+class SlowMoD(DecentralizedAlgorithm):
     """SlowMo with Local-SGD inner optimizer, decentralized (gossip) averaging.
 
     Inner: tau local SGD steps.  Outer (every tau steps):
@@ -239,6 +254,8 @@ class SlowMoD:
     slow_lr: float = 1.0
     beta: float = 0.95
 
+    comm = CommSpec(cadence="every_tau", buffers=("params",))
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> SlowMoState:
         del full_grad_fn
         return SlowMoState(
@@ -248,16 +265,16 @@ class SlowMoD:
             step=jnp.zeros((), jnp.int32),
         )
 
-    def local_step(self, state: SlowMoState, grad_fn: GradFn) -> SlowMoState:
+    def local_update(self, state: SlowMoState, grad_fn: GradFn) -> SlowMoState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
         return dataclasses.replace(
             state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
         )
 
-    def round_end(self, state: SlowMoState, mix_fn: MixFn, grad_fn: GradFn) -> SlowMoState:
+    def comm_update(self, state: SlowMoState, mix_fn, grad_fn=None, reset_grad_fn=None) -> SlowMoState:
         gamma = _sched(self.lr, state.step)
-        state = self.local_step(state, grad_fn)
+        state = self.local_update(state, grad_fn)
         x_avg = mix_fn(state.params)
         u_new = jax.tree.map(
             lambda u, xr, xa: (self.beta * u + (xr.astype(jnp.float32) - xa.astype(jnp.float32)) / gamma).astype(u.dtype),
@@ -273,8 +290,8 @@ class SlowMoD:
             step=state.step,
         )
 
-    def step(self, state, grad_fn, mix_fn, reset_grad_fn=None, t=None):
-        t_ = int(t if t is not None else state.step)
-        if (t_ + 1) % self.tau == 0:
-            return self.round_end(state, mix_fn, grad_fn)
-        return self.local_step(state, grad_fn)
+    # -- legacy protocol shims ---------------------------------------------
+    local_step = local_update
+
+    def round_end(self, state: SlowMoState, mix_fn: MixFn, grad_fn: GradFn) -> SlowMoState:
+        return self.comm_update(state, mix_fn, grad_fn)

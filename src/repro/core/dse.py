@@ -36,6 +36,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .algorithm import CommSpec, DecentralizedAlgorithm
+
 PyTree = Any
 GradFn = Callable[[PyTree], PyTree]          # params -> grads (batch closed over)
 MixFn = Callable[[PyTree], PyTree]           # gossip: tree -> mixed tree
@@ -90,7 +92,7 @@ def _zeros_like_f32(tree: PyTree, dtype) -> PyTree:
 
 
 @dataclasses.dataclass(frozen=True)
-class DSEMVR:
+class DSEMVR(DecentralizedAlgorithm):
     """Decentralized local updates with Dual-Slow Estimation + MVR (Alg. 1)."""
 
     lr: ScheduleOrFloat
@@ -98,6 +100,10 @@ class DSEMVR:
     tau: int = 1
     fuse_tracking_buffers: bool = False
     state_dtype: Any = None        # None => match params dtype
+
+    # one comm event per round, two param-sized messages (SGT y + SPA x);
+    # v resets with the full/large-batch local gradient (Alg. 1 line 11)
+    comm = CommSpec(cadence="every_tau", buffers=("y", "params"), reset="full")
 
     # -- state ------------------------------------------------------------
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> DSEState:
@@ -126,7 +132,7 @@ class DSEMVR:
         )
 
     # -- inner (local) update ----------------------------------------------
-    def local_step(self, state: DSEState, grad_fn: GradFn) -> DSEState:
+    def local_update(self, state: DSEState, grad_fn: GradFn) -> DSEState:
         """One local MVR step.  ``grad_fn`` closes over ONE minibatch xi and is
         evaluated at both x_{t+1} and x_t (the paper's same-sample requirement).
         """
@@ -145,17 +151,20 @@ class DSEMVR:
         return dataclasses.replace(state, params=x_new, v=v_new, step=state.step + 1)
 
     # -- communication round -------------------------------------------------
-    def round_end(
+    def comm_update(
         self,
         state: DSEState,
         mix_fn: MixFn,
+        grad_fn: Optional[GradFn] = None,
         reset_grad_fn: Optional[GradFn] = None,
     ) -> DSEState:
         """The SGT + SPA + v-reset step (Alg. 1 lines 7-11).
 
-        ``reset_grad_fn`` computes the (full or large-batch) local gradient for
-        the MVR reset; if None the v buffer is kept (used by DSE-SGD subclass).
+        ``reset_grad_fn`` computes the (full or large-batch) local gradient
+        for the MVR reset (falls back to ``grad_fn``); if both are None the
+        v buffer is kept (used by the DSE-SGD subclass).
         """
+        reset_grad_fn = reset_grad_fn if reset_grad_fn is not None else grad_fn
         gamma = _sched(self.lr, state.step)
         x_half = tree_axpy(-gamma, state.v, state.params)
         h_new = tree_sub(_cast_like(state.x_ref, x_half), x_half)  # x_ref - x_half
@@ -182,19 +191,16 @@ class DSEMVR:
             **y_upd,
         )
 
-    # -- convenience: python-level dispatch (simulation / small jobs) -------
-    def step(
+    # -- legacy protocol shims (deprecated; see core/algorithm.py) ----------
+    local_step = local_update
+
+    def round_end(
         self,
         state: DSEState,
-        grad_fn: GradFn,
         mix_fn: MixFn,
         reset_grad_fn: Optional[GradFn] = None,
-        t: Optional[int] = None,
     ) -> DSEState:
-        t_ = int(t if t is not None else state.step)
-        if (t_ + 1) % self.tau == 0:
-            return self.round_end(state, mix_fn, reset_grad_fn or grad_fn)
-        return self.local_step(state, grad_fn)
+        return self.comm_update(state, mix_fn, None, reset_grad_fn)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,15 +213,35 @@ class DSESGD(DSEMVR):
 
     alpha: ScheduleOrFloat = 1.0
 
+    # like DSE-MVR but v resets with a fresh *minibatch* gradient (Alg. 2)
+    comm = CommSpec(cadence="every_tau", buffers=("y", "params"), reset="minibatch")
+
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> DSEState:
-        # v_0 = g_0 (Alg. 2 line 2); the first local_step supplies the gradient.
+        # v_0 = g_0 (Alg. 2 line 2); the first local_update supplies the gradient.
         return super().init(params, full_grad_fn)
 
-    def local_step(self, state: DSEState, grad_fn: GradFn) -> DSEState:
+    def local_update(self, state: DSEState, grad_fn: GradFn) -> DSEState:
         gamma = _sched(self.lr, state.step)
         x_new = tree_axpy(-gamma, state.v, state.params)
         g_new = _cast_like(grad_fn(x_new), state.v)
         return dataclasses.replace(state, params=x_new, v=g_new, step=state.step + 1)
+
+    def comm_update(
+        self,
+        state: DSEState,
+        mix_fn: MixFn,
+        grad_fn: Optional[GradFn] = None,
+        reset_grad_fn: Optional[GradFn] = None,
+    ) -> DSEState:
+        state = DSEMVR.comm_update(self, state, mix_fn, None, None)
+        rf = reset_grad_fn if reset_grad_fn is not None else grad_fn
+        if rf is not None:  # v_{t+1} = g(x_{t+1}) — fresh minibatch
+            v_new = _cast_like(rf(state.params), state.v)
+            state = dataclasses.replace(state, v=v_new)
+        return state
+
+    # -- legacy protocol shims ---------------------------------------------
+    local_step = local_update
 
     def round_end(
         self,
@@ -223,21 +249,4 @@ class DSESGD(DSEMVR):
         mix_fn: MixFn,
         reset_grad_fn: Optional[GradFn] = None,
     ) -> DSEState:
-        state = super().round_end(state, mix_fn, reset_grad_fn=None)
-        if reset_grad_fn is not None:  # v_{t+1} = g(x_{t+1}) — fresh minibatch
-            v_new = _cast_like(reset_grad_fn(state.params), state.v)
-            state = dataclasses.replace(state, v=v_new)
-        return state
-
-    def step(
-        self,
-        state: DSEState,
-        grad_fn: GradFn,
-        mix_fn: MixFn,
-        reset_grad_fn: Optional[GradFn] = None,
-        t: Optional[int] = None,
-    ) -> DSEState:
-        t_ = int(t if t is not None else state.step)
-        if (t_ + 1) % self.tau == 0:
-            return self.round_end(state, mix_fn, reset_grad_fn or grad_fn)
-        return self.local_step(state, grad_fn)
+        return self.comm_update(state, mix_fn, None, reset_grad_fn)

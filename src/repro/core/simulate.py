@@ -4,8 +4,14 @@ Reproduces the paper's experimental protocol exactly: N nodes, each with a
 local (possibly non-iid) dataset, running one of the decentralized algorithms
 with a dense mixing matrix.  Node-parallelism is expressed with ``jax.vmap``
 over a leading node axis, so one process simulates the whole network with
-bit-identical algorithm semantics to the distributed runtime (equivalence is
-tested in ``tests/test_distributed_equivalence.py``).
+bit-identical algorithm semantics to the distributed runtime.
+
+Execution is fully generic: ANY algorithm implementing the
+``DecentralizedAlgorithm`` interface (see ``core/algorithm.py``) is driven
+through the same ``lax.scan``-ed round executor — batches are sampled, local
+updates applied and the communication step closed entirely on-device, with
+the cadence taken from the algorithm's declarative ``CommSpec`` (no
+per-algorithm ``isinstance`` dispatch, no per-step host round-trips).
 """
 from __future__ import annotations
 
@@ -17,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dse import DSEMVR, DSESGD
+from .algorithm import make_round_step
 from .mixing import dense_mix
 from .topology import Topology
 
@@ -73,7 +79,7 @@ class NodeData:
 
 
 class Simulator:
-    """Runs a decentralized algorithm over a simulated N-node network."""
+    """Runs any ``DecentralizedAlgorithm`` over a simulated N-node network."""
 
     def __init__(
         self,
@@ -83,7 +89,6 @@ class Simulator:
         data: NodeData,
         batch_size: int,
         eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
-        full_grad_chunks: int = 1,
     ):
         self.alg = algorithm
         self.topology = topology
@@ -92,7 +97,6 @@ class Simulator:
         self.batch_size = batch_size
         self.eval_fn = eval_fn
         self.mix_fn = dense_mix(topology.w)
-        self.full_grad_chunks = full_grad_chunks
         n = topology.n
         if data.n_nodes != n:
             raise ValueError(f"data has {data.n_nodes} nodes, topology has {n}")
@@ -100,27 +104,51 @@ class Simulator:
         grad_one = jax.grad(loss_fn)
         self._vgrad = jax.vmap(grad_one)            # (N-params, N-batch) -> N-grads
 
-        @jax.jit
-        def _local(state, batch):
-            gf = lambda p: self._vgrad(p, batch)
-            return self.alg.local_step(state, gf)
+        full = (jnp.asarray(data.x), jnp.asarray(data.y))
+        self._full_grad_fn = lambda p: self._vgrad(p, full)
 
-        @jax.jit
-        def _round(state, batch, full_x, full_y):
-            gf = lambda p: self._vgrad(p, batch)
-            rf = lambda p: self._vgrad(p, (full_x, full_y))
-            if isinstance(self.alg, DSESGD):
-                # DSE-SGD resets with a fresh *minibatch* gradient, not full grad
-                return self.alg.round_end(state, self.mix_fn, gf)
-            if hasattr(self.alg, "round_end") and isinstance(self.alg, DSEMVR):
-                return self.alg.round_end(state, self.mix_fn, rf)
-            return self.alg.round_end(state, self.mix_fn, gf)
-
-        self._local_jit = _local
-        self._round_jit = _round
-
-        # algorithms that communicate every step (DSGD, GT-DSGD) have tau == 1
+        # ---- the ONE generic round executor (cadence from the CommSpec) ----
+        self._round_step, self.round_len = make_round_step(
+            algorithm,
+            self.mix_fn,
+            grad_of_batch=lambda p, b: self._vgrad(p, b),
+            full_grad_fn=self._full_grad_fn,
+        )
+        # kept for introspection / legacy callers
         self.tau = int(getattr(self.alg, "tau", 1))
+
+        @partial(jax.jit, static_argnames=("n_rounds",))
+        def _run_rounds(state, key, n_rounds):
+            """Scan n_rounds communication rounds entirely on-device."""
+
+            def body(carry, _):
+                state, key = carry
+                per_step = []
+                for _ in range(self.round_len):      # unrolled: tau is small
+                    key, sk = jax.random.split(key)
+                    per_step.append(self.data.sample(sk, self.batch_size))
+                batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+                return (self._round_step(state, batches), key), ()
+
+            (state, key), _ = jax.lax.scan(body, (state, key), None, length=n_rounds)
+            return state, key
+
+        @partial(jax.jit, static_argnames=("n_steps",))
+        def _run_local_tail(state, key, n_steps):
+            """Trailing local-only steps when num_steps % round_len != 0."""
+
+            def body(carry, _):
+                state, key = carry
+                key, sk = jax.random.split(key)
+                batch = self.data.sample(sk, self.batch_size)
+                state = self.alg.local_update(state, lambda p: self._vgrad(p, batch))
+                return (state, key), ()
+
+            (state, key), _ = jax.lax.scan(body, (state, key), None, length=n_steps)
+            return state, key
+
+        self._run_rounds = _run_rounds
+        self._run_local_tail = _run_local_tail
 
     # ------------------------------------------------------------------
     def init_state(self, params: PyTree, key: jax.Array):
@@ -128,9 +156,7 @@ class Simulator:
         stacked = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (self.topology.n,) + p.shape), params
         )
-        full = (jnp.asarray(self.data.x), jnp.asarray(self.data.y))
-        full_grad_fn = lambda p: self._vgrad(p, full)
-        return self.alg.init(stacked, full_grad_fn)
+        return self.alg.init(stacked, self._full_grad_fn)
 
     # ------------------------------------------------------------------
     def run(
@@ -141,30 +167,51 @@ class Simulator:
         eval_every: int = 0,
         verbose: bool = False,
     ) -> Dict[str, Any]:
+        """Run ``num_steps`` iterations; evaluate every ``eval_every`` steps.
+
+        Evaluation points are snapped to communication-round boundaries (the
+        natural observation points of the scanned executor); a final
+        evaluation at ``num_steps`` is always emitted when ``eval_every > 0``.
+        """
         state = self.init_state(params, key)
         history: List[Dict[str, float]] = []
-        full = (jnp.asarray(self.data.x), jnp.asarray(self.data.y))
-        from .baselines import GTDSGD  # local import to avoid cycle
+        rl = self.round_len
+        n_rounds, tail = divmod(num_steps, rl)
 
-        every_step_comm = isinstance(self.alg, GTDSGD)
-        for t in range(num_steps):
-            key, sk = jax.random.split(key)
-            batch = self.data.sample(sk, self.batch_size)
-            if every_step_comm:
-                gf = lambda p: self._vgrad(p, batch)
-                state = self.alg.step(state, gf, self.mix_fn)
-            elif (t + 1) % self.tau == 0:
-                state = self._round_jit(state, batch, *full)
-            else:
-                state = self._local_jit(state, batch)
-            if eval_every and ((t + 1) % eval_every == 0 or t == num_steps - 1):
-                m = self.evaluate(state)
-                m["step"] = t + 1
-                history.append(m)
-                if verbose:
-                    print(
-                        f"  step {t+1:5d}  " + "  ".join(f"{k}={v:.4f}" for k, v in m.items() if k != "step")
-                    )
+        def record(steps_done):
+            m = self.evaluate(state)
+            m["step"] = steps_done
+            history.append(m)
+            if verbose:
+                print(
+                    f"  step {steps_done:5d}  "
+                    + "  ".join(f"{k}={v:.4f}" for k, v in m.items() if k != "step")
+                )
+
+        # a round is an eval boundary when an eval point (a multiple of
+        # eval_every) falls inside it — mid-round points snap FORWARD to the
+        # round end, so eval_every values that are not multiples of round_len
+        # keep their full history density (just round-aligned)
+        eval_rounds = sorted(
+            {
+                r
+                for r in range(1, n_rounds + 1)
+                if eval_every
+                and (r * rl) // eval_every > ((r - 1) * rl) // eval_every
+            }
+            | ({n_rounds} if n_rounds and eval_every and not tail else set())
+        )
+        done = 0
+        for boundary in eval_rounds:
+            state, key = self._run_rounds(state, key, n_rounds=boundary - done)
+            done = boundary
+            record(boundary * rl)
+        if done < n_rounds:
+            state, key = self._run_rounds(state, key, n_rounds=n_rounds - done)
+        if tail:
+            state, key = self._run_local_tail(state, key, n_steps=tail)
+            if eval_every:
+                record(num_steps)
         return {"state": state, "history": history}
 
     # ------------------------------------------------------------------

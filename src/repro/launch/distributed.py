@@ -3,11 +3,14 @@
 Training (the paper's algorithm as a first-class runtime feature):
 
   * decentralized nodes = mesh slices along the profile's node axes; every
-    DSE state tensor carries a leading node dim sharded over those axes.
+    algorithm state tensor carries a leading node dim sharded over those axes.
   * per-node model compute = ``jax.vmap`` over the node dim, with logical
     sharding constraints resolving to the within-node layout (tp/fsdp/2d).
-  * one jitted ``train_step`` = one communication round: ``lax.scan`` over
-    tau-1 MVR microsteps, then the SGT+SPA gossip and the v-reset gradient.
+  * one jitted ``train_step`` = one communication round, built by the SAME
+    generic round executor the CPU simulator uses (``core.algorithm.
+    make_round_step``): ``lax.scan`` over round_len-1 local updates, then the
+    algorithm's ``comm_update`` — cadence and reset gradient from its
+    declarative ``CommSpec``.  Works for every entry in ``core.ALGORITHMS``.
   * gossip backends: 'dense' (paper-faithful X@W -> all-gather) and 'roll'
     (ring neighbors only -> collective-permute), selectable per job.
 
@@ -25,7 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import DSEMVR, DSESGD, DSEState, ring
+from ..core import make_algorithm, ring
+from ..core.algorithm import DecentralizedAlgorithm, make_round_step
 from ..core.mixing import dense_mix, identity_mix, roll_mix
 from ..models import Model, ModelConfig, axis_rules, resolve_specs
 from .sharding import ShardingProfile, cache_specs, profile_for_arch
@@ -51,7 +55,8 @@ class TrainJob:
     mesh: Any
     profile: ShardingProfile
     algorithm: Any
-    tau: int
+    tau: int                          # the algorithm's local-update interval
+    round_len: int                    # batches consumed per train_step call
     n_nodes: int
     gossip: str
     step_fn: Callable                 # (state, batches) -> (state, metrics)
@@ -91,7 +96,7 @@ def make_train_job(
     cfg: ModelConfig,
     mesh,
     *,
-    algorithm: str = "dse_mvr",
+    algorithm="dse_mvr",
     tau: int = 4,
     lr: float = 1e-3,
     alpha: float = 0.05,
@@ -99,20 +104,28 @@ def make_train_job(
     profile: Optional[ShardingProfile] = None,
     state_dtype=jnp.float32,
     grad_accum: int = 1,
+    algorithm_kwargs: Optional[Dict[str, Any]] = None,
 ) -> TrainJob:
+    """Build a sharded decentralized training round for ANY registered
+    algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
+    ready ``DecentralizedAlgorithm`` instance); cadence, round length and the
+    reset gradient are taken from its declarative ``CommSpec`` — the same
+    executor the CPU simulator uses, compiled onto the mesh."""
     profile = profile or profile_for_arch(cfg.name)
     node_axes = profile.node_axes(mesh)
     n_nodes = profile.n_nodes(mesh)
     topology = ring(n_nodes)
     model = Model(cfg)
 
-    if algorithm == "dse_mvr":
-        alg = DSEMVR(lr=lr, alpha=alpha, tau=tau, fuse_tracking_buffers=True,
-                     state_dtype=state_dtype)
-    elif algorithm == "dse_sgd":
-        alg = DSESGD(lr=lr, tau=tau, fuse_tracking_buffers=True, state_dtype=state_dtype)
+    if isinstance(algorithm, DecentralizedAlgorithm):
+        alg = algorithm
     else:
-        raise ValueError(algorithm)
+        alg = make_algorithm(
+            algorithm, lr=lr, alpha=alpha, tau=tau,
+            fuse_tracking_buffers=True, state_dtype=state_dtype,
+            **(algorithm_kwargs or {}),
+        )
+    round_len = alg.comm.round_len(getattr(alg, "tau", 1))
 
     if n_nodes == 1:
         mix_fn = identity_mix
@@ -155,54 +168,73 @@ def make_train_job(
         total, _ = lax.scan(body, zero, mbs)
         return jax.tree.map(lambda t, pp: (t / grad_accum).astype(pp.dtype), total, p)
 
-    def train_step(state: DSEState, batches):
+    def train_step(state, batches):
         with axis_rules(rules, mesh, param_rules=param_rules):
-            tau_ = alg.tau
-            if tau_ > 1:
-                micro_batches = jax.tree.map(lambda x: x[: tau_ - 1], batches)
-
-                def micro(st, mb):
-                    gf = lambda p: vgrad(p, mb)
-                    return alg.local_step(st, gf), ()
-
-                state, _ = lax.scan(micro, state, micro_batches)
-            reset_batch = jax.tree.map(lambda x: x[-1], batches)
             loss_cell = []
 
-            def rf(p):
+            def comm_grad(p, b):
+                """Gradient for the communication step, capturing the metrics
+                loss (only traced OUTSIDE the local-update scan)."""
                 if grad_accum > 1:
                     # metrics loss from the first microbatch (cheap); grads
                     # accumulate over all microbatches
-                    mb0 = jax.tree.map(lambda x: x[:, : x.shape[1] // grad_accum], reset_batch)
+                    mb0 = jax.tree.map(lambda x: x[:, : x.shape[1] // grad_accum], b)
                     loss_cell.append(vloss(p, mb0).mean())
-                    return vgrad(p, reset_batch)
-                losses, grads = jax.vmap(jax.value_and_grad(node_loss))(p, reset_batch)
+                    return vgrad(p, b)
+                losses, grads = jax.vmap(jax.value_and_grad(node_loss))(p, b)
                 loss_cell.append(losses.mean())
                 return grads
 
-            state = alg.round_end(state, mix_fn, reset_grad_fn=rf)
+            round_step, _ = make_round_step(
+                alg, mix_fn, grad_of_batch=vgrad, comm_grad_of_batch=comm_grad
+            )
+            state = round_step(state, batches)
+            direction = next(
+                (
+                    getattr(state, name)
+                    for name in ("v", "m", "u", "y")
+                    if getattr(state, name, None) is not None
+                ),
+                None,
+            )
             metrics = {
                 "loss": loss_cell[0] if loss_cell else jnp.zeros(()),
-                "v_norm": sum(
-                    jnp.sum(v.astype(jnp.float32) ** 2) for v in jax.tree.leaves(state.v)
+                "v_norm": (
+                    sum(
+                        jnp.sum(v.astype(jnp.float32) ** 2)
+                        for v in jax.tree.leaves(direction)
+                    )
+                    if direction is not None
+                    else jnp.zeros(())
                 ),
             }
             return state, metrics
 
-    # ---- shardings ----
+    # ---- abstract state (dry-run, no allocation) + shardings ----
+    # The state layout is derived generically: every algorithm state is a
+    # registered dataclass whose fields are param-shaped pytrees (node-stacked)
+    # or the scalar step counter, so eval_shape(init) + field-wise spec
+    # assignment covers all of ALGORITHMS without per-class code.
+    shapes = model.param_shapes(dtype=jnp.float32)
+    stacked_struct = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_nodes,) + s.shape, s.dtype), shapes
+    )
+    abstract_state = jax.eval_shape(lambda p: alg.init(p), stacked_struct)
+
     with axis_rules(rules, mesh, param_rules=param_rules):
         node_prefix = (node_axes if node_axes else None,)
         param_spec = resolve_specs(model.param_specs(), prefix=node_prefix)
 
-    state_spec = DSEState(
-        params=param_spec,
-        x_ref=param_spec,
-        v=param_spec,
-        y=None,
-        h_prev=None,
-        z=param_spec,
-        step=P(),
-    )
+    state_spec_fields = {}
+    for f in dataclasses.fields(type(abstract_state)):
+        v = getattr(abstract_state, f.name)
+        if v is None:
+            state_spec_fields[f.name] = None
+        elif isinstance(v, jax.ShapeDtypeStruct) and v.ndim == 0:
+            state_spec_fields[f.name] = P()
+        else:
+            state_spec_fields[f.name] = param_spec
+    state_spec = type(abstract_state)(**state_spec_fields)
     state_shardings = _named(mesh, state_spec)
 
     batch_rule = rules.get("batch")
@@ -227,34 +259,19 @@ def make_train_job(
         return NamedSharding(mesh, P(*dims, *extra))
 
     def abstract_batch_fn(seq_len, global_batch):
-        return _node_batch_struct(model, alg.tau, n_nodes, seq_len, global_batch)
+        return _node_batch_struct(model, round_len, n_nodes, seq_len, global_batch)
 
     probe_seq = max(512, cfg.n_vision_tokens + 64)
     probe = abstract_batch_fn(probe_seq, max(n_nodes, 1))
     batch_shardings = jax.tree.map(batch_spec, probe)
-
-    # ---- abstract state (dry-run, no allocation) ----
-    shapes = model.param_shapes(dtype=jnp.float32)
-    def stacked(s, dtype=None):
-        return jax.ShapeDtypeStruct((n_nodes,) + s.shape, dtype or s.dtype)
-
-    f32 = lambda s: jax.ShapeDtypeStruct((n_nodes,) + s.shape, state_dtype)
-    abstract_state = DSEState(
-        params=jax.tree.map(stacked, shapes),
-        x_ref=jax.tree.map(f32, shapes),
-        v=jax.tree.map(f32, shapes),
-        y=None,
-        h_prev=None,
-        z=jax.tree.map(f32, shapes),
-        step=jax.ShapeDtypeStruct((), jnp.int32),
-    )
 
     return TrainJob(
         model=model,
         mesh=mesh,
         profile=profile,
         algorithm=alg,
-        tau=alg.tau,
+        tau=int(getattr(alg, "tau", 1)),
+        round_len=round_len,
         n_nodes=n_nodes,
         gossip=gossip,
         step_fn=train_step,

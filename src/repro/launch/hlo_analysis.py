@@ -149,17 +149,28 @@ def _group_size(line: str, default: int = 2) -> int:
     return default
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
 def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
     out_dims = _shape_dims(op.shape_str)
     out_elems = 1
     for d in out_dims:
         out_elems *= d
-    # contracted size: parse lhs operand shape + lhs_contracting_dims
+    # contracted size: parse lhs operand shape + lhs_contracting_dims.  The
+    # lhs shape is read from the inline operand type when the HLO printer
+    # emits one (``dot(f32[..]{..} %a, ...)``, older jax) and from the symbol
+    # table otherwise (``dot(%a, %b)``).
     m = _LHS_CDIMS_RE.search(op.line)
     inner = op.line[op.line.index("(") + 1 :]
-    first_operand = inner.split(",")[0].strip().lstrip("%")
-    lhs_shape = symtab.get(first_operand, "")
-    lhs_dims = _shape_dims(lhs_shape)
+    m_name = _OPERAND_NAME_RE.search(inner)
+    lhs_dims: List[int] = []
+    if m_name:
+        lhs_dims = _shape_dims(inner[: m_name.start()]) or _shape_dims(
+            symtab.get(m_name.group(1), "")
+        )
+    else:  # printer without '%' sigils: bare first-operand token lookup
+        lhs_dims = _shape_dims(symtab.get(inner.split(",")[0].strip().rstrip(")"), ""))
     contracted = 1
     if m and lhs_dims:
         for idx in m.group(1).split(","):
@@ -282,10 +293,12 @@ def analyze_module(hlo_text: str) -> ModuleCosts:
             j += 1
         inner = op.line[i : j - 1]
         total = 0
-        for token in inner.split(","):
-            token = token.strip().lstrip("%")
-            if token in symtab:
-                total += parse_shape_bytes(symtab[token])
+        names = _OPERAND_NAME_RE.findall(inner)
+        if not names:  # printer without '%' sigils: bare comma-split tokens
+            names = [tok.strip() for tok in inner.split(",")]
+        for name in names:
+            if name in symtab:
+                total += parse_shape_bytes(symtab[name])
         return total
 
     # visit() references _operand_bytes before definition at runtime — fine

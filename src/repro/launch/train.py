@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_reduced
+from repro.core import ALGORITHMS
 from repro.data import TokenPipeline, make_lm_tokens
 from repro.launch.distributed import make_train_job
 from repro.launch.mesh import make_production_mesh, make_test_mesh
@@ -43,7 +44,7 @@ def main(argv=None):
     p.add_argument("--tau", type=int, default=4)
     p.add_argument("--lr", type=float, default=0.1)
     p.add_argument("--alpha", type=float, default=0.05)
-    p.add_argument("--algorithm", default="dse_mvr", choices=["dse_mvr", "dse_sgd"])
+    p.add_argument("--algorithm", default="dse_mvr", choices=sorted(ALGORITHMS))
     p.add_argument("--gossip", default="roll", choices=["roll", "dense"])
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--global-batch", type=int, default=8)
@@ -61,7 +62,9 @@ def main(argv=None):
         lr=args.lr, alpha=args.alpha, gossip=args.gossip,
     )
     n = job.n_nodes
-    print(f"[train] {n} decentralized nodes ({job.profile.name} profile), tau={args.tau}")
+    rl = job.round_len  # batches per jitted round (1 for every-step methods)
+    print(f"[train] {n} decentralized nodes ({job.profile.name} profile), "
+          f"algorithm={args.algorithm}, round_len={rl}")
     if args.global_batch % max(n, 1):
         raise SystemExit(f"global batch {args.global_batch} not divisible by {n} nodes")
 
@@ -79,7 +82,7 @@ def main(argv=None):
 
     def round_batches():
         xs, ys = [], []
-        for _ in range(args.tau):
+        for _ in range(rl):
             x, y = pipe.batch()
             xs.append(x.reshape(n, args.global_batch // n, args.seq_len))
             ys.append(y.reshape(n, args.global_batch // n, args.seq_len))

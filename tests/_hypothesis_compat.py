@@ -1,0 +1,77 @@
+"""Optional-hypothesis shim for the test suite.
+
+``hypothesis`` is a dev extra (see requirements-dev.txt).  When it is
+installed, this module re-exports the real ``given`` / ``settings`` /
+``strategies``.  When it is missing, deterministic stand-ins run each
+property test over a fixed, seeded set of example draws (boundary values
+first) so the properties still execute — with less coverage, but without
+breaking tier-1 collection on minimal containers.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, example_fn):
+            self._example_fn = example_fn
+
+        def example(self, i, rng):
+            return self._example_fn(i, rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda i, rng: (
+                    min_value if i == 0 else max_value if i == 1
+                    else rng.randint(min_value, max_value)
+                )
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda i, rng: (
+                    float(min_value) if i == 0 else float(max_value) if i == 1
+                    else rng.uniform(min_value, max_value)
+                )
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda i, rng: elements[i % len(elements)])
+
+    def settings(max_examples=10, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(f):
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", 10), 10)
+                rng = random.Random(0)
+                for i in range(n):
+                    args = [s.example(i, rng) for s in arg_strategies]
+                    kwargs = {k: s.example(i, rng) for k, s in kw_strategies.items()}
+                    f(*args, **kwargs)
+
+            # keep the test's identity but NOT __wrapped__: pytest would
+            # introspect the original signature and demand fixtures for the
+            # strategy-supplied parameters
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__module__ = f.__module__
+            return wrapper
+
+        return deco

@@ -9,7 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is a dev extra; the shim substitutes deterministic example draws
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     DSEMVR, DSESGD, DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD,
