@@ -1,0 +1,54 @@
+"""Fault robustness at toy scale: DSE-MVR vs DLSGD under node dropout.
+
+Runs the same non-iid 8-node problem through the scenario engine twice per
+method — the clean static ring and a ring with 15% per-round node dropout —
+and prints the final loss plus the per-round consensus/tracking streams'
+summary.  The paper's robustness claim at a glance: dual-slow estimation
+degrades far less under an unreliable network.
+
+  PYTHONPATH=src python examples/scenario_robustness.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Simulator, make_algorithm
+from repro.data import dirichlet_partition, make_classification, partition_to_node_data
+from repro.scenarios import make_scenario
+
+N_NODES, TAU, BATCH, STEPS = 8, 4, 16, 160
+DIM, CLASSES = 16, 4
+
+
+def loss_fn(params, batch):
+    xb, yb = batch
+    logits = xb @ params["w"] + params["b"]
+    return -jnp.take_along_axis(
+        jax.nn.log_softmax(logits), yb[..., None], -1
+    ).mean()
+
+
+def main():
+    x, y = make_classification(1600, DIM, CLASSES, seed=0, class_sep=1.5)
+    parts = dirichlet_partition(y, N_NODES, omega=0.5, seed=0, min_per_node=10)
+    data = partition_to_node_data(x, y, parts)
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32), "b": jnp.zeros(CLASSES)}
+
+    print(f"{'method':10s} {'scenario':14s} {'final loss':>10s} "
+          f"{'consensus(end)':>14s} {'min active':>10s}")
+    for name in ("dse_mvr", "dlsgd"):
+        for scen in ("baseline", "dropout_ring"):
+            alg = make_algorithm(name, lr=0.3, alpha=0.1, tau=TAU)
+            sim = Simulator(alg, None, loss_fn, data, batch_size=BATCH,
+                            scenario=make_scenario(scen))
+            out = sim.run(params, jax.random.key(1), num_steps=STEPS,
+                          eval_every=STEPS)
+            s = out["streams"]
+            print(f"{name:10s} {scen:14s} "
+                  f"{out['history'][-1]['train_loss']:10.4f} "
+                  f"{float(s['consensus'][-1]):14.6f} "
+                  f"{int(np.min(s['active_nodes'])):10d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,10 +26,13 @@ remains available as thin deprecation shims on every class.
 import dataclasses as _dataclasses
 
 from .topology import Topology, ring, torus, fully_connected, star, metropolis_hastings, spectral_gap, check_mixing_matrix
-from .algorithm import CommSpec, DecentralizedAlgorithm, make_round_step
+from .algorithm import CommSpec, DecentralizedAlgorithm, RoundCtx, make_round_step
 from .dse import DSEMVR, DSESGD, DSEState
 from .baselines import DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD
-from .mixing import dense_mix, allgather_mix, ring_mix, make_mix_fn, identity_mix
+from .mixing import (
+    dense_mix, allgather_mix, ring_mix, make_mix_fn, identity_mix,
+    Rotation, scheduled_dense_mix, scheduled_rotation_mix,
+)
 from .simulate import Simulator, NodeData, node_mean, consensus_distance
 
 ALGORITHMS = {
@@ -65,10 +68,12 @@ def make_algorithm(name: str, **hyperparams) -> DecentralizedAlgorithm:
 __all__ = [
     "Topology", "ring", "torus", "fully_connected", "star",
     "metropolis_hastings", "spectral_gap", "check_mixing_matrix",
-    "CommSpec", "DecentralizedAlgorithm", "make_round_step", "make_algorithm",
+    "CommSpec", "DecentralizedAlgorithm", "RoundCtx", "make_round_step",
+    "make_algorithm",
     "DSEMVR", "DSESGD", "DSEState",
     "DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD",
     "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",
+    "Rotation", "scheduled_dense_mix", "scheduled_rotation_mix",
     "Simulator", "NodeData", "node_mean", "consensus_distance",
     "ALGORITHMS",
 ]

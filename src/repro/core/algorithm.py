@@ -30,11 +30,13 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 from jax import lax
 
+import jax.numpy as jnp
+
 PyTree = Any
 GradFn = Callable[[PyTree], PyTree]       # params -> grads (batch closed over)
 MixFn = Callable[[PyTree], PyTree]        # gossip: tree -> mixed tree
 
-__all__ = ["CommSpec", "DecentralizedAlgorithm", "make_round_step"]
+__all__ = ["CommSpec", "DecentralizedAlgorithm", "RoundCtx", "make_round_step"]
 
 CADENCES = ("every_step", "every_tau")
 RESETS = ("none", "minibatch", "full")
@@ -76,6 +78,64 @@ class CommSpec:
         return tau if self.cadence == "every_step" else 1
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundCtx:
+    """Per-round execution context scanned into the round executor.
+
+    The scenario engine (``repro.scenarios``) materializes one of these per
+    communication round; a static/no-fault scenario carries the same mixing
+    matrix, an all-ones active mask and an all-ones local mask every round —
+    in which case the scheduled executor is bit-identical to the static one.
+
+    w:          (N, N) mixing matrix W_t for this round (dense backends; the
+                rotation backend may ignore it for mixing but it still feeds
+                the on-device spectral-gap stream).
+    active:     (N,) bool — nodes that participate in this round at all.
+                Inactive nodes keep their ENTIRE state frozen (dropout fault);
+                W_t is renormalized upstream so the active block stays doubly
+                stochastic.
+    local_mask: (L, N) bool with L >= round_len - 1 — per-(local-step, node)
+                participation (straggler fault / local-step jitter).  A masked
+                node skips that local update (state unchanged).
+    pattern:    () int32 — index into a static tuple of gossip rotations for
+                shift-structured schedules (collective-permute backend).
+    """
+
+    w: Optional[jnp.ndarray] = None
+    active: Optional[jnp.ndarray] = None
+    local_mask: Optional[jnp.ndarray] = None
+    pattern: Optional[jnp.ndarray] = None
+
+
+def _select_nodes(mask: Optional[jnp.ndarray], new: Any, old: Any) -> Any:
+    """Per-node select between two algorithm states.
+
+    ``mask`` is (N,) bool over the leading node axis; node-stacked leaves take
+    ``new`` where the node is unmasked and ``old`` otherwise.  Leaves without
+    a node axis (the scalar step counter) always advance — the step indexes
+    lr schedules and is global, not per-node.  With an all-True mask this is
+    exactly ``new`` (bit-identical), so the no-fault path pays no numerics.
+
+    Relies on the same state contract the runtime's sharding derivation
+    assumes (see ``make_train_job``): every state leaf is either node-stacked
+    (leading axis N) or a scalar.  A non-node leaf whose leading dim happens
+    to equal N would be gated per-"node" — don't add such buffers to
+    algorithm states.
+    """
+    if mask is None:
+        return new
+    n = mask.shape[0]
+
+    def sel(a, b):
+        if a.ndim == 0 or a.shape[0] != n:
+            return a
+        m = mask.reshape((n,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
 _warned: set = set()
 
 
@@ -89,6 +149,13 @@ class DecentralizedAlgorithm:
     """
 
     comm: CommSpec = CommSpec()
+
+    #: name of the state field that estimates the (global) gradient
+    #: direction, consumed by the scenario metrics streams' tracking-error
+    #: computation.  None for methods whose buffers are not gradient-scale
+    #: (momentum sums, displacement trackers) — comparing those against
+    #: ∇f(x̄) would be off by the momentum/lr factor and meaningless.
+    tracking_buffer: Optional[str] = None
 
     # -- to implement ------------------------------------------------------
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> Any:
@@ -138,6 +205,10 @@ def make_round_step(
     grad_of_batch: Callable[[PyTree, Any], PyTree],
     full_grad_fn: Optional[GradFn] = None,
     comm_grad_of_batch: Optional[Callable[[PyTree, Any], PyTree]] = None,
+    *,
+    scheduled: bool = False,
+    gate_local: bool = True,
+    gate_active: bool = True,
 ):
     """The ONE generic round executor shared by simulator and runtime.
 
@@ -154,27 +225,67 @@ def make_round_step(
     function for the communication step only (the distributed runtime passes
     a loss-capturing ``value_and_grad`` there; it must NOT be used inside the
     local-update scan, where captured values would be leaked tracers).
+
+    With ``scheduled=True`` the executor consumes the scenario engine's
+    per-round context: ``round_step(state, batches, ctx)`` where ``ctx`` is a
+    :class:`RoundCtx`, ``mix_fn`` takes ``(tree, ctx)``, stragglers are gated
+    via ``ctx.local_mask`` and dropped-out nodes via ``ctx.active``.
+    ``gate_local`` / ``gate_active`` (statically known from the scenario
+    spec: ``Scenario.needs_local_gate`` / ``needs_active_gate``) elide the
+    per-node selects when no fault can produce a masked step, keeping
+    fault-free scenarios — in particular the degenerate static/no-fault one —
+    bit-identical to the static executor (a traced always-true select still
+    changes XLA fusion, hence ulp-level drift, if left in).
     """
     spec = algorithm.comm
     round_len = spec.round_len(getattr(algorithm, "tau", 1))
     comm_gb = comm_grad_of_batch or grad_of_batch
 
-    def round_step(state, batches):
+
+    def _reset_fn(gf):
+        if spec.reset == "full" and full_grad_fn is not None:
+            return full_grad_fn
+        if spec.reset in ("full", "minibatch"):
+            return gf
+        return None
+
+    if not scheduled:
+
+        def round_step(state, batches):
+            if round_len > 1:
+                micro = jax.tree.map(lambda x: x[: round_len - 1], batches)
+
+                def body(st, mb):
+                    return algorithm.local_update(st, lambda p: grad_of_batch(p, mb)), ()
+
+                state, _ = lax.scan(body, state, micro)
+            last = jax.tree.map(lambda x: x[round_len - 1], batches)
+            gf = lambda p: comm_gb(p, last)
+            return algorithm.comm_update(state, mix_fn, gf, _reset_fn(gf))
+
+        return round_step, round_len
+
+    def round_step_scheduled(state, batches, ctx: RoundCtx):
         if round_len > 1:
             micro = jax.tree.map(lambda x: x[: round_len - 1], batches)
+            masks = (
+                ctx.local_mask[: round_len - 1]
+                if gate_local and ctx.local_mask is not None
+                else None
+            )
 
-            def body(st, mb):
-                return algorithm.local_update(st, lambda p: grad_of_batch(p, mb)), ()
+            def body(st, xs):
+                mb, mask = xs
+                new = algorithm.local_update(st, lambda p: grad_of_batch(p, mb))
+                return _select_nodes(mask, new, st), ()
 
-            state, _ = lax.scan(body, state, micro)
+            # None is an empty pytree, so a missing mask scans transparently
+            state, _ = lax.scan(body, state, (micro, masks))
         last = jax.tree.map(lambda x: x[round_len - 1], batches)
         gf = lambda p: comm_gb(p, last)
-        if spec.reset == "full" and full_grad_fn is not None:
-            rf: Optional[GradFn] = full_grad_fn
-        elif spec.reset in ("full", "minibatch"):
-            rf = gf
-        else:
-            rf = None
-        return algorithm.comm_update(state, mix_fn, gf, rf)
+        new = algorithm.comm_update(
+            state, lambda tree: mix_fn(tree, ctx), gf, _reset_fn(gf)
+        )
+        return _select_nodes(ctx.active if gate_active else None, new, state)
 
-    return round_step, round_len
+    return round_step_scheduled, round_len

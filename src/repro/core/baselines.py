@@ -106,6 +106,7 @@ class GTDSGD(DecentralizedAlgorithm):
     tau: int = 1  # fixed: GT-DSGD is a non-local-update method
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
+    tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
 
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTState:
         g0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
@@ -154,6 +155,7 @@ class GTHSGD(DecentralizedAlgorithm):
     tau: int = 1  # communicates every step
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
+    tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
 
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> GTHSGDState:
         v0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)

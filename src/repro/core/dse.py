@@ -105,6 +105,11 @@ class DSEMVR(DecentralizedAlgorithm):
     # v resets with the full/large-batch local gradient (Alg. 1 line 11)
     comm = CommSpec(cadence="every_tau", buffers=("y", "params"), reset="full")
 
+    # v is the gradient-direction estimate; the SGT buffer y tracks the
+    # accumulated *displacement* h = x_ref - x_half (scale ~lr*tau), so it is
+    # NOT comparable against ∇f(x̄)
+    tracking_buffer = "v"
+
     # -- state ------------------------------------------------------------
     def init(self, params: PyTree, full_grad_fn: Optional[GradFn] = None) -> DSEState:
         """v_0 = full local gradient (Alg. 1 line 3); zeros if fn not given."""

@@ -14,12 +14,20 @@ Three interchangeable implementations of ``x_i <- sum_j w_ij x_j``:
                          (collective-permute).  Link bytes: O(deg * |x|),
                          deg = 2 for a ring — independent of N.
 
+plus the *scheduled* variants consumed by the scenario engine
+(``make_round_step(..., scheduled=True)``), whose mix signature is
+``(tree, ctx)`` with the per-round context supplying W_t / the rotation
+pattern.  The static and scheduled variants share one arithmetic
+implementation (``_dense_contract`` / ``Rotation.apply``), so the
+degenerate-scenario bit-identity is structural, not copy-maintained.
+
 All backends compute the same linear operator (property-tested); they differ
 only in collective footprint, which is exactly what EXPERIMENTS.md §Perf
 quantifies.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, Sequence, Union
 
@@ -35,7 +43,10 @@ MixFn = Callable[[PyTree], PyTree]
 
 AxisName = Union[str, tuple[str, ...]]
 
-__all__ = ["dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix"]
+__all__ = [
+    "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",
+    "Rotation", "scheduled_dense_mix", "scheduled_rotation_mix",
+]
 
 
 def identity_mix(tree: PyTree) -> PyTree:
@@ -43,21 +54,27 @@ def identity_mix(tree: PyTree) -> PyTree:
     return tree
 
 
+def _dense_contract(w: jnp.ndarray, tree: PyTree) -> PyTree:
+    """The one dense contraction: leaf (N, ...) -> W @ leaf, f32 accumulate.
+
+    Shared by ``dense_mix`` (W closed over) and ``scheduled_dense_mix`` (W_t
+    traced from the round context) so both are the same arithmetic by
+    construction."""
+
+    def one(x):
+        xf = x.reshape(x.shape[0], -1)
+        out = jnp.einsum(
+            "ij,jk->ik", w.astype(jnp.float32), xf.astype(jnp.float32)
+        )
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
 def dense_mix(w: np.ndarray) -> MixFn:
     """Mixing for node-stacked pytrees: leaf shape (N, ...) -> (N, ...)."""
     w = jnp.asarray(w)
-
-    def mix(tree: PyTree) -> PyTree:
-        def one(x):
-            xf = x.reshape(x.shape[0], -1)
-            out = jnp.einsum(
-                "ij,jk->ik", w.astype(jnp.float32), xf.astype(jnp.float32)
-            )
-            return out.reshape(x.shape).astype(x.dtype)
-
-        return jax.tree.map(one, tree)
-
-    return mix
+    return functools.partial(_dense_contract, w)
 
 
 def allgather_mix(w: np.ndarray, axis_name: AxisName) -> MixFn:
@@ -109,31 +126,84 @@ def ring_mix(topology: Topology, axis_name: AxisName) -> MixFn:
     return mix
 
 
-def roll_mix(topology: Topology) -> MixFn:
-    """Sparse gossip on *node-stacked* pytrees (leading axis N = nodes).
+@dataclasses.dataclass(frozen=True)
+class Rotation:
+    """One gossip rotation of a shift-structured topology: the self weight
+    plus cyclic (shift, weight) pairs.  ``apply`` is THE jit-level rotation
+    arithmetic — ``roll_mix`` and ``scheduled_rotation_mix`` both call it, so
+    static and scheduled rotation gossip are bit-identical by construction.
+    """
 
-    ``jnp.roll`` along a node-sharded leading axis lowers to
-    ``collective-permute`` under GSPMD — the jit-level (no shard_map)
-    TPU-native backend: only graph neighbors move, O(deg * |x|) link bytes.
-    Exactly equivalent to ``dense_mix`` for shift-structured topologies
-    (property-tested)."""
-    if topology.n == 1:
-        return identity_mix
-    if not topology.shifts:
-        raise ValueError(f"{topology.name} is not shift-structured; use dense_mix")
-    w_self = topology.self_weight()
-    shifts = topology.shifts
-    weights = topology.shift_weights()
+    self_weight: float
+    shifts: tuple[int, ...]
+    weights: tuple[float, ...]
 
-    def mix(tree: PyTree) -> PyTree:
+    @classmethod
+    def from_topology(cls, topology: Topology) -> "Rotation":
+        if not topology.shifts:
+            raise ValueError(f"{topology.name} is not shift-structured")
+        return cls(
+            self_weight=topology.self_weight(),
+            shifts=topology.shifts,
+            weights=topology.shift_weights(),
+        )
+
+    def apply(self, tree: PyTree) -> PyTree:
         def one(x):
-            acc = w_self * x.astype(jnp.float32)
-            for s, w in zip(shifts, weights):
-                # x_i <- ... + w * x_{(i+s) mod n}
+            # x_i <- w_self x_i + sum_s w_s x_{(i+s) mod n}: jnp.roll along a
+            # node-sharded leading axis lowers to collective-permute under
+            # GSPMD — only graph neighbors move, O(deg * |x|) link bytes
+            acc = self.self_weight * x.astype(jnp.float32)
+            for s, w in zip(self.shifts, self.weights):
                 acc = acc + w * jnp.roll(x.astype(jnp.float32), -s, axis=0)
             return acc.astype(x.dtype)
 
         return jax.tree.map(one, tree)
+
+
+def roll_mix(topology: Topology) -> MixFn:
+    """Sparse gossip on *node-stacked* pytrees (leading axis N = nodes).
+
+    The jit-level (no shard_map) TPU-native backend: one :class:`Rotation`
+    built from the topology, lowering to collective-permute under GSPMD.
+    Exactly equivalent to ``dense_mix`` for shift-structured topologies
+    (property-tested)."""
+    if topology.n == 1:
+        return identity_mix
+    return Rotation.from_topology(topology).apply
+
+
+def scheduled_dense_mix() -> Callable[[PyTree, Any], PyTree]:
+    """Dense gossip with the per-round mixing matrix taken from ``ctx.w``.
+
+    Same contraction as :func:`dense_mix` (shared implementation, so
+    bit-identical for a constant W_t), but W is a traced input — one
+    compiled executor serves every round of a time-varying schedule."""
+
+    def mix(tree: PyTree, ctx) -> PyTree:
+        return _dense_contract(ctx.w, tree)
+
+    return mix
+
+
+def scheduled_rotation_mix(rotations: Sequence[Rotation]) -> Callable[[PyTree, Any], PyTree]:
+    """Shift-structured scheduled gossip: ``ctx.pattern`` switches between a
+    static tuple of rotations, each lowering to ``collective-permute`` — the
+    sharded runtime's mapping of time-varying graphs onto neighbor-only
+    traffic.
+
+    A single rotation skips the ``lax.switch`` entirely, making the static
+    schedule bit-identical to :func:`roll_mix` (same ``Rotation.apply``)."""
+    rotations = tuple(rotations)
+    if not rotations:
+        raise ValueError("need at least one rotation")
+
+    def mix(tree: PyTree, ctx) -> PyTree:
+        if len(rotations) == 1:
+            return rotations[0].apply(tree)
+        return lax.switch(
+            ctx.pattern, [r.apply for r in rotations], tree
+        )
 
     return mix
 

@@ -12,6 +12,12 @@ through the same ``lax.scan``-ed round executor — batches are sampled, local
 updates applied and the communication step closed entirely on-device, with
 the cadence taken from the algorithm's declarative ``CommSpec`` (no
 per-algorithm ``isinstance`` dispatch, no per-step host round-trips).
+
+With a ``scenario`` (``repro.scenarios.Scenario``) the simulator scans the
+materialized per-round schedule — time-varying mixing matrix W_t, node
+dropout and straggler masks — and emits dense per-round on-device metrics
+streams (consensus distance, tracking error, effective spectral gap); the
+degenerate static/no-fault scenario is bit-identical to the plain executor.
 """
 from __future__ import annotations
 
@@ -23,8 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .algorithm import make_round_step
-from .mixing import dense_mix
+from .algorithm import RoundCtx, make_round_step
+from .mixing import dense_mix, scheduled_dense_mix
 from .topology import Topology
 
 PyTree = Any
@@ -51,10 +57,14 @@ def consensus_distance(tree: PyTree) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class NodeData:
-    """Per-node datasets: features (N, n_i, ...), labels (N, n_i, ...)."""
+    """Per-node datasets: features (N, n_i, ...), labels (N, n_i, ...).
+
+    ``n_dropped`` records samples discarded by rectangular truncation in
+    ``repro.data.partition_to_node_data`` (0 for exact partitions)."""
 
     x: np.ndarray
     y: np.ndarray
+    n_dropped: int = 0
 
     @property
     def n_nodes(self) -> int:
@@ -64,11 +74,23 @@ class NodeData:
     def samples_per_node(self) -> int:
         return self.x.shape[1]
 
-    def sample(self, key: jax.Array, batch_size: int):
-        """Per-node minibatch with replacement (paper's sampling scheme)."""
+    def sample(self, key: jax.Array, batch_size: int, node_batch_sizes=None):
+        """Per-node minibatch with replacement (paper's sampling scheme).
+
+        ``node_batch_sizes`` (N,) optionally shrinks node i's *effective*
+        batch to b_i <= batch_size while keeping shapes static: only the
+        first b_i draws are used, tiled cyclically over the batch_size slots.
+        Since sampling is with replacement, the slot mean equals a size-b_i
+        minibatch mean; b_i == batch_size reduces to the identity gather
+        (bit-identical to the uniform path).
+        """
         idx = jax.random.randint(
             key, (self.n_nodes, batch_size), 0, self.samples_per_node
         )
+        if node_batch_sizes is not None:
+            b = jnp.asarray(node_batch_sizes, jnp.int32)
+            slots = jnp.arange(batch_size, dtype=jnp.int32)[None, :] % b[:, None]
+            idx = jnp.take_along_axis(idx, slots, axis=1)
         xb = jnp.take_along_axis(
             jnp.asarray(self.x), idx.reshape(idx.shape + (1,) * (self.x.ndim - 2)), axis=1
         )
@@ -84,11 +106,13 @@ class Simulator:
     def __init__(
         self,
         algorithm,
-        topology: Topology,
+        topology: Optional[Topology],
         loss_fn: LossFn,
         data: NodeData,
         batch_size: int,
         eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
+        scenario=None,
+        stream_metrics: bool = True,
     ):
         self.alg = algorithm
         self.topology = topology
@@ -96,10 +120,15 @@ class Simulator:
         self.data = data
         self.batch_size = batch_size
         self.eval_fn = eval_fn
-        self.mix_fn = dense_mix(topology.w)
-        n = topology.n
+        self.scenario = scenario
+        self.stream_metrics = stream_metrics
+        n = data.n_nodes if topology is None else topology.n
+        if topology is None and scenario is None:
+            raise ValueError("need a topology, a scenario, or both")
         if data.n_nodes != n:
             raise ValueError(f"data has {data.n_nodes} nodes, topology has {n}")
+        self.n_nodes = n
+        self.mix_fn = dense_mix(topology.w) if topology is not None else None
 
         grad_one = jax.grad(loss_fn)
         self._vgrad = jax.vmap(grad_one)            # (N-params, N-batch) -> N-grads
@@ -107,13 +136,35 @@ class Simulator:
         full = (jnp.asarray(data.x), jnp.asarray(data.y))
         self._full_grad_fn = lambda p: self._vgrad(p, full)
 
-        # ---- the ONE generic round executor (cadence from the CommSpec) ----
-        self._round_step, self.round_len = make_round_step(
-            algorithm,
-            self.mix_fn,
-            grad_of_batch=lambda p, b: self._vgrad(p, b),
-            full_grad_fn=self._full_grad_fn,
+        # cached jitted full-batch eval closures (built once, not per call)
+        flat = (
+            full[0].reshape((-1,) + data.x.shape[2:]),
+            full[1].reshape((-1,) + data.y.shape[2:]),
         )
+        self._full_flat = flat
+
+        @jax.jit
+        def _eval_loss_gnorm(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            gnorm = sum(
+                jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)
+            )
+            return loss, gnorm
+
+        self._eval_loss_gnorm = _eval_loss_gnorm
+        self._consensus = jax.jit(consensus_distance)
+
+        # ---- the ONE generic round executor (cadence from the CommSpec) ----
+        if self.mix_fn is not None:
+            self._round_step, self.round_len = make_round_step(
+                algorithm,
+                self.mix_fn,
+                grad_of_batch=lambda p, b: self._vgrad(p, b),
+                full_grad_fn=self._full_grad_fn,
+            )
+        else:
+            self._round_step = None
+            self.round_len = algorithm.comm.round_len(getattr(algorithm, "tau", 1))
         # kept for introspection / legacy callers
         self.tau = int(getattr(self.alg, "tau", 1))
 
@@ -134,13 +185,13 @@ class Simulator:
             return state, key
 
         @partial(jax.jit, static_argnames=("n_steps",))
-        def _run_local_tail(state, key, n_steps):
+        def _run_local_tail(state, key, n_steps, node_batch_sizes=None):
             """Trailing local-only steps when num_steps % round_len != 0."""
 
             def body(carry, _):
                 state, key = carry
                 key, sk = jax.random.split(key)
-                batch = self.data.sample(sk, self.batch_size)
+                batch = self.data.sample(sk, self.batch_size, node_batch_sizes)
                 state = self.alg.local_update(state, lambda p: self._vgrad(p, batch))
                 return (state, key), ()
 
@@ -150,11 +201,85 @@ class Simulator:
         self._run_rounds = _run_rounds
         self._run_local_tail = _run_local_tail
 
+        # ---- scenario engine: scheduled executor + on-device streams ------
+        if scenario is not None:
+            from ..scenarios.metrics import make_stream_fn  # lazy: no cycle
+
+            scenario.warn_if_vacuous(self.round_len)
+            if topology is not None:
+                # the scheduled path is the only one that runs — an explicit
+                # topology that disagrees with the scenario's round-0 graph
+                # would be silently ignored, so reject the mismatch
+                w0, _ = scenario.topology_schedule(n).generate(
+                    1, np.random.default_rng(scenario.seed)
+                )
+                if not np.allclose(w0[0], topology.w, atol=1e-6):
+                    raise ValueError(
+                        f"topology {topology.name!r} disagrees with scenario "
+                        f"{scenario.name!r} (round-0 W differs); pass "
+                        "topology=None to train on the scenario's schedule"
+                    )
+            sched_step, _ = make_round_step(
+                algorithm,
+                scheduled_dense_mix(),
+                grad_of_batch=lambda p, b: self._vgrad(p, b),
+                full_grad_fn=self._full_grad_fn,
+                scheduled=True,
+                gate_local=scenario.needs_local_gate,
+                gate_active=scenario.needs_active_gate,
+            )
+            stream_fn = (
+                make_stream_fn(
+                    self._grad_at_mean,
+                    buffer_name=getattr(algorithm, "tracking_buffer", None),
+                )
+                if stream_metrics
+                else None
+            )
+
+            @jax.jit
+            def _run_scheduled(state, key, w, active, local_mask, pattern,
+                               node_batch_sizes=None):
+                """Scan the schedule: one xs slice per communication round,
+                per-round metrics streamed as the scan ys."""
+
+                def body(carry, xs):
+                    state, key = carry
+                    wt, at, lm, pt = xs
+                    per_step = []
+                    for _ in range(self.round_len):  # unrolled: tau is small
+                        key, sk = jax.random.split(key)
+                        per_step.append(
+                            self.data.sample(sk, self.batch_size, node_batch_sizes)
+                        )
+                    batches = jax.tree.map(lambda *xs_: jnp.stack(xs_), *per_step)
+                    ctx = RoundCtx(w=wt, active=at, local_mask=lm, pattern=pt)
+                    state = sched_step(state, batches, ctx)
+                    ys = stream_fn(state, ctx) if stream_fn is not None else {}
+                    return (state, key), ys
+
+                (state, key), ys = jax.lax.scan(
+                    body, (state, key), (w, active, local_mask, pattern)
+                )
+                return state, key, ys
+
+            self._run_scheduled = _run_scheduled
+
+    # ------------------------------------------------------------------
+    def _grad_at_mean(self, xbar: PyTree) -> PyTree:
+        """Exact full-batch ∇f(x̄): per-node full gradients at the node mean,
+        averaged (shards are rectangular, so the node mean is the global mean)."""
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (self.n_nodes,) + p.shape), xbar
+        )
+        g = self._full_grad_fn(stacked)
+        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(axis=0), g)
+
     # ------------------------------------------------------------------
     def init_state(self, params: PyTree, key: jax.Array):
         """Broadcast identical x_0 to all nodes (paper: x_0^{(i)} = x_0)."""
         stacked = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (self.topology.n,) + p.shape), params
+            lambda p: jnp.broadcast_to(p[None], (self.n_nodes,) + p.shape), params
         )
         return self.alg.init(stacked, self._full_grad_fn)
 
@@ -172,11 +297,36 @@ class Simulator:
         Evaluation points are snapped to communication-round boundaries (the
         natural observation points of the scanned executor); a final
         evaluation at ``num_steps`` is always emitted when ``eval_every > 0``.
+
+        With a ``scenario``, the run scans the materialized per-round
+        schedule (W_t, active mask, local-step mask) and the result carries a
+        ``"streams"`` dict of dense per-round on-device metrics (consensus,
+        tracking error, effective spectral gap, active node count); trailing
+        ``num_steps % round_len`` local steps run fault-free.
         """
         state = self.init_state(params, key)
         history: List[Dict[str, float]] = []
         rl = self.round_len
         n_rounds, tail = divmod(num_steps, rl)
+
+        schedule = None
+        node_bs = None
+        if self.scenario is not None:
+            schedule = self.scenario.materialize(
+                self.n_nodes, n_rounds, rl, batch_size=self.batch_size
+            )
+            node_bs = (
+                None
+                if schedule.batch_sizes is None
+                else jnp.asarray(schedule.batch_sizes)
+            )
+            xs_all = (
+                jnp.asarray(schedule.w),
+                jnp.asarray(schedule.active),
+                jnp.asarray(schedule.local_mask),
+                jnp.asarray(schedule.pattern),
+            )
+            stream_chunks: List[Any] = []
 
         def record(steps_done):
             m = self.evaluate(state)
@@ -201,37 +351,55 @@ class Simulator:
             }
             | ({n_rounds} if n_rounds and eval_every and not tail else set())
         )
+        def advance(state, key, start, stop):
+            if self.scenario is None:
+                state, key = self._run_rounds(state, key, n_rounds=stop - start)
+            else:
+                xs = tuple(a[start:stop] for a in xs_all)
+                state, key, ys = self._run_scheduled(state, key, *xs, node_bs)
+                if ys:
+                    stream_chunks.append(ys)
+            return state, key
+
         done = 0
         for boundary in eval_rounds:
-            state, key = self._run_rounds(state, key, n_rounds=boundary - done)
+            state, key = advance(state, key, done, boundary)
             done = boundary
             record(boundary * rl)
         if done < n_rounds:
-            state, key = self._run_rounds(state, key, n_rounds=n_rounds - done)
+            state, key = advance(state, key, done, n_rounds)
         if tail:
-            state, key = self._run_local_tail(state, key, n_steps=tail)
+            state, key = self._run_local_tail(
+                state, key, n_steps=tail, node_batch_sizes=node_bs
+            )
             if eval_every:
                 record(num_steps)
-        return {"state": state, "history": history}
+        out = {"state": state, "history": history}
+        if self.scenario is not None:
+            streams: Dict[str, np.ndarray] = {}
+            if stream_chunks:
+                for k in stream_chunks[0]:
+                    streams[k] = np.concatenate(
+                        [np.asarray(c[k]) for c in stream_chunks]
+                    )
+            out["streams"] = streams
+            out["schedule"] = schedule
+        return out
 
     # ------------------------------------------------------------------
     def evaluate(self, state) -> Dict[str, float]:
+        """Full-batch metrics at the node mean.
+
+        Uses the loss/grad closure jitted once at construction — the old code
+        re-traced ``jax.grad(self.loss_fn)`` and re-built the flattened full
+        batch on every call, which dominated wall-clock for small
+        ``eval_every`` (measured in ``benchmarks/executor_bench.py``)."""
         xbar = node_mean(state.params)
-        full = (
-            jnp.asarray(self.data.x).reshape((-1,) + self.data.x.shape[2:]),
-            jnp.asarray(self.data.y).reshape((-1,) + self.data.y.shape[2:]),
-        )
-        loss = float(self.loss_fn(xbar, full))
-        gnorm = float(
-            sum(
-                jnp.sum(g.astype(jnp.float32) ** 2)
-                for g in jax.tree.leaves(jax.grad(self.loss_fn)(xbar, full))
-            )
-        )
+        loss, gnorm = self._eval_loss_gnorm(xbar, self._full_flat)
         out = {
-            "train_loss": loss,
-            "grad_norm_sq": gnorm,
-            "consensus": float(consensus_distance(state.params)),
+            "train_loss": float(loss),
+            "grad_norm_sq": float(gnorm),
+            "consensus": float(self._consensus(state.params)),
         }
         if self.eval_fn is not None:
             out.update(self.eval_fn(xbar))

@@ -6,11 +6,14 @@ approaches iid.  The paper's settings: omega = 0.5 (non-iid), omega = 10 (iid).
 """
 from __future__ import annotations
 
+import logging
 from typing import List
 
 import numpy as np
 
 from ..core.simulate import NodeData
+
+logger = logging.getLogger(__name__)
 
 __all__ = ["dirichlet_partition", "iid_partition", "partition_to_node_data"]
 
@@ -52,10 +55,29 @@ def iid_partition(n_samples: int, n_nodes: int, seed: int = 0) -> List[np.ndarra
 
 
 def partition_to_node_data(
-    x: np.ndarray, y: np.ndarray, parts: List[np.ndarray]
+    x: np.ndarray, y: np.ndarray, parts: List[np.ndarray], strict: bool = False
 ) -> NodeData:
-    """Materialize per-node arrays, truncating to the smallest node (rectangular)."""
+    """Materialize per-node arrays, truncating to the smallest node (rectangular).
+
+    Truncation discards data on skewed partitions (Dirichlet with small
+    omega); the dropped count is logged and recorded on the returned
+    ``NodeData.n_dropped``.  With ``strict=True`` any truncation raises
+    instead of silently discarding samples.
+    """
     n_i = min(len(p) for p in parts)
+    n_dropped = int(sum(len(p) - n_i for p in parts))
+    if n_dropped:
+        total = sum(len(p) for p in parts)
+        if strict:
+            raise ValueError(
+                f"rectangular partition would drop {n_dropped}/{total} samples "
+                f"(smallest node has {n_i}); rebalance the partition or pass "
+                "strict=False"
+            )
+        logger.warning(
+            "partition_to_node_data: dropping %d/%d samples to the smallest "
+            "node size %d", n_dropped, total, n_i,
+        )
     xs = np.stack([x[p[:n_i]] for p in parts])
     ys = np.stack([y[p[:n_i]] for p in parts])
-    return NodeData(x=xs, y=ys)
+    return NodeData(x=xs, y=ys, n_dropped=n_dropped)

@@ -1,0 +1,8 @@
+"""Experiment grid runners over the scenario engine.
+
+``python -m repro.experiments.sweep`` drives algorithm x scenario x tau x
+omega grids through the CPU simulator and/or the sharded runtime, emitting
+per-cell JSON artifacts (history + dense per-round metrics streams) and a
+``summary.jsonl`` — the reproduction path for the paper's iid/non-iid
+comparison tables and the fault-robustness curves.
+"""

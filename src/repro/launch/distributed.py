@@ -29,8 +29,14 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import make_algorithm, ring
-from ..core.algorithm import DecentralizedAlgorithm, make_round_step
-from ..core.mixing import dense_mix, identity_mix, roll_mix
+from ..core.algorithm import DecentralizedAlgorithm, RoundCtx, make_round_step
+from ..core.mixing import (
+    dense_mix,
+    identity_mix,
+    roll_mix,
+    scheduled_dense_mix,
+    scheduled_rotation_mix,
+)
 from ..models import Model, ModelConfig, axis_rules, resolve_specs
 from .sharding import ShardingProfile, cache_specs, profile_for_arch
 
@@ -49,7 +55,14 @@ def _named(mesh, spec_tree):
 
 @dataclasses.dataclass
 class TrainJob:
-    """A compiled-able decentralized training round."""
+    """A compiled-able decentralized training round.
+
+    With ``scenario`` set, ``step_fn`` takes a third per-round argument —
+    the scenario engine's :class:`~repro.core.algorithm.RoundCtx` — and the
+    metrics dict gains the on-device streams (consensus, tracking error,
+    effective spectral gap, active node count).  ``schedule_for`` /
+    ``round_ctx`` materialize and slice the schedule for the driver loop.
+    """
 
     model: Model
     mesh: Any
@@ -59,19 +72,50 @@ class TrainJob:
     round_len: int                    # batches consumed per train_step call
     n_nodes: int
     gossip: str
-    step_fn: Callable                 # (state, batches) -> (state, metrics)
+    step_fn: Callable                 # (state, batches[, ctx]) -> (state, metrics)
     state_shardings: PyTree
     batch_shardings: PyTree
     abstract_state: PyTree
     abstract_batch_fn: Callable       # (seq_len, global_batch) -> batch SDS tree
+    scenario: Any = None
 
     def lower(self, seq_len: int, global_batch: int):
         batches = self.abstract_batch_fn(seq_len, global_batch)
+        args = (self.abstract_state, batches)
+        in_shardings = (self.state_shardings, self.batch_shardings)
+        if self.scenario is not None:
+            args = args + (self.abstract_ctx(),)
+            in_shardings = in_shardings + (None,)
         return jax.jit(
             self.step_fn,
-            in_shardings=(self.state_shardings, self.batch_shardings),
+            in_shardings=in_shardings,
             out_shardings=(self.state_shardings, None),
-        ).lower(self.abstract_state, batches)
+        ).lower(*args)
+
+    # ---- scenario plumbing ------------------------------------------------
+    def schedule_for(self, n_rounds: int):
+        """Materialize the scenario's per-round arrays for a driver loop."""
+        if self.scenario is None:
+            raise ValueError("job has no scenario")
+        return self.scenario.materialize(self.n_nodes, n_rounds, self.round_len)
+
+    def round_ctx(self, schedule, r: int) -> RoundCtx:
+        """The (replicated) RoundCtx of round ``r`` of a materialized schedule."""
+        return RoundCtx(
+            w=jnp.asarray(schedule.w[r]),
+            active=jnp.asarray(schedule.active[r]),
+            local_mask=jnp.asarray(schedule.local_mask[r]),
+            pattern=jnp.asarray(schedule.pattern[r]),
+        )
+
+    def abstract_ctx(self) -> RoundCtx:
+        n, L = self.n_nodes, max(self.round_len - 1, 1)
+        return RoundCtx(
+            w=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            active=jax.ShapeDtypeStruct((n,), jnp.bool_),
+            local_mask=jax.ShapeDtypeStruct((L, n), jnp.bool_),
+            pattern=jax.ShapeDtypeStruct((), jnp.int32),
+        )
 
     def init_state(self, key) -> PyTree:
         """Materialized initial state (small models / tests)."""
@@ -105,12 +149,20 @@ def make_train_job(
     state_dtype=jnp.float32,
     grad_accum: int = 1,
     algorithm_kwargs: Optional[Dict[str, Any]] = None,
+    scenario=None,
 ) -> TrainJob:
     """Build a sharded decentralized training round for ANY registered
     algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
     ready ``DecentralizedAlgorithm`` instance); cadence, round length and the
     reset gradient are taken from its declarative ``CommSpec`` — the same
-    executor the CPU simulator uses, compiled onto the mesh."""
+    executor the CPU simulator uses, compiled onto the mesh.
+
+    With a ``scenario`` (``repro.scenarios.Scenario``), the train step
+    consumes a per-round :class:`RoundCtx` and gossips over the scenario's
+    time-varying W_t: shift-structured schedules with W-preserving faults map
+    onto a static set of collective-permute rotations selected by
+    ``ctx.pattern`` (``gossip="roll"``); everything else falls back to the
+    dense scheduled contraction with the scanned W_t."""
     profile = profile or profile_for_arch(cfg.name)
     node_axes = profile.node_axes(mesh)
     n_nodes = profile.n_nodes(mesh)
@@ -127,7 +179,22 @@ def make_train_job(
         )
     round_len = alg.comm.round_len(getattr(alg, "tau", 1))
 
-    if n_nodes == 1:
+    if scenario is not None:
+        scenario.warn_if_vacuous(round_len, runtime_batches=True)
+        rotations = (
+            None
+            if scenario.mutates_w or n_nodes == 1
+            else scenario.topology_schedule(n_nodes).rotations()
+        )
+        if n_nodes == 1:
+            mix_fn = lambda tree, ctx: tree
+        elif gossip == "roll" and rotations:
+            mix_fn = scheduled_rotation_mix(rotations)
+        elif gossip in ("roll", "dense"):
+            mix_fn = scheduled_dense_mix()
+        else:
+            raise ValueError(gossip)
+    elif n_nodes == 1:
         mix_fn = identity_mix
     elif gossip == "dense":
         mix_fn = dense_mix(topology.w)
@@ -168,47 +235,77 @@ def make_train_job(
         total, _ = lax.scan(body, zero, mbs)
         return jax.tree.map(lambda t, pp: (t / grad_accum).astype(pp.dtype), total, p)
 
-    def train_step(state, batches):
-        with axis_rules(rules, mesh, param_rules=param_rules):
-            loss_cell = []
+    def _make_comm_grad(loss_cell):
+        def comm_grad(p, b):
+            """Gradient for the communication step, capturing the metrics
+            loss (only traced OUTSIDE the local-update scan)."""
+            if grad_accum > 1:
+                # metrics loss from the first microbatch (cheap); grads
+                # accumulate over all microbatches
+                mb0 = jax.tree.map(lambda x: x[:, : x.shape[1] // grad_accum], b)
+                loss_cell.append(vloss(p, mb0).mean())
+                return vgrad(p, b)
+            losses, grads = jax.vmap(jax.value_and_grad(node_loss))(p, b)
+            loss_cell.append(losses.mean())
+            return grads
 
-            def comm_grad(p, b):
-                """Gradient for the communication step, capturing the metrics
-                loss (only traced OUTSIDE the local-update scan)."""
-                if grad_accum > 1:
-                    # metrics loss from the first microbatch (cheap); grads
-                    # accumulate over all microbatches
-                    mb0 = jax.tree.map(lambda x: x[:, : x.shape[1] // grad_accum], b)
-                    loss_cell.append(vloss(p, mb0).mean())
-                    return vgrad(p, b)
-                losses, grads = jax.vmap(jax.value_and_grad(node_loss))(p, b)
-                loss_cell.append(losses.mean())
-                return grads
+        return comm_grad
 
-            round_step, _ = make_round_step(
-                alg, mix_fn, grad_of_batch=vgrad, comm_grad_of_batch=comm_grad
-            )
-            state = round_step(state, batches)
-            direction = next(
-                (
-                    getattr(state, name)
-                    for name in ("v", "m", "u", "y")
-                    if getattr(state, name, None) is not None
-                ),
-                None,
-            )
-            metrics = {
-                "loss": loss_cell[0] if loss_cell else jnp.zeros(()),
-                "v_norm": (
-                    sum(
-                        jnp.sum(v.astype(jnp.float32) ** 2)
-                        for v in jax.tree.leaves(direction)
-                    )
-                    if direction is not None
-                    else jnp.zeros(())
-                ),
-            }
-            return state, metrics
+    def _base_metrics(state, loss_cell):
+        direction = next(
+            (
+                getattr(state, name)
+                for name in ("v", "m", "u", "y")
+                if getattr(state, name, None) is not None
+            ),
+            None,
+        )
+        return {
+            "loss": loss_cell[0] if loss_cell else jnp.zeros(()),
+            "v_norm": (
+                sum(
+                    jnp.sum(v.astype(jnp.float32) ** 2)
+                    for v in jax.tree.leaves(direction)
+                )
+                if direction is not None
+                else jnp.zeros(())
+            ),
+        }
+
+    if scenario is None:
+
+        def train_step(state, batches):
+            with axis_rules(rules, mesh, param_rules=param_rules):
+                loss_cell = []
+                round_step, _ = make_round_step(
+                    alg, mix_fn, grad_of_batch=vgrad,
+                    comm_grad_of_batch=_make_comm_grad(loss_cell),
+                )
+                state = round_step(state, batches)
+                return state, _base_metrics(state, loss_cell)
+
+    else:
+        from ..scenarios.metrics import make_stream_fn  # lazy: launch <- scenarios
+
+        # runtime reference: the buffer mean (no full-batch closure here)
+        stream_fn = make_stream_fn(
+            buffer_name=getattr(alg, "tracking_buffer", None)
+        )
+
+        def train_step(state, batches, ctx):
+            with axis_rules(rules, mesh, param_rules=param_rules):
+                loss_cell = []
+                round_step, _ = make_round_step(
+                    alg, mix_fn, grad_of_batch=vgrad,
+                    comm_grad_of_batch=_make_comm_grad(loss_cell),
+                    scheduled=True,
+                    gate_local=scenario.needs_local_gate,
+                    gate_active=scenario.needs_active_gate,
+                )
+                state = round_step(state, batches, ctx)
+                metrics = _base_metrics(state, loss_cell)
+                metrics.update(stream_fn(state, ctx))
+                return state, metrics
 
     # ---- abstract state (dry-run, no allocation) + shardings ----
     # The state layout is derived generically: every algorithm state is a
@@ -279,6 +376,7 @@ def make_train_job(
         batch_shardings=batch_shardings,
         abstract_state=abstract_state,
         abstract_batch_fn=abstract_batch_fn,
+        scenario=scenario,
     )
 
 

@@ -1,0 +1,61 @@
+"""Scenario engine: time-varying topologies, node faults, client jitter.
+
+Composes three orthogonal axes into a declarative :class:`Scenario`:
+
+  * **topology schedules** (``schedules``) — per-round mixing matrices W_t:
+    static graphs, randomized one-peer gossip, symmetric exponential strides,
+    periodic ring<->torus switching;
+  * **fault models** (``faults``) — stragglers (skipped local steps), node
+    dropout (self-loop renormalized W_t) and link drops;
+  * **client heterogeneity** (``heterogeneity``) — per-node batch-size and
+    local-step jitter layered on the Dirichlet partitioner.
+
+``Scenario.materialize`` emits the per-round :class:`Schedule` arrays both
+execution engines scan over (``repro.core.Simulator`` and
+``repro.launch.distributed.make_train_job``), and ``metrics`` provides the
+on-device per-round streams (consensus distance, tracking error, effective
+spectral gap).  ``SCENARIOS`` is the preset registry; the grid runner
+``python -m repro.experiments.sweep`` drives algorithm x scenario x tau x
+omega grids through either engine.
+"""
+from .schedules import (
+    TOPOLOGY_SCHEDULES,
+    ExponentialSchedule,
+    OnePeerRandom,
+    PeriodicSwitch,
+    StaticSchedule,
+    TopologySchedule,
+    make_topology_schedule,
+    torus_dims,
+)
+from .faults import (
+    FAULT_MODELS,
+    Dropout,
+    FaultModel,
+    LinkDrop,
+    Stragglers,
+    make_fault,
+    renormalize_dropout,
+    renormalize_link_drop,
+)
+from .heterogeneity import ClientJitter, uniform_profile
+from .scenario import SCENARIOS, Scenario, Schedule, make_scenario, register_scenario
+from .metrics import (
+    STREAM_FIELDS,
+    effective_spectral_gap,
+    make_stream_fn,
+    masked_consensus,
+    tracking_error,
+)
+
+__all__ = [
+    "Scenario", "Schedule", "SCENARIOS", "make_scenario", "register_scenario",
+    "TopologySchedule", "StaticSchedule", "OnePeerRandom",
+    "ExponentialSchedule", "PeriodicSwitch", "TOPOLOGY_SCHEDULES",
+    "make_topology_schedule", "torus_dims",
+    "FaultModel", "Stragglers", "Dropout", "LinkDrop", "FAULT_MODELS",
+    "make_fault", "renormalize_dropout", "renormalize_link_drop",
+    "ClientJitter", "uniform_profile",
+    "STREAM_FIELDS", "make_stream_fn", "masked_consensus", "tracking_error",
+    "effective_spectral_gap",
+]

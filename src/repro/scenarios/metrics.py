@@ -1,0 +1,166 @@
+"""On-device per-round metrics streams.
+
+The pre-scenario engines only observed training at host-side ``evaluate``
+snapshots; these helpers compute the paper-facing diagnostics *inside* the
+scanned round loop, so a run emits dense per-round streams at device speed:
+
+  * ``consensus``     — ||X - X̄||_F² over active nodes (paper's consensus
+                        distance; inactive nodes are excluded so a dropped
+                        node's frozen iterate doesn't pollute the stream).
+  * ``tracking_err``  — Σ_i ||b_i − g*||² of the algorithm's DECLARED
+                        gradient-direction buffer (``DecentralizedAlgorithm.
+                        tracking_buffer``: v for the DSE family, y for the
+                        gradient-tracking methods; NaN for methods whose
+                        buffers are not gradient-scale).  In the simulator
+                        g* = ∇f(x̄) (the exact full-batch gradient at the
+                        node mean); engines without a full-batch closure use
+                        g* = b̄ (the buffer mean — which tracks the global
+                        gradient by construction for GT methods).
+  * ``spectral_gap``  — effective λ_t of the round's active block,
+                        max|eig|(diag(a) W_t diag(a) − a aᵀ/|a|) — equals
+                        ``core.topology.spectral_gap(W_t)`` when all nodes
+                        are active.
+  * ``active_nodes``  — |a| (dropout visibility).
+
+All functions are pure jnp and scan/jit compatible.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.simulate import node_mean
+
+PyTree = Any
+
+__all__ = [
+    "STREAM_FIELDS",
+    "masked_consensus",
+    "tracking_buffer",
+    "tracking_error",
+    "effective_spectral_gap",
+    "make_stream_fn",
+]
+
+STREAM_FIELDS = ("consensus", "tracking_err", "spectral_gap", "active_nodes")
+
+
+def masked_consensus(tree: PyTree, active: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Σ_{i active} ||x_i - x̄_active||² over the whole pytree."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    a = (
+        jnp.ones((n,), jnp.float32)
+        if active is None
+        else active.astype(jnp.float32)
+    )
+    k = jnp.maximum(a.sum(), 1.0)
+
+    def one(x):
+        xf = x.astype(jnp.float32).reshape(n, -1)
+        mean = (a @ xf) / k
+        d = (xf - mean[None]) * a[:, None]
+        return jnp.sum(d * d)
+
+    return sum(one(x) for x in leaves)
+
+
+def tracking_buffer(state, name: Optional[str]) -> Optional[PyTree]:
+    """The algorithm's declared gradient-direction buffer, if any."""
+    if name is None:
+        return None
+    return getattr(state, name, None)
+
+
+def tracking_error(
+    state,
+    active: Optional[jnp.ndarray],
+    grad_at_mean: Optional[Callable[[PyTree], PyTree]] = None,
+    buffer_name: Optional[str] = None,
+) -> jnp.ndarray:
+    """Σ_{i active} ||b_i − g*||² of the declared gradient-direction buffer
+    (NaN when the algorithm declares none).
+
+    ``grad_at_mean`` maps the node-mean params x̄ to the reference gradient
+    ∇f(x̄); when None, the active-mean of the buffer itself is the reference.
+    """
+    buf = tracking_buffer(state, buffer_name)
+    if buf is None:
+        return jnp.float32(jnp.nan)
+    leaves = jax.tree.leaves(buf)
+    n = leaves[0].shape[0]
+    a = (
+        jnp.ones((n,), jnp.float32)
+        if active is None
+        else active.astype(jnp.float32)
+    )
+    k = jnp.maximum(a.sum(), 1.0)
+    if grad_at_mean is not None:
+        xbar = node_mean(state.params)
+        ref = grad_at_mean(xbar)
+        ref_leaves = [r.astype(jnp.float32).reshape(-1) for r in jax.tree.leaves(ref)]
+    else:
+        ref_leaves = [
+            (a @ x.astype(jnp.float32).reshape(n, -1)) / k for x in leaves
+        ]
+
+    total = jnp.float32(0.0)
+    for x, r in zip(leaves, ref_leaves):
+        xf = x.astype(jnp.float32).reshape(n, -1)
+        d = (xf - r[None]) * a[:, None]
+        total = total + jnp.sum(d * d)
+    return total
+
+
+def effective_spectral_gap(
+    w: jnp.ndarray, active: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """λ_t = max|eig|(diag(a) W diag(a) − a aᵀ / |a|), on-device.
+
+    W is symmetric, so eigvalsh gives the spectral norm exactly; masking
+    inactive rows/cols contributes zero eigenvalues, which never exceed the
+    active block's gap for a connected active graph."""
+    w = w.astype(jnp.float32)
+    n = w.shape[0]
+    a = (
+        jnp.ones((n,), jnp.float32)
+        if active is None
+        else active.astype(jnp.float32)
+    )
+    k = jnp.maximum(a.sum(), 1.0)
+    m = w * a[:, None] * a[None, :] - jnp.outer(a, a) / k
+    return jnp.max(jnp.abs(jnp.linalg.eigvalsh(m)))
+
+
+def make_stream_fn(
+    grad_at_mean: Optional[Callable[[PyTree], PyTree]] = None,
+    buffer_name: Optional[str] = None,
+):
+    """Build the per-round stream function ``(state, ctx) -> dict``.
+
+    ``buffer_name`` is the algorithm's declared ``tracking_buffer``.  The
+    returned dict (one scalar per field in :data:`STREAM_FIELDS`) is emitted
+    as the ys of the engines' round scan — shape (R,) per field after the
+    scan."""
+
+    def stream(state, ctx) -> dict:
+        active = ctx.active
+        n = jax.tree.leaves(state.params)[0].shape[0]
+        return {
+            "consensus": masked_consensus(state.params, active),
+            "tracking_err": tracking_error(state, active, grad_at_mean, buffer_name),
+            "spectral_gap": (
+                effective_spectral_gap(ctx.w, active)
+                if ctx.w is not None
+                else jnp.float32(jnp.nan)
+            ),
+            "active_nodes": (
+                active.astype(jnp.float32).sum()
+                if active is not None
+                else jnp.float32(n)
+            ),
+        }
+
+    return stream

@@ -1,0 +1,371 @@
+"""Scenario engine tests.
+
+  * property tests (Assumption 5 per round): every W_t emitted by every
+    registered topology schedule is symmetric, doubly stochastic and
+    nonnegative, with spectral gap < 1 whenever the round's (active) graph
+    is connected; dropout/link-drop renormalization preserves row/col sums;
+  * the degenerate scenario (static ring, no faults, uniform clients) is
+    BIT-IDENTICAL to the plain Simulator for all 8 registered algorithms —
+    the PR-1 equivalence guarantee survives the executor-contract change;
+  * fault scenarios run end-to-end with dense per-round metrics streams;
+  * heterogeneity batch jitter is shape-static and honest;
+  * partition_to_node_data reports dropped samples / strict mode;
+  * the sweep grid runner emits per-cell artifacts with the stream schema.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import ALGORITHMS, Simulator, make_algorithm, ring
+from repro.core.topology import spectral_gap
+from repro.data import dirichlet_partition, make_classification, partition_to_node_data
+from repro.scenarios import (
+    SCENARIOS,
+    TOPOLOGY_SCHEDULES,
+    ClientJitter,
+    Scenario,
+    make_fault,
+    make_scenario,
+    make_topology_schedule,
+    renormalize_dropout,
+    renormalize_link_drop,
+)
+
+N_NODES = 4
+DIM, CLASSES = 8, 3
+
+
+def make_data(n_nodes=N_NODES, seed=0):
+    x, y = make_classification(400, DIM, CLASSES, seed=seed, class_sep=2.0)
+    parts = dirichlet_partition(y, n_nodes, omega=0.5, seed=seed, min_per_node=10)
+    return partition_to_node_data(x, y, parts)
+
+
+def loss_fn(params, batch):
+    xb, yb = batch
+    logits = xb @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, yb[..., None], axis=-1).mean()
+
+
+def init_params():
+    return {"w": jnp.zeros((DIM, CLASSES), jnp.float32), "b": jnp.zeros(CLASSES)}
+
+
+def _connected(w: np.ndarray, atol=1e-12) -> bool:
+    """BFS over the graph induced by off-diagonal W entries."""
+    n = w.shape[0]
+    adj = (np.abs(w) > atol) & ~np.eye(n, dtype=bool)
+    seen, frontier = {0}, [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.flatnonzero(adj[i]):
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == n
+
+
+# ---------------------------------------------------------------- properties
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from(sorted(TOPOLOGY_SCHEDULES)),
+    st.integers(2, 12),
+    st.integers(0, 1000),
+)
+def test_every_schedule_w_satisfies_assumption_5(name, n, seed):
+    """Every W_t: symmetric, doubly stochastic, nonnegative; gap < 1 when the
+    round graph is connected (one-peer rounds are legitimately disconnected —
+    only the union graph mixes)."""
+    sched = make_topology_schedule(name, n)
+    rng = np.random.default_rng(seed)
+    w, pattern = sched.generate(6, rng)
+    assert w.shape == (6, n, n) and pattern.shape == (6,)
+    for r in range(6):
+        wr = w[r].astype(np.float64)
+        np.testing.assert_allclose(wr, wr.T, atol=1e-6)
+        np.testing.assert_allclose(wr.sum(0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(wr.sum(1), 1.0, atol=1e-5)
+        assert (wr >= -1e-9).all()
+        if _connected(wr):
+            assert spectral_gap(wr) < 1.0 - 1e-9 or n == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 16), st.integers(0, 10_000))
+def test_dropout_renormalization_preserves_stochasticity(n, seed):
+    rng = np.random.default_rng(seed)
+    w = ring(n).w
+    active = rng.random(n) >= 0.3
+    w2 = renormalize_dropout(w, active)
+    np.testing.assert_allclose(w2, w2.T, atol=1e-12)
+    np.testing.assert_allclose(w2.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w2.sum(1), 1.0, atol=1e-12)
+    # inactive rows are identity; the active block is doubly stochastic alone
+    for i in np.flatnonzero(~active):
+        e = np.zeros(n); e[i] = 1.0
+        np.testing.assert_allclose(w2[i], e, atol=1e-12)
+    sub = w2[np.ix_(active, active)]
+    if sub.size:
+        np.testing.assert_allclose(sub.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(sub.sum(1), 1.0, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 16), st.integers(0, 10_000), st.floats(0.0, 1.0))
+def test_link_drop_renormalization_preserves_stochasticity(n, seed, p):
+    rng = np.random.default_rng(seed)
+    w = ring(n).w
+    dropped = rng.random((n, n)) < p
+    w2 = renormalize_link_drop(w, dropped)
+    np.testing.assert_allclose(w2, w2.T, atol=1e-12)
+    np.testing.assert_allclose(w2.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w2.sum(1), 1.0, atol=1e-12)
+    assert (w2 >= -1e-12).all()
+
+
+def test_materialized_scenarios_all_valid():
+    """Every registered preset materializes to valid per-round arrays."""
+    for name, sc in SCENARIOS.items():
+        sched = sc.materialize(8, 5, 4, batch_size=32)
+        assert sched.w.shape == (5, 8, 8)
+        assert sched.active.shape == (5, 8)
+        assert sched.local_mask.shape == (5, 3, 8)
+        for r in range(5):
+            wr = sched.w[r].astype(np.float64)
+            np.testing.assert_allclose(wr, wr.T, atol=1e-5)
+            np.testing.assert_allclose(wr.sum(0), 1.0, atol=1e-4)
+        # same seed -> same schedule (reproducibility)
+        again = sc.materialize(8, 5, 4, batch_size=32)
+        np.testing.assert_array_equal(sched.w, again.w)
+        np.testing.assert_array_equal(sched.active, again.active)
+        np.testing.assert_array_equal(sched.local_mask, again.local_mask)
+
+
+# ---------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_degenerate_scenario_bit_identical(name):
+    """Static topology + no faults + uniform clients == the plain Simulator,
+    bit for bit, for every registered algorithm."""
+    data = make_data()
+    alg = make_algorithm(name, lr=0.15, tau=4, alpha=0.2)
+    params, key = init_params(), jax.random.key(42)
+
+    ref = Simulator(alg, ring(N_NODES), loss_fn, data, batch_size=8)
+    out_ref = ref.run(params, key, num_steps=8)["state"]
+
+    sim = Simulator(
+        alg, ring(N_NODES), loss_fn, data, batch_size=8,
+        scenario=make_scenario("baseline"),
+    )
+    out = sim.run(params, key, num_steps=8)
+    for a, b in zip(
+        jax.tree.leaves(out_ref.params), jax.tree.leaves(out["state"].params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the streams are emitted alongside (observation, not perturbation)
+    assert set(out["streams"]) == {
+        "consensus", "tracking_err", "spectral_gap", "active_nodes"
+    }
+    n_rounds = 8 // sim.round_len  # one stream entry per communication round
+    assert all(len(v) == n_rounds for v in out["streams"].values())
+
+
+@pytest.mark.parametrize("scen", ["dropout_ring", "straggler_ring", "one_peer"])
+def test_fault_scenarios_run_with_streams(scen):
+    data = make_data(n_nodes=8)
+    alg = make_algorithm("dse_mvr", lr=0.15, tau=4, alpha=0.2)
+    sim = Simulator(alg, None, loss_fn, data, batch_size=8,
+                    scenario=make_scenario(scen))
+    out = sim.run(init_params(), jax.random.key(0), num_steps=16, eval_every=16)
+    assert np.isfinite(out["history"][-1]["train_loss"])
+    s = out["streams"]
+    assert all(len(v) == 4 for v in s.values())
+    assert np.isfinite(s["consensus"]).all()
+    assert (s["active_nodes"] >= 1).all() and (s["active_nodes"] <= 8).all()
+    if scen == "dropout_ring":
+        assert s["active_nodes"].min() < 8  # the fault actually fired
+
+
+def test_straggler_on_every_step_algorithm_warns():
+    """Stragglers skip LOCAL steps; every-step methods have none, so the
+    scenario degenerates to fault-free — the engine must say so.  Dropout is
+    a round-level fault that still applies at round_len=1: no warning."""
+    data = make_data()
+    with pytest.warns(RuntimeWarning, match="round_len=1"):
+        Simulator(
+            make_algorithm("dsgd", lr=0.15), ring(N_NODES), loss_fn, data,
+            batch_size=8, scenario=make_scenario("straggler_ring"),
+        )
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", RuntimeWarning)
+        Simulator(
+            make_algorithm("dsgd", lr=0.15), ring(N_NODES), loss_fn, data,
+            batch_size=8, scenario=make_scenario("dropout_ring"),
+        )
+
+
+def test_straggler_scenario_changes_iterates():
+    """Masked local steps must actually alter training (not a no-op gate)."""
+    data = make_data()
+    alg = make_algorithm("dlsgd", lr=0.15, tau=4)
+    base = Simulator(alg, ring(N_NODES), loss_fn, data, batch_size=8,
+                     scenario=make_scenario("baseline"))
+    strag = Simulator(alg, ring(N_NODES), loss_fn, data, batch_size=8,
+                      scenario=make_scenario("straggler_ring"))
+    p0 = base.run(init_params(), jax.random.key(1), num_steps=8)["state"].params
+    p1 = strag.run(init_params(), jax.random.key(1), num_steps=8)["state"].params
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1))
+    )
+
+
+def test_topology_scenario_mismatch_rejected():
+    """An explicit topology that disagrees with the scenario's schedule would
+    be silently ignored (only the scheduled path runs) — must raise."""
+    from repro.core import torus
+
+    data = make_data()
+    with pytest.raises(ValueError, match="disagrees"):
+        Simulator(
+            make_algorithm("dlsgd", lr=0.1, tau=2), torus(2, 2), loss_fn, data,
+            batch_size=8, scenario=make_scenario("one_peer"),
+        )
+
+
+def test_tracking_err_uses_declared_buffer():
+    """tracking_err compares the DECLARED gradient-direction buffer (v for
+    DSE — its y tracks displacement, scale ~lr*tau; y for GT methods) and is
+    NaN for methods that declare none."""
+    from repro.core import ALGORITHMS
+
+    assert ALGORITHMS["dse_mvr"].tracking_buffer == "v"
+    assert ALGORITHMS["gt_dsgd"].tracking_buffer == "y"
+    assert ALGORITHMS["slowmo_d"].tracking_buffer is None
+    data = make_data()
+    sim = Simulator(
+        make_algorithm("slowmo_d", lr=0.15, tau=2), None, loss_fn, data,
+        batch_size=8, scenario=make_scenario("baseline"),
+    )
+    out = sim.run(init_params(), jax.random.key(0), num_steps=4)
+    assert np.isnan(out["streams"]["tracking_err"]).all()
+
+
+# ---------------------------------------------------------------- jitter
+def test_batch_jitter_identity_when_full():
+    """b_i == batch_size must reproduce the uniform sampler bit-for-bit."""
+    data = make_data()
+    key = jax.random.key(3)
+    xb0, yb0 = data.sample(key, 8)
+    xb1, yb1 = data.sample(key, 8, node_batch_sizes=np.full(N_NODES, 8))
+    np.testing.assert_array_equal(np.asarray(xb0), np.asarray(xb1))
+    np.testing.assert_array_equal(np.asarray(yb0), np.asarray(yb1))
+
+
+def test_batch_jitter_tiles_small_batches():
+    data = make_data()
+    key = jax.random.key(4)
+    bs = np.array([2, 8, 4, 1])
+    xb, _ = data.sample(key, 8, node_batch_sizes=bs)
+    xb = np.asarray(xb)
+    # node 3 has b=1: all 8 slots identical; node 0 has b=2: slots repeat mod 2
+    assert (xb[3] == xb[3][0]).all()
+    np.testing.assert_array_equal(xb[0][::2], np.broadcast_to(xb[0][0], xb[0][::2].shape))
+
+
+def test_client_jitter_validation():
+    with pytest.raises(ValueError):
+        ClientJitter(batch_frac_range=(0.0, 1.0))
+    with pytest.raises(ValueError):
+        ClientJitter(step_skip=1.0)
+
+
+# ---------------------------------------------------------------- partition
+def test_partition_reports_dropped_and_strict():
+    x, y = make_classification(300, DIM, CLASSES, seed=1, class_sep=2.0)
+    parts = dirichlet_partition(y, 4, omega=0.3, seed=1, min_per_node=5)
+    sizes = [len(p) for p in parts]
+    expected_drop = sum(s - min(sizes) for s in sizes)
+    data = partition_to_node_data(x, y, parts)
+    assert data.n_dropped == expected_drop
+    if expected_drop:
+        with pytest.raises(ValueError):
+            partition_to_node_data(x, y, parts, strict=True)
+    # an exact partition drops nothing and passes strict
+    even = [np.arange(i, 300, 4) for i in range(4)]
+    assert partition_to_node_data(x, y, even, strict=True).n_dropped == 0
+
+
+# ---------------------------------------------------------------- registry
+def test_scenario_registry_and_overrides():
+    assert {"baseline", "one_peer", "exponential", "ring_torus",
+            "dropout_ring", "straggler_ring", "lossy_links"} <= set(SCENARIOS)
+    assert len(TOPOLOGY_SCHEDULES) >= 4
+    sc = make_scenario("dropout_ring", seed=7)
+    assert sc.seed == 7 and SCENARIOS["dropout_ring"].seed == 0
+    with pytest.raises(ValueError):
+        make_scenario("nope")
+    cfg = sc.to_config()
+    json.dumps(cfg)  # artifact-serializable
+    assert cfg["faults"][0]["name"] == "dropout"
+    assert make_scenario("baseline").is_degenerate()
+    assert not make_scenario("hostile").is_degenerate()
+    # gate flags are statically derived from the spec
+    assert not make_scenario("baseline").needs_local_gate
+    assert make_scenario("straggler_ring").needs_local_gate
+    assert not make_scenario("straggler_ring").needs_active_gate
+    assert make_scenario("dropout_ring").needs_active_gate
+
+
+def test_custom_scenario_composes():
+    sc = Scenario(
+        name="custom",
+        topology="exponential",
+        faults=(make_fault("stragglers", p=0.5),),
+        jitter=ClientJitter(batch_frac_range=(0.5, 1.0)),
+        seed=11,
+    )
+    sched = sc.materialize(8, 4, 3, batch_size=16)
+    assert sched.local_mask.mean() < 1.0
+    assert sched.batch_sizes is not None and (sched.batch_sizes >= 8).all()
+    # stragglers don't rewrite W_t, so the runtime keeps rotation gossip
+    assert not sc.mutates_w
+    assert sc.topology_schedule(8).rotations() is not None
+
+
+# ---------------------------------------------------------------- sweep
+def test_sweep_runner_emits_artifacts(tmp_path):
+    from repro.experiments.sweep import main
+
+    rows = main([
+        "--algorithms", "dse_mvr",
+        "--scenarios", "baseline,dropout_ring",
+        "--taus", "2",
+        "--omegas", "iid",
+        "--engines", "sim",
+        "--nodes", "4",
+        "--rounds", "3",
+        "--samples", "200",
+        "--out", str(tmp_path / "sweep"),
+        "--bench-out", str(tmp_path / "BENCH_scenarios.json"),
+    ])
+    assert len(rows) == 2
+    cells = sorted((tmp_path / "sweep" / "cells").glob("*.json"))
+    assert len(cells) == 2
+    for cell_file in cells:
+        art = json.loads(cell_file.read_text())
+        assert {"cell", "history", "streams", "schedule_gaps", "final"} <= set(art)
+        for fld in ("consensus", "tracking_err", "spectral_gap", "active_nodes"):
+            assert len(art["streams"][fld]) == 3  # dense per-round streams
+        assert np.isfinite(art["final"]["train_loss"])
+    summary = (tmp_path / "sweep" / "summary.jsonl").read_text().strip().splitlines()
+    assert len(summary) == 2
+    bench = json.loads((tmp_path / "BENCH_scenarios.json").read_text())
+    assert len(bench) == 2 and bench[0]["bench"] == "scenarios_sweep"
