@@ -116,6 +116,34 @@ def bench_eval_path(rows, sim, state, n_evals: int = 64):
         })
 
 
+def bench_fused_round(rows, data, top, steps, tau, batch_size, unfused_wall_s):
+    """Fused-op backend vs per-leaf jnp round step: the SAME scanned executor
+    driving DSE-MVR with use_fused=True (bucketed tree_apply launches — on
+    CPU the bucketed-ref path, one fused XLA computation per op per step)
+    against the per-leaf jnp arithmetic timed above."""
+    alg = make_algorithm("dse_mvr", lr=0.2, alpha=0.1, tau=tau, use_fused=True)
+    sim = Simulator(alg, top, _loss, data, batch_size=batch_size)
+    out = sim.run(_params(), jax.random.key(0), num_steps=steps)  # compile
+    jax.block_until_ready(out["state"].params)
+    t0 = time.perf_counter()
+    out = sim.run(_params(), jax.random.key(1), num_steps=steps)
+    jax.block_until_ready(out["state"].params)
+    fused_s = time.perf_counter() - t0
+    n_rounds = steps // tau
+    rows.append({
+        "bench": "executor",
+        "name": "executor/fused_round_step",
+        "method": "dse_mvr",
+        "use_fused": True,
+        "tau": tau,
+        "steps": steps,
+        "us_per_call": fused_s / max(n_rounds, 1) * 1e6,
+        "us_per_step": fused_s / steps * 1e6,
+        "wall_s": round(fused_s, 4),
+        "speedup_vs_unfused": round(unfused_wall_s / fused_s, 2),
+    })
+
+
 def run(steps: int = 512, tau: int = 4, batch_size: int = 32):
     data = _problem()
     top = ring(N_NODES)
@@ -153,6 +181,7 @@ def run(steps: int = 512, tau: int = 4, batch_size: int = 32):
             "speedup_vs_python_dispatch": round(legacy_s / wall, 2),
         })
 
+    bench_fused_round(rows, data, top, steps, tau, batch_size, scanned_s)
     bench_eval_path(rows, sim, out["state"])
 
     os.makedirs("benchmarks/results", exist_ok=True)
@@ -163,5 +192,8 @@ def run(steps: int = 512, tau: int = 4, batch_size: int = 32):
 
 if __name__ == "__main__":
     for r in run():
-        speedup = r.get("speedup_vs_python_dispatch", r.get("speedup_vs_retrace"))
+        speedup = r.get(
+            "speedup_vs_python_dispatch",
+            r.get("speedup_vs_retrace", r.get("speedup_vs_unfused")),
+        )
         print(r["name"], f"{r['us_per_call']:.0f} us/call", f"x{speedup}")

@@ -1,9 +1,24 @@
-"""Kernel microbenchmarks: us_per_call for each Pallas kernel vs its oracle.
+"""Fused-op registry microbenchmarks -> benchmarks/results/BENCH_kernels.json.
 
-On this CPU container the kernels run in interpret mode (Python emulation),
-so wall times are NOT TPU estimates — the 'derived' column reports the
-analytic bytes/flops the kernel moves, which is the hardware-independent
-content.  Oracle timings use the jit'd jnp path.
+Iterates ``repro.kernels.api.REGISTRY``.  For every ELEMENTWISE op, three
+execution shapes of the same tree-wide update are timed on a synthetic
+parameter pytree (mixed leaf sizes, one dtype):
+
+  * ``ref_xla_per_leaf``   — the pre-redesign shape: one jnp ``ref_fn``
+                             application per leaf (one XLA fusion each);
+  * ``bucketed_ref``       — the fused-op API's off-TPU path: leaves raveled,
+                             concatenated and padded, ONE fused XLA
+                             computation for the whole tree;
+  * ``bucketed_interpret`` — the Pallas kernel body through the interpreter
+                             on a small buffer (Python emulation: validates
+                             the launch path; its wall time is NOT a TPU
+                             estimate).
+
+Shaped ops (flash_attention, rms_norm, wkv_chunk) report their oracle-XLA
+wall time.  The hardware-independent content is the ``derived_*`` bytes/flops
+model per op: elementwise fused ops move (n_inputs + n_outputs) * 4 bytes per
+element in one pass, which at TPU HBM bandwidth gives the derived round-trip
+time the bucketed launch targets.
 """
 from __future__ import annotations
 
@@ -12,51 +27,157 @@ import time
 import jax
 import jax.numpy as jnp
 
+HBM_BW = 819e9   # bytes/s, v4-gen HBM (roofline convention used repo-wide)
 
-def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.time()
+# synthetic "parameter tree": mixed leaf sizes, ~1M elements total
+TREE_SHAPES = [(512, 512), (1024,), (256, 384), (3, 7, 11), (640000,)]
+INTERPRET_N = 1 << 14   # small flat buffer for the interpret-path row
+
+# per-op scalar operands; ops not listed fall back to 0.05 per scalar slot,
+# so newly registered ops bench without editing this file
+SCALARS = {
+    "axpby": (-0.1, 1.0),
+}
+
+
+def _scalars_for(name, op):
+    return SCALARS.get(name, (0.05,) * op.n_scalars)
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _tree(key, n_inputs, shapes=TREE_SHAPES):
+    trees = []
+    for t in range(n_inputs):
+        k = jax.random.fold_in(key, t)
+        trees.append(
+            {
+                f"l{i}": jax.random.normal(jax.random.fold_in(k, i), shp)
+                for i, shp in enumerate(shapes)
+            }
+        )
+    return trees
+
+
+def _elementwise_rows(name, op, api):
+    rows = []
+    scalars = _scalars_for(name, op)
+    trees = _tree(jax.random.key(17), op.n_inputs)
+    n_elems = sum(l.size for l in jax.tree.leaves(trees[0]))
+    derived = {
+        "derived_gb_moved": round(
+            (op.n_inputs + op.n_outputs) * n_elems * 4 / 1e9, 4
+        ),
+        "derived_tpu_us_at_hbm_bw": round(
+            (op.n_inputs + op.n_outputs) * n_elems * 4 / HBM_BW * 1e6, 1
+        ),
+        "n_leaves": len(TREE_SHAPES),
+        "n_elems": n_elems,
+    }
+
+    per_leaf = jax.jit(
+        lambda ts: jax.tree.map(lambda *ls: op.ref_fn(*ls, *scalars), *ts)
+    )
+    rows.append({
+        "bench": "kernel", "name": f"{name}/ref_xla_per_leaf",
+        "us_per_call": round(_time(per_leaf, tuple(trees)), 1), **derived,
+    })
+
+    def bucketed(ts):
+        with api.dispatch_mode("ref"):
+            return api.tree_apply(name, *ts, scalars=scalars)
+
+    rows.append({
+        "bench": "kernel", "name": f"{name}/bucketed_ref",
+        "us_per_call": round(_time(jax.jit(bucketed), tuple(trees)), 1),
+        "launches_per_tree": 1, **derived,
+        "note": "CPU wall time includes the concat/pad gather; the TPU-"
+                "relevant content is launches_per_tree + derived_*",
+    })
+
+    biggest = f"l{len(TREE_SHAPES) - 1}"   # the flat 640k leaf
+    small = [t[biggest].ravel()[:INTERPRET_N] for t in trees]
+
+    def interp(bufs):
+        with api.dispatch_mode("interpret"):
+            return api.tree_apply(name, *bufs, scalars=scalars)
+
+    rows.append({
+        "bench": "kernel", "name": f"{name}/bucketed_interpret",
+        "us_per_call": round(_time(jax.jit(interp), tuple(small)), 1),
+        "n_elems": INTERPRET_N,
+        "note": "python emulation of the kernel body; not a TPU estimate",
+    })
+    return rows
+
+
+def _shaped_cases():
+    """Canned (args, static, derived) per shaped op.  Keyed by registry name;
+    run() fails loudly if a registered shaped op has no case here, so the
+    bench (and the CI kernels-parity job) can never silently under-report."""
+    b, s, h, d = 1, 512, 4, 64
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d), jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (4096, 1024), jnp.float32)
+    w = jnp.ones((1024,))
+    r = jax.random.normal(jax.random.key(2), (1, 64, 4, 64), jnp.float32) * 0.5
+    lw = -jnp.exp(jax.random.normal(jax.random.key(3), (1, 64, 4, 64)) * 0.3)
+    return {
+        "flash_attention": (
+            (q, q, q), dict(causal=True),
+            {"derived_gflops": round(4 * b * h * s * s * d / 2 / 1e9, 3)},
+        ),
+        "rms_norm": (
+            (x, w), {},
+            {"derived_gb_moved": round(2 * x.size * 4 / 1e9, 4)},
+        ),
+        "wkv_chunk": (
+            (r, r, r, lw), {},
+            {"derived_gb_moved": round(4 * r.size * 4 / 1e9, 4)},
+        ),
+    }
+
+
+def _shaped_rows(api):
+    cases = _shaped_cases()
+    shaped = {n for n, op in api.REGISTRY.items() if not op.elementwise}
+    missing = shaped - set(cases)
+    if missing:
+        raise RuntimeError(
+            f"no bench case for shaped op(s) {sorted(missing)}; add inputs to "
+            "benchmarks/kernels_bench.py::_shaped_cases"
+        )
+    rows = []
+    for name in sorted(shaped):
+        args, static, derived = cases[name]
+        ref = api.REGISTRY[name].ref_fn
+        fn = jax.jit(lambda *a, _ref=ref, _st=static: _ref(*a, **_st))
+        rows.append({
+            "bench": "kernel", "name": f"{name}/ref_xla",
+            "us_per_call": round(_time(fn, *args), 1), **derived,
+        })
+    return rows
 
 
 def run():
-    from repro.kernels.flash_attention import flash_attention_ref
-    from repro.kernels.mvr_update import mvr_update_ref
-    from repro.kernels.rms_norm import rms_norm_ref
+    import json
+    import os
+
+    from repro.kernels import api
 
     rows = []
-    # flash attention oracle: bytes + flops derived
-    b, s, h, d = 1, 512, 4, 64
-    q = jax.random.normal(jax.random.key(0), (b, s, h, d), jnp.float32)
-    fa_ref = jax.jit(lambda q: flash_attention_ref(q, q, q, causal=True))
-    us = _time(fa_ref, q)
-    rows.append({
-        "bench": "kernel", "name": "flash_attention_ref_xla",
-        "us_per_call": round(us, 1),
-        "derived_gflops": round(4 * b * h * s * s * d / 2 / 1e9, 3),
-    })
-    # rms norm
-    x = jax.random.normal(jax.random.key(1), (4096, 1024), jnp.float32)
-    w = jnp.ones((1024,))
-    rn = jax.jit(lambda x: rms_norm_ref(x, w))
-    rows.append({
-        "bench": "kernel", "name": "rms_norm_ref_xla",
-        "us_per_call": round(_time(rn, x), 1),
-        "derived_gb_moved": round(2 * x.size * 4 / 1e9, 4),
-    })
-    # mvr update
-    n = 1 << 22
-    g1 = jax.random.normal(jax.random.key(2), (n,))
-    v = jax.random.normal(jax.random.key(3), (n,))
-    g0 = jax.random.normal(jax.random.key(4), (n,))
-    mu = jax.jit(lambda a, b_, c: mvr_update_ref(a, b_, c, 0.05))
-    us = _time(mu, g1, v, g0)
-    rows.append({
-        "bench": "kernel", "name": "mvr_update_ref_xla",
-        "us_per_call": round(us, 1),
-        "derived_gb_moved": round(4 * n * 4 / 1e9, 4),
-        "derived_tpu_us_at_hbm_bw": round(4 * n * 4 / 819e9 * 1e6, 1),
-    })
+    for name in sorted(api.REGISTRY):
+        op = api.REGISTRY[name]
+        if op.elementwise:
+            rows += _elementwise_rows(name, op, api)
+    rows += _shaped_rows(api)
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_kernels.json", "w") as f:
+        json.dump(rows, f, indent=1)
     return rows

@@ -28,6 +28,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import api as fused
 from .algorithm import CommSpec, DecentralizedAlgorithm
 from .dse import GradFn, MixFn, PyTree, ScheduleOrFloat, _cast_like, _sched, tree_axpy, tree_sub
 
@@ -51,6 +52,7 @@ class DLSGD(DecentralizedAlgorithm):
 
     lr: ScheduleOrFloat
     tau: int = 1
+    use_fused: bool = False   # fused-op backend for the update arithmetic
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -61,9 +63,11 @@ class DLSGD(DecentralizedAlgorithm):
     def local_update(self, state: SGDState, grad_fn: GradFn) -> SGDState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
-        return dataclasses.replace(
-            state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
-        )
+        if self.use_fused:
+            x_new = fused.tree_axpby(-gamma, g, 1.0, state.params)
+        else:
+            x_new = tree_axpy(-gamma, g, state.params)
+        return dataclasses.replace(state, params=x_new, step=state.step + 1)
 
     def comm_update(self, state, mix_fn, grad_fn=None, reset_grad_fn=None) -> SGDState:
         state = self.local_update(state, grad_fn)
@@ -104,6 +108,7 @@ class GTDSGD(DecentralizedAlgorithm):
 
     lr: ScheduleOrFloat
     tau: int = 1  # fixed: GT-DSGD is a non-local-update method
+    use_fused: bool = False   # fused-op backend for the update arithmetic
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -114,6 +119,11 @@ class GTDSGD(DecentralizedAlgorithm):
 
     def comm_update(self, state: GTState, mix_fn, grad_fn=None, reset_grad_fn=None) -> GTState:
         gamma = _sched(self.lr, state.step)
+        if self.use_fused:
+            x_new = fused.tree_axpby(-gamma, state.y, 1.0, mix_fn(state.params))
+            g_new = grad_fn(x_new)
+            y_new = fused.tree_add_sub(mix_fn(state.y), g_new, state.g_prev)
+            return GTState(params=x_new, y=y_new, g_prev=g_new, step=state.step + 1)
         x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
         g_new = grad_fn(x_new)
         y_new = jax.tree.map(
@@ -135,7 +145,6 @@ class GTHSGDState:
     params: PyTree
     v: PyTree          # hybrid variance-reduced local estimator
     y: PyTree          # tracked global direction
-    v_prev: PyTree
     step: jnp.ndarray
 
 
@@ -153,6 +162,7 @@ class GTHSGD(DecentralizedAlgorithm):
     lr: ScheduleOrFloat
     beta: float = 0.1
     tau: int = 1  # communicates every step
+    use_fused: bool = False   # fused-op backend for the update arithmetic
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -161,11 +171,22 @@ class GTHSGD(DecentralizedAlgorithm):
         v0 = full_grad_fn(params) if full_grad_fn is not None else _zeros_like(params)
         return GTHSGDState(
             params=params, v=v0, y=jax.tree.map(jnp.copy, v0),
-            v_prev=jax.tree.map(jnp.copy, v0), step=jnp.zeros((), jnp.int32),
+            step=jnp.zeros((), jnp.int32),
         )
 
     def comm_update(self, state: GTHSGDState, mix_fn, grad_fn=None, reset_grad_fn=None) -> GTHSGDState:
         gamma = _sched(self.lr, state.step)
+        if self.use_fused:
+            # same fused-op family as DSE-MVR: the STORM-style v update IS
+            # the mvr_update shape (alpha = beta), the tracking correction
+            # is add_sub — one bucketed launch each for the whole tree
+            x_new = fused.tree_axpby(-gamma, state.y, 1.0, mix_fn(state.params))
+            g_new = grad_fn(x_new)
+            g_old = grad_fn(state.params)
+            v_new = fused.tree_mvr_update(g_new, state.v, g_old, self.beta)
+            y_new = fused.tree_add_sub(mix_fn(state.y), v_new, state.v)
+            return GTHSGDState(params=x_new, v=v_new, y=y_new,
+                               step=state.step + 1)
         x_new = tree_axpy(-gamma, state.y, mix_fn(state.params))
         g_new = grad_fn(x_new)
         g_old = grad_fn(state.params)
@@ -178,7 +199,7 @@ class GTHSGD(DecentralizedAlgorithm):
             mix_fn(state.y), v_new, state.v,
         )
         return GTHSGDState(params=x_new, v=v_new, y=y_new,
-                           v_prev=state.v, step=state.step + 1)
+                           step=state.step + 1)
 
     # -- legacy protocol shims ---------------------------------------------
     def round_end(self, state, mix_fn, grad_fn):
@@ -201,6 +222,7 @@ class PDSGDM(DecentralizedAlgorithm):
     tau: int = 1
     beta: float = 0.9
     nesterov: bool = False
+    use_fused: bool = False   # fused-op backend for the update arithmetic
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -211,6 +233,11 @@ class PDSGDM(DecentralizedAlgorithm):
     def local_update(self, state: MomentumState, grad_fn: GradFn) -> MomentumState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
+        if self.use_fused:
+            m_new = fused.tree_axpby(self.beta, state.m, 1.0, g, like=state.m)
+            d = fused.tree_axpby(self.beta, m_new, 1.0, g) if self.nesterov else m_new
+            x_new = fused.tree_axpby(-gamma, d, 1.0, state.params)
+            return MomentumState(params=x_new, m=m_new, step=state.step + 1)
         m_new = jax.tree.map(lambda m, gi: (self.beta * m + gi).astype(m.dtype), state.m, g)
         d = (
             jax.tree.map(lambda m, gi: self.beta * m + gi, m_new, g)
@@ -255,6 +282,7 @@ class SlowMoD(DecentralizedAlgorithm):
     tau: int = 1
     slow_lr: float = 1.0
     beta: float = 0.95
+    use_fused: bool = False   # fused-op backend for the update arithmetic
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -270,14 +298,30 @@ class SlowMoD(DecentralizedAlgorithm):
     def local_update(self, state: SlowMoState, grad_fn: GradFn) -> SlowMoState:
         gamma = _sched(self.lr, state.step)
         g = grad_fn(state.params)
-        return dataclasses.replace(
-            state, params=tree_axpy(-gamma, g, state.params), step=state.step + 1
-        )
+        if self.use_fused:
+            x_new = fused.tree_axpby(-gamma, g, 1.0, state.params)
+        else:
+            x_new = tree_axpy(-gamma, g, state.params)
+        return dataclasses.replace(state, params=x_new, step=state.step + 1)
 
     def comm_update(self, state: SlowMoState, mix_fn, grad_fn=None, reset_grad_fn=None) -> SlowMoState:
         gamma = _sched(self.lr, state.step)
         state = self.local_update(state, grad_fn)
         x_avg = mix_fn(state.params)
+        if self.use_fused:
+            drift = fused.tree_axpby(
+                1.0 / gamma, state.x_ref, -1.0 / gamma, x_avg, like=state.u
+            )
+            u_new = fused.tree_axpby(self.beta, state.u, 1.0, drift, like=state.u)
+            x_new = fused.tree_axpby(
+                -self.slow_lr * gamma, u_new, 1.0, state.x_ref, like=state.params
+            )
+            return SlowMoState(
+                params=x_new,
+                x_ref=jax.tree.map(jnp.copy, x_new),
+                u=u_new,
+                step=state.step,
+            )
         u_new = jax.tree.map(
             lambda u, xr, xa: (self.beta * u + (xr.astype(jnp.float32) - xa.astype(jnp.float32)) / gamma).astype(u.dtype),
             state.u,

@@ -36,6 +36,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import api as fused
 from .algorithm import CommSpec, DecentralizedAlgorithm
 
 PyTree = Any
@@ -100,6 +101,11 @@ class DSEMVR(DecentralizedAlgorithm):
     tau: int = 1
     fuse_tracking_buffers: bool = False
     state_dtype: Any = None        # None => match params dtype
+    #: route the update arithmetic through the fused-op backend
+    #: (``repro.kernels.api``): whole-pytree bucketed kernel launches for the
+    #: MVR inner update and the dual-slow combine.  False (default) keeps
+    #: today's exact per-leaf jnp path bit-for-bit.
+    use_fused: bool = False
 
     # one comm event per round, two param-sized messages (SGT y + SPA x);
     # v resets with the full/large-batch local gradient (Alg. 1 line 11)
@@ -143,6 +149,16 @@ class DSEMVR(DecentralizedAlgorithm):
         """
         gamma = _sched(self.lr, state.step)
         alpha = _sched(self.alpha, state.step + 1)
+        if self.use_fused:
+            # fused path: two bucketed kernel launches for the whole tree
+            # (x step + MVR direction), instead of 2 jnp passes per leaf
+            x_new = fused.tree_axpby(-gamma, state.v, 1.0, state.params)
+            g_new = grad_fn(x_new)
+            g_old = grad_fn(state.params)
+            v_new = fused.tree_mvr_update(g_new, state.v, g_old, alpha)
+            return dataclasses.replace(
+                state, params=x_new, v=v_new, step=state.step + 1
+            )
         x_new = tree_axpy(-gamma, state.v, state.params)
         g_new = grad_fn(x_new)
         g_old = grad_fn(state.params)
@@ -171,18 +187,41 @@ class DSEMVR(DecentralizedAlgorithm):
         """
         reset_grad_fn = reset_grad_fn if reset_grad_fn is not None else grad_fn
         gamma = _sched(self.lr, state.step)
-        x_half = tree_axpy(-gamma, state.v, state.params)
-        h_new = tree_sub(_cast_like(state.x_ref, x_half), x_half)  # x_ref - x_half
-        h_new = _cast_like(h_new, state.v)
-        if self.fuse_tracking_buffers:
-            y_new = mix_fn(tree_add(state.z, h_new))
-            z_new = tree_sub(y_new, h_new)
-            y_upd = dict(z=z_new)
+        if self.use_fused:
+            # fused path: ONE dse_combine pass computes x_half, h and the SGT
+            # pre-mix message; the z refresh and the post-mix SPA subtraction
+            # are axpby launches (they cannot fuse across the gossip
+            # collective)
+            if self.fuse_tracking_buffers:
+                u, h_new = fused.tree_dse_combine(
+                    state.params, state.v, state.x_ref, state.z, gamma
+                )
+                y_new = mix_fn(u)
+                y_upd = dict(z=fused.tree_axpby(-1.0, h_new, 1.0, y_new))
+            else:
+                u, h_new = fused.tree_dse_combine_yh(
+                    state.params, state.v, state.x_ref, state.y, state.h_prev,
+                    gamma,
+                )
+                y_new = mix_fn(u)
+                y_upd = dict(y=y_new, h_prev=h_new)
+            # SPA: x_{t+1} = mix(x_ref - y_{t+1})
+            x_new = mix_fn(
+                fused.tree_axpby(-1.0, y_new, 1.0, state.x_ref, like=state.params)
+            )
         else:
-            y_new = mix_fn(tree_add(state.y, tree_sub(h_new, state.h_prev)))
-            y_upd = dict(y=y_new, h_prev=h_new)
-        # SPA: x_{t+1} = mix(x_ref - y_{t+1})
-        x_new = mix_fn(tree_axpy(-1.0, _cast_like(y_new, state.x_ref), state.x_ref))
+            x_half = tree_axpy(-gamma, state.v, state.params)
+            h_new = tree_sub(_cast_like(state.x_ref, x_half), x_half)  # x_ref - x_half
+            h_new = _cast_like(h_new, state.v)
+            if self.fuse_tracking_buffers:
+                y_new = mix_fn(tree_add(state.z, h_new))
+                z_new = tree_sub(y_new, h_new)
+                y_upd = dict(z=z_new)
+            else:
+                y_new = mix_fn(tree_add(state.y, tree_sub(h_new, state.h_prev)))
+                y_upd = dict(y=y_new, h_prev=h_new)
+            # SPA: x_{t+1} = mix(x_ref - y_{t+1})
+            x_new = mix_fn(tree_axpy(-1.0, _cast_like(y_new, state.x_ref), state.x_ref))
         x_new = _cast_like(x_new, state.params)
         v_new = state.v
         if reset_grad_fn is not None:
@@ -227,7 +266,10 @@ class DSESGD(DSEMVR):
 
     def local_update(self, state: DSEState, grad_fn: GradFn) -> DSEState:
         gamma = _sched(self.lr, state.step)
-        x_new = tree_axpy(-gamma, state.v, state.params)
+        if self.use_fused:
+            x_new = fused.tree_axpby(-gamma, state.v, 1.0, state.params)
+        else:
+            x_new = tree_axpy(-gamma, state.v, state.params)
         g_new = _cast_like(grad_fn(x_new), state.v)
         return dataclasses.replace(state, params=x_new, v=g_new, step=state.step + 1)
 

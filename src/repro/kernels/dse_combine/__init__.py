@@ -1,0 +1,3 @@
+from .ops import dse_combine_ref, dse_combine_yh_ref
+
+__all__ = ["dse_combine_ref", "dse_combine_yh_ref"]

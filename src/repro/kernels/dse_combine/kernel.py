@@ -1,0 +1,34 @@
+"""Fused dual-slow combine kernel bodies (the paper's communication step).
+
+Alg. 1 lines 7-9 are three chained param-sized tree passes:
+
+    x_half = x_t - gamma * v_t            (the last half-step)
+    h      = x_ref - x_half               (accumulated descent this round)
+    u      = y + h - h_prev               (SGT pre-mix message)
+                                          [fused-z state: u = z + h]
+
+Unfused, XLA stages the intermediates (x_half, h) through HBM for large
+trees; fused, the combine is ONE pass — 4 reads (params, v, x_ref, z) or 5
+(y, h_prev form) and 2 writes (u, h) per element, streamed through VMEM with
+gamma arriving by SMEM scalar-prefetch.  The post-mix pieces (SPA
+``x_ref - y_new`` and the z/h_prev refresh) cannot fuse across the gossip
+collective; they run as ``axpby`` launches.
+
+Bodies are ``expr``s for the shared flat Pallas launcher in
+``repro.kernels.api`` (no per-package grid plumbing).
+"""
+from __future__ import annotations
+
+__all__ = ["dse_combine_expr", "dse_combine_yh_expr"]
+
+
+def dse_combine_expr(s, params, v, x_ref, z):
+    """Fused-z form; scalars s = (gamma,).  Returns (u, h)."""
+    h = x_ref - (params - s[0] * v)
+    return z + h, h
+
+
+def dse_combine_yh_expr(s, params, v, x_ref, y, h_prev):
+    """(y, h_prev) form; scalars s = (gamma,).  Returns (u, h)."""
+    h = x_ref - (params - s[0] * v)
+    return y + h - h_prev, h

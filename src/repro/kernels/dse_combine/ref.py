@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the fused dual-slow combine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+__all__ = ["dse_combine_ref", "dse_combine_yh_ref"]
+
+
+def _h(params, v, x_ref, gamma):
+    g = jnp.float32(gamma)
+    x_half = params.astype(jnp.float32) - g * v.astype(jnp.float32)
+    return x_ref.astype(jnp.float32) - x_half
+
+
+def dse_combine_ref(params, v, x_ref, z, gamma):
+    """(u, h): h = x_ref - (params - gamma*v); u = z + h.
+    u keeps z's dtype, h keeps v's (the tracking-state dtype)."""
+    h = _h(params, v, x_ref, gamma)
+    u = z.astype(jnp.float32) + h
+    return u.astype(z.dtype), h.astype(v.dtype)
+
+
+def dse_combine_yh_ref(params, v, x_ref, y, h_prev, gamma):
+    """(u, h): h = x_ref - (params - gamma*v); u = y + h - h_prev.
+    u keeps y's dtype, h keeps v's."""
+    h = _h(params, v, x_ref, gamma)
+    u = y.astype(jnp.float32) + h - h_prev.astype(jnp.float32)
+    return u.astype(y.dtype), h.astype(v.dtype)

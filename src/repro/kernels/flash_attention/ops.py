@@ -1,68 +1,55 @@
-"""Jit'd public wrapper for the flash-attention kernel.
+"""Registry entry + legacy wrapper for the flash-attention kernel.
 
-Layout adapter (model uses (B, S, H, D); kernel uses (B, H, S, D)), CPU
-interpret-mode fallback, and a custom VJP whose backward pass recomputes
-attention with the jnp oracle (flash backward kernel is tracked as a perf
-iteration; forward is the serving/prefill hot spot).
+Canonical entry:
+``api.call("flash_attention", q, k, v, causal=..., sliding_window=..., softcap=...)``.
+The shaped launcher holds the layout adapter (model uses (B, S, H, D); kernel
+uses (B, H, S, D)); dispatch and the ref-backed custom VJP (backward
+recomputes attention with the jnp oracle — a flash backward kernel is tracked
+as a perf iteration) come from the fused-op API.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
+from .. import api
 from .kernel import flash_attention_fwd
 from .ref import flash_attention_ref
 
 __all__ = ["flash_attention"]
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
-
-
-@functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
-)
-def flash_attention(
-    q: jnp.ndarray,          # (B, S, H, D)
-    k: jnp.ndarray,          # (B, S, K, D)
-    v: jnp.ndarray,
-    causal: bool = True,
-    sliding_window: Optional[int] = None,
-    softcap: Optional[float] = None,
-) -> jnp.ndarray:
-    qt = q.swapaxes(1, 2)
-    kt = k.swapaxes(1, 2)
-    vt = v.swapaxes(1, 2)
+def _flash_kernel_call(
+    q, k, v, interpret=False, causal=True, sliding_window=None, softcap=None
+):
     out = flash_attention_fwd(
-        qt, kt, vt,
-        causal=causal,
-        sliding_window=sliding_window,
-        softcap=softcap,
-        interpret=not _on_tpu(),
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, sliding_window=sliding_window, softcap=softcap,
+        interpret=interpret,
     )
     return out.swapaxes(1, 2)
 
 
-def _fwd(q, k, v, causal, sliding_window, softcap):
-    return flash_attention(q, k, v, causal, sliding_window, softcap), (q, k, v)
-
-
-def _bwd(causal, sliding_window, softcap, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: flash_attention_ref(
-            q_, k_, v_, causal=causal, sliding_window=sliding_window, softcap=softcap
-        ),
-        q, k, v,
+def _flash_ref_call(q, k, v, causal=True, sliding_window=None, softcap=None):
+    return flash_attention_ref(
+        q, k, v, causal=causal, sliding_window=sliding_window, softcap=softcap
     )
-    return vjp(g)
 
 
-flash_attention.defvjp(_fwd, _bwd)
+api.register(
+    api.FusedOp(
+        name="flash_attention",
+        kernel_fn=_flash_kernel_call,
+        ref_fn=_flash_ref_call,
+        n_inputs=3,
+        doc="online-softmax attention, (B, S, H, D) layout, GQA/window/softcap",
+    )
+)
+
+
+def flash_attention(q, k, v, causal=True, sliding_window=None, softcap=None):
+    """DEPRECATED: use ``api.call('flash_attention', q, k, v, ...)``."""
+    api.deprecated_entry(
+        "kernels.flash_attention.flash_attention", "api.call('flash_attention', ...)"
+    )
+    return api.call(
+        "flash_attention", q, k, v,
+        causal=causal, sliding_window=sliding_window, softcap=softcap,
+    )

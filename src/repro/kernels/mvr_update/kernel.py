@@ -1,58 +1,23 @@
-"""Fused MVR direction update Pallas TPU kernel.
+"""Fused MVR direction update kernel body.
 
 The MVR inner update reads three param-sized buffers and writes one:
     v_new = g_new + (1 - alpha) * (v - g_old)
 Pure HBM-bandwidth-bound (arithmetic intensity ~0.4 flop/byte).  Unfused, XLA
 can stage the (v - g_old) temp through HBM for very large buffers; the kernel
 guarantees a single pass: 3 reads + 1 write, streamed through VMEM in
-(BLOCK,) lane-aligned tiles.  alpha arrives in SMEM as a scalar-prefetch
-operand so one compiled kernel serves every schedule step.
+lane-aligned tiles with alpha arriving by SMEM scalar-prefetch, so one
+compiled kernel serves every schedule step.
+
+The body is an ``expr`` for the shared flat Pallas launcher in
+``repro.kernels.api`` — grid/BlockSpec/interpret plumbing lives there once,
+and the bucketed ``tree_apply`` executor covers a whole parameter pytree in
+one launch.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-DEFAULT_BLOCK = 1 << 16   # 64k elements/tile = 256 KB fp32
+__all__ = ["mvr_update_expr"]
 
 
-def _mvr_kernel(alpha_ref, g_new_ref, v_ref, g_old_ref, o_ref):
-    a = alpha_ref[0]
-    gn = g_new_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    go = g_old_ref[...].astype(jnp.float32)
-    o_ref[...] = (gn + (1.0 - a) * (v - go)).astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def mvr_update_fwd(
-    g_new: jnp.ndarray,   # (n,) flattened
-    v: jnp.ndarray,
-    g_old: jnp.ndarray,
-    alpha: jnp.ndarray,   # scalar fp32
-    block: int = DEFAULT_BLOCK,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    (n,) = v.shape
-    block = min(block, n)
-    assert n % block == 0, (n, block)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n // block,),
-        in_specs=[
-            pl.BlockSpec((block,), lambda i, *_: (i,)),
-            pl.BlockSpec((block,), lambda i, *_: (i,)),
-            pl.BlockSpec((block,), lambda i, *_: (i,)),
-        ],
-        out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
-    )
-    return pl.pallas_call(
-        _mvr_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n,), v.dtype),
-        interpret=interpret,
-    )(jnp.asarray(alpha, jnp.float32).reshape(1), g_new, v, g_old)
+def mvr_update_expr(s, g_new, v, g_old):
+    """v_new = g_new + (1 - alpha)(v - g_old); scalars s = (alpha,)."""
+    return g_new + (1.0 - s[0]) * (v - g_old)

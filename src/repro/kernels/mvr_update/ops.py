@@ -1,37 +1,42 @@
-"""Jit'd wrapper: applies the fused MVR update over whole pytrees."""
+"""Registry entry + legacy wrappers for the fused MVR update.
+
+The canonical entry points are ``api.tree_mvr_update`` (whole-pytree, one
+bucketed launch) and ``api.tree_apply("mvr_update", ...)``.  The wrappers
+below are kept for pre-redesign call sites; they delegate to the registry —
+which pads odd-length buffers to a lane multiple instead of the old
+``while n % blk: blk //= 2`` halving loop that degraded them to tiny blocks
+or the oracle fallback — and emit a DeprecationWarning.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .kernel import mvr_update_fwd
+from .. import api
+from .kernel import mvr_update_expr
 from .ref import mvr_update_ref
 
 __all__ = ["mvr_update", "mvr_update_tree"]
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
-
-
-def mvr_update(g_new: jnp.ndarray, v: jnp.ndarray, g_old: jnp.ndarray, alpha) -> jnp.ndarray:
-    n = v.size
-    flat = lambda t: t.reshape(n)
-    blk = 1 << 16
-    while n % blk:
-        blk //= 2
-    if blk < 256:   # ragged small arrays: not worth a kernel launch
-        return mvr_update_ref(g_new, v, g_old, alpha)
-    out = mvr_update_fwd(
-        flat(g_new), flat(v), flat(g_old), jnp.asarray(alpha, jnp.float32),
-        block=blk, interpret=not _on_tpu(),
+api.register(
+    api.FusedOp(
+        name="mvr_update",
+        expr=mvr_update_expr,
+        ref_fn=mvr_update_ref,
+        n_inputs=3,            # g_new, v, g_old
+        n_outputs=1,
+        n_scalars=1,           # alpha
+        out_dtype_from=(1,),   # v's dtype
+        doc="MVR direction update v <- g_new + (1-alpha)(v - g_old) (Alg. 1 l.16)",
     )
-    return out.reshape(v.shape)
+)
+
+
+def mvr_update(g_new, v, g_old, alpha):
+    """DEPRECATED: use ``api.tree_apply('mvr_update', ...)``."""
+    api.deprecated_entry("mvr_update", "api.tree_apply('mvr_update', ...)")
+    return api.tree_apply("mvr_update", g_new, v, g_old, scalars=(alpha,))
 
 
 def mvr_update_tree(g_new, v, g_old, alpha):
-    """Pytree-wide fused MVR update (the optimizer hot loop)."""
-    return jax.tree.map(lambda gn, vv, go: mvr_update(gn, vv, go, alpha), g_new, v, g_old)
+    """DEPRECATED: use ``api.tree_mvr_update`` (one bucketed launch per tree
+    instead of one launch per leaf)."""
+    api.deprecated_entry("mvr_update_tree", "api.tree_mvr_update")
+    return api.tree_mvr_update(g_new, v, g_old, alpha)

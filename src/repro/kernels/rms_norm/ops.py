@@ -1,48 +1,53 @@
-"""Jit'd wrapper: arbitrary leading dims, interpret fallback off-TPU,
-custom VJP (backward via the jnp oracle)."""
+"""Registry entry + legacy wrapper for the fused RMSNorm kernel.
+
+The canonical entry point is ``api.call("rms_norm", x, w, eps=..., plus_one=...)``
+(platform dispatch, ref-backed custom VJP).  The shaped launcher here adapts
+arbitrary leading dims onto the row-tiled kernel, padding the row count up to
+the block size (the old code shrank ``block_rows`` by halving until it
+divided ``rows``, degrading odd row counts to 1-row blocks).
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from .kernel import rms_norm_fwd
+from .. import api
+from .kernel import DEFAULT_BLOCK_ROWS, rms_norm_fwd
 from .ref import rms_norm_ref
 
 __all__ = ["rms_norm"]
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
+_ROW_TILE = 8   # fp32 sublane quantum: row blocks stay a multiple of this
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6, plus_one: bool = False):
+def _rms_kernel_call(x, weight, interpret=False, eps=1e-6, plus_one=False):
     shape = x.shape
     rows = 1
     for s in shape[:-1]:
         rows *= s
     x2 = x.reshape(rows, shape[-1])
-    # pick a block size that divides rows
-    br = 256
-    while rows % br:
-        br //= 2
-    out = rms_norm_fwd(x2, weight, eps=eps, plus_one=plus_one, block_rows=max(br, 1), interpret=not _on_tpu())
-    return out.reshape(shape)
+    block_rows = min(DEFAULT_BLOCK_ROWS, api.ceil_to(rows, _ROW_TILE))
+    pad = api.ceil_to(rows, block_rows) - rows
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, shape[-1]), x2.dtype)])
+    out = rms_norm_fwd(
+        x2, weight, eps=eps, plus_one=plus_one,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return out[:rows].reshape(shape)
 
 
-def _fwd(x, weight, eps, plus_one):
-    return rms_norm(x, weight, eps, plus_one), (x, weight)
+api.register(
+    api.FusedOp(
+        name="rms_norm",
+        kernel_fn=_rms_kernel_call,
+        ref_fn=rms_norm_ref,
+        n_inputs=2,
+        doc="fused RMSNorm: one read + one write, fp32 reduce in-register",
+    )
+)
 
 
-def _bwd(eps, plus_one, res, g):
-    x, weight = res
-    _, vjp = jax.vjp(lambda x_, w_: rms_norm_ref(x_, w_, eps, plus_one), x, weight)
-    return vjp(g)
-
-
-rms_norm.defvjp(_fwd, _bwd)
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    """DEPRECATED: use ``api.call('rms_norm', x, weight, eps=..., plus_one=...)``."""
+    api.deprecated_entry("kernels.rms_norm.rms_norm", "api.call('rms_norm', ...)")
+    return api.call("rms_norm", x, weight, eps=eps, plus_one=plus_one)

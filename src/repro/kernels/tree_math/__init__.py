@@ -1,0 +1,3 @@
+from .ops import add_sub_ref, axpby_ref
+
+__all__ = ["axpby_ref", "add_sub_ref"]

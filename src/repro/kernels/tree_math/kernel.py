@@ -1,0 +1,25 @@
+"""Elementwise tree-arithmetic kernel bodies (axpby, add_sub).
+
+These are the HBM-bandwidth-bound linear-combination shapes shared by the
+whole decentralized method family (SGD steps, momentum accumulation, SPA
+``x_ref - y``, gradient-tracking corrections).  Each body is an ``expr`` in
+the fused-op API's elementwise form — ``expr(s, *ins)`` with ``s`` the SMEM
+scalar-prefetch operands and ``ins`` fp32 blocks — compiled through the
+shared flat Pallas launcher (``repro.kernels.api._flat_launch``), so there is
+no per-package grid/BlockSpec plumbing here.
+"""
+from __future__ import annotations
+
+__all__ = ["axpby_expr", "add_sub_expr"]
+
+
+def axpby_expr(s, x, y):
+    """a*x + b*y; scalars s = (a, b).  2 reads + 1 write per element."""
+    return s[0] * x + s[1] * y
+
+
+def add_sub_expr(s, a, b, c):
+    """a + b - c (no scalars) — the tracking correction ``y + v_new - v_old``.
+    3 reads + 1 write per element."""
+    del s
+    return a + b - c

@@ -1,0 +1,34 @@
+"""Registry entries for the tree-arithmetic fused ops."""
+from __future__ import annotations
+
+from .. import api
+from .kernel import add_sub_expr, axpby_expr
+from .ref import add_sub_ref, axpby_ref
+
+__all__ = ["axpby_ref", "add_sub_ref"]
+
+api.register(
+    api.FusedOp(
+        name="axpby",
+        expr=axpby_expr,
+        ref_fn=axpby_ref,
+        n_inputs=2,
+        n_outputs=1,
+        n_scalars=2,
+        out_dtype_from=(1,),   # y's dtype (overridable via like=)
+        doc="a*x + b*y over whole pytrees (SGD/momentum/SPA arithmetic)",
+    )
+)
+
+api.register(
+    api.FusedOp(
+        name="add_sub",
+        expr=add_sub_expr,
+        ref_fn=add_sub_ref,
+        n_inputs=3,
+        n_outputs=1,
+        n_scalars=0,
+        out_dtype_from=(0,),
+        doc="a + b - c over whole pytrees (gradient-tracking correction)",
+    )
+)

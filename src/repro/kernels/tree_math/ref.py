@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the tree-arithmetic fused ops."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["axpby_ref", "add_sub_ref"]
+
+
+def axpby_ref(x: jnp.ndarray, y: jnp.ndarray, a, b) -> jnp.ndarray:
+    """a*x + b*y in fp32, cast to y's dtype."""
+    out = jnp.float32(a) * x.astype(jnp.float32) + jnp.float32(b) * y.astype(
+        jnp.float32
+    )
+    return out.astype(y.dtype)
+
+
+def add_sub_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """a + b - c in fp32, cast to a's dtype."""
+    out = (
+        a.astype(jnp.float32) + b.astype(jnp.float32) - c.astype(jnp.float32)
+    )
+    return out.astype(a.dtype)

@@ -1,40 +1,41 @@
-"""Jit'd wrapper for the chunked-wkv kernel: interpret fallback off-TPU and a
-custom VJP via the per-token oracle (forward kernel is the serving/prefill
-hot path; a fused backward kernel is a recorded backlog item)."""
+"""Registry entry + legacy wrapper for the chunked-wkv kernel.
+
+Canonical entry: ``api.call("wkv_chunk", r, k, v, logw, chunk=...)`` —
+platform dispatch and a ref-backed custom VJP via the per-token oracle (the
+forward kernel is the serving/prefill hot path; a fused backward kernel is a
+recorded backlog item).
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
+from .. import api
 from .kernel import wkv_chunk_fwd
 from .ref import wkv_ref
 
 __all__ = ["wkv_chunk"]
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
+def _wkv_kernel_call(r, k, v, logw, interpret=False, chunk=16):
+    return wkv_chunk_fwd(r, k, v, logw, chunk=chunk, interpret=interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _wkv_ref_call(r, k, v, logw, chunk=16):
+    del chunk   # the per-token oracle has no chunking
+    return wkv_ref(r, k, v, logw)
+
+
+api.register(
+    api.FusedOp(
+        name="wkv_chunk",
+        kernel_fn=_wkv_kernel_call,
+        ref_fn=_wkv_ref_call,
+        n_inputs=4,
+        n_outputs=2,   # (y, s_final)
+        doc="RWKV-6 recurrence, chunked in VMEM (serving/prefill hot path)",
+    )
+)
+
+
 def wkv_chunk(r, k, v, logw, chunk: int = 16):
-    """(y, s_final) for the RWKV-6 recurrence, chunked in VMEM."""
-    return wkv_chunk_fwd(r, k, v, logw, chunk=chunk, interpret=not _on_tpu())
-
-
-def _fwd(r, k, v, logw, chunk):
-    return wkv_chunk(r, k, v, logw, chunk), (r, k, v, logw)
-
-
-def _bwd(chunk, res, grads):
-    r, k, v, logw = res
-    _, vjp = jax.vjp(lambda r_, k_, v_, w_: wkv_ref(r_, k_, v_, w_), r, k, v, logw)
-    return vjp(grads)
-
-
-wkv_chunk.defvjp(_fwd, _bwd)
+    """DEPRECATED: use ``api.call('wkv_chunk', r, k, v, logw, chunk=...)``."""
+    api.deprecated_entry("kernels.wkv_chunk.wkv_chunk", "api.call('wkv_chunk', ...)")
+    return api.call("wkv_chunk", r, k, v, logw, chunk=chunk)

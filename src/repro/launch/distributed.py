@@ -150,12 +150,18 @@ def make_train_job(
     grad_accum: int = 1,
     algorithm_kwargs: Optional[Dict[str, Any]] = None,
     scenario=None,
+    use_fused: bool = False,
 ) -> TrainJob:
     """Build a sharded decentralized training round for ANY registered
     algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
     ready ``DecentralizedAlgorithm`` instance); cadence, round length and the
     reset gradient are taken from its declarative ``CommSpec`` — the same
     executor the CPU simulator uses, compiled onto the mesh.
+
+    ``use_fused=True`` routes the algorithm's update arithmetic through the
+    fused-op backend (``repro.kernels.api``): whole-pytree bucketed kernel
+    launches on TPU, the bucketed jnp path elsewhere; the default False keeps
+    the exact per-leaf jnp arithmetic.
 
     With a ``scenario`` (``repro.scenarios.Scenario``), the train step
     consumes a per-round :class:`RoundCtx` and gossips over the scenario's
@@ -175,6 +181,7 @@ def make_train_job(
         alg = make_algorithm(
             algorithm, lr=lr, alpha=alpha, tau=tau,
             fuse_tracking_buffers=True, state_dtype=state_dtype,
+            use_fused=use_fused,
             **(algorithm_kwargs or {}),
         )
     round_len = alg.comm.round_len(getattr(alg, "tau", 1))

@@ -46,6 +46,8 @@ def main(argv=None):
     p.add_argument("--alpha", type=float, default=0.05)
     p.add_argument("--algorithm", default="dse_mvr", choices=sorted(ALGORITHMS))
     p.add_argument("--gossip", default="roll", choices=["roll", "dense"])
+    p.add_argument("--use-fused", action="store_true",
+                   help="route update arithmetic through the fused-op backend")
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
@@ -60,6 +62,7 @@ def main(argv=None):
     job = make_train_job(
         cfg, mesh, algorithm=args.algorithm, tau=args.tau,
         lr=args.lr, alpha=args.alpha, gossip=args.gossip,
+        use_fused=args.use_fused,
     )
     n = job.n_nodes
     rl = job.round_len  # batches per jitted round (1 for every-step methods)

@@ -174,10 +174,10 @@ def attention_forward(
     v = logical_constraint(v, "batch", "seq", "kv_heads", None)
     pos1 = positions[0] if cfg.mrope_sections is not None else positions
     if cfg.attn_impl == "pallas" and cfg.causal:
-        from ..kernels.flash_attention import ops as fa_ops
+        from ..kernels import api as kernel_api
 
-        out = fa_ops.flash_attention(
-            q, k, v,
+        out = kernel_api.call(
+            "flash_attention", q, k, v,
             causal=True,
             sliding_window=cfg.sliding_window,
             softcap=cfg.attn_softcap,

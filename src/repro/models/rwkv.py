@@ -172,9 +172,11 @@ def timemix_forward(cfg: RWKVConfig, params, x, return_cache: bool = False):
     if cfg.chunk and s % cfg.chunk == 0:
         s0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
         if cfg.use_pallas:
-            from ..kernels.wkv_chunk import wkv_chunk
+            from ..kernels import api as kernel_api
 
-            y, s_final = wkv_chunk(rh, kh, vh, wh, cfg.chunk)
+            y, s_final = kernel_api.call(
+                "wkv_chunk", rh, kh, vh, wh, chunk=cfg.chunk
+            )
         else:
             y, s_final = _chunked_wkv(cfg, rh, kh, vh, wh, s0)
         # bonus (current-token) term, diagonal in t

@@ -20,11 +20,21 @@ def test_comm_analytic_table():
 
 def test_kernel_bench_rows():
     from benchmarks import kernels_bench
+    from repro.kernels import api
 
     rows = kernels_bench.run()
-    assert len(rows) == 3
+    n_elementwise = sum(1 for op in api.REGISTRY.values() if op.elementwise)
+    n_shaped = sum(1 for op in api.REGISTRY.values() if not op.elementwise)
+    # 3 execution shapes per elementwise op + 1 oracle row per shaped op
+    assert len(rows) == 3 * n_elementwise + n_shaped
+    names = {r["name"] for r in rows}
+    for n, op in api.REGISTRY.items():
+        if op.elementwise:
+            assert {f"{n}/ref_xla_per_leaf", f"{n}/bucketed_ref",
+                    f"{n}/bucketed_interpret"} <= names
     for r in rows:
         assert r["us_per_call"] > 0
+    assert os.path.exists("benchmarks/results/BENCH_kernels.json")
 
 
 @pytest.mark.skipif(

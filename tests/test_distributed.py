@@ -79,9 +79,11 @@ def test_train_job_runs_and_matches_simulator():
 
 
 def test_train_job_builds_for_every_algorithm():
-    """Unified-API acceptance: EVERY entry in repro.core.ALGORITHMS builds a
-    sharded train step via make_train_job and runs one round on the test
-    mesh (pre-refactor only dse_mvr/dse_sgd could reach the runtime)."""
+    """Unified-API + fused-op acceptance: EVERY entry in repro.core.ALGORITHMS
+    builds a sharded train step via make_train_job and runs one round on the
+    test mesh WITH use_fused=True (the fused-op backend's update arithmetic
+    must survive sharding propagation on the runtime engine; the Simulator
+    counterpart, plus fused-vs-jnp equivalence, lives in test_fused_api.py)."""
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import ALGORITHMS
@@ -97,7 +99,8 @@ def test_train_job_builds_for_every_algorithm():
         )
         seq, gb = 16, 8
         for name in sorted(ALGORITHMS):
-            job = make_train_job(cfg, mesh, algorithm=name, tau=3, lr=1e-2)
+            job = make_train_job(cfg, mesh, algorithm=name, tau=3, lr=1e-2,
+                                 use_fused=True)
             assert job.n_nodes == 4, name
             rl = job.round_len
             assert rl == (1 if ALGORITHMS[name].comm.cadence == "every_step" else 3), name

@@ -1,7 +1,10 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis, vs jnp oracles.
 
-All kernels run in interpret mode on CPU (the kernel body executes in Python,
-so the block/mask/online-softmax logic is what is being validated).
+All kernels run through the fused-op registry (``repro.kernels.api``) in
+interpret mode on CPU (the kernel body executes in Python, so the
+block/mask/online-softmax logic is what is being validated).  Registry-wide
+forward/VJP parity and launch accounting live in test_fused_api.py; this file
+keeps the deep per-op shape/dtype/feature sweeps.
 """
 import jax
 import jax.numpy as jnp
@@ -9,10 +12,18 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels import api
+from repro.kernels.flash_attention import flash_attention_ref
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.mvr_update import mvr_update, mvr_update_ref
-from repro.kernels.rms_norm import rms_norm, rms_norm_ref
+from repro.kernels.mvr_update import mvr_update_ref
+from repro.kernels.rms_norm import rms_norm_ref
+from repro.kernels.wkv_chunk import wkv_ref
+
+
+def icall(name, *args, **static):
+    """api.call with the interpret-mode kernel forced (CPU default is ref)."""
+    with api.dispatch_mode("interpret"):
+        return api.call(name, *args, **static)
 
 
 def _qkv(key, b, s, h, kh, d, dtype):
@@ -43,7 +54,10 @@ TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, at
 )
 def test_flash_attention_sweep(b, s, h, kh, d, window, softcap, causal, dtype):
     q, k, v = _qkv(jax.random.key(42), b, s, h, kh, d, dtype)
-    out = flash_attention(q, k, v, causal, window, softcap)
+    out = icall(
+        "flash_attention", q, k, v,
+        causal=causal, sliding_window=window, softcap=softcap,
+    )
     ref = flash_attention_ref(q, k, v, causal=causal, sliding_window=window, softcap=softcap)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
@@ -66,7 +80,7 @@ def test_flash_attention_grad_matches_ref():
     q, k, v = _qkv(jax.random.key(1), 1, 128, 2, 2, 64, jnp.float32)
 
     def f_kernel(q, k, v):
-        return (flash_attention(q, k, v, True, None, None) ** 2).sum()
+        return (icall("flash_attention", q, k, v, causal=True) ** 2).sum()
 
     def f_ref(q, k, v):
         return (flash_attention_ref(q, k, v, causal=True) ** 2).sum()
@@ -86,7 +100,7 @@ def test_flash_attention_grad_matches_ref():
 )
 def test_flash_attention_property(s, h, d, window):
     q, k, v = _qkv(jax.random.key(s * h * d), 1, s, h, h, d, jnp.float32)
-    out = flash_attention(q, k, v, True, window, None)
+    out = icall("flash_attention", q, k, v, causal=True, sliding_window=window)
     ref = flash_attention_ref(q, k, v, causal=True, sliding_window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
@@ -96,9 +110,11 @@ def test_flash_attention_property(s, h, d, window):
 @pytest.mark.parametrize("shape", [(8, 128), (2, 64, 256), (1, 3, 5, 512), (256, 1024)])
 @pytest.mark.parametrize("plus_one", [False, True])
 def test_rms_norm_sweep(shape, dtype, plus_one):
+    # (1, 3, 5, 512) has 15 rows: exercises the pad-rows-to-block path that
+    # replaced the old divide-by-halving block selection
     x = jax.random.normal(jax.random.key(0), shape).astype(dtype)
     w = jax.random.normal(jax.random.key(1), shape[-1:])
-    out = rms_norm(x, w, 1e-6, plus_one)
+    out = icall("rms_norm", x, w, eps=1e-6, plus_one=plus_one)
     ref = rms_norm_ref(x, w, 1e-6, plus_one)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
@@ -108,12 +124,17 @@ def test_rms_norm_sweep(shape, dtype, plus_one):
 def test_rms_norm_grad():
     x = jax.random.normal(jax.random.key(2), (16, 128))
     w = jax.random.normal(jax.random.key(3), (128,))
-    g1 = jax.grad(lambda x_: rms_norm(x_, w).sum())(x)
+    g1 = jax.grad(lambda x_: icall("rms_norm", x_, w).sum())(x)
     g2 = jax.grad(lambda x_: rms_norm_ref(x_, w).sum())(x)
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------- mvr update
+def _mvr(gn, v, go, alpha):
+    with api.dispatch_mode("interpret"):
+        return api.tree_apply("mvr_update", gn, v, go, scalars=(alpha,))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("shape", [(1024,), (512, 128), (3, 7, 11)])
 @pytest.mark.parametrize("alpha", [0.0, 0.05, 1.0])
@@ -122,7 +143,7 @@ def test_mvr_update_sweep(shape, dtype, alpha):
     gn = jax.random.normal(ks[0], shape).astype(dtype)
     v = jax.random.normal(ks[1], shape).astype(dtype)
     go = jax.random.normal(ks[2], shape).astype(dtype)
-    out = mvr_update(gn, v, go, alpha)
+    out = _mvr(gn, v, go, alpha)
     ref = mvr_update_ref(gn, v, go, alpha)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
@@ -132,10 +153,13 @@ def test_mvr_update_sweep(shape, dtype, alpha):
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(1, 4096), alpha=st.floats(0.0, 1.0))
 def test_mvr_update_property(n, alpha):
-    """Any size works (kernel for lane-aligned sizes, oracle fallback else)."""
+    """EVERY size runs on the kernel path now (lane padding; no oracle
+    fallback for ragged buffers)."""
     ks = jax.random.split(jax.random.key(n), 3)
     gn, v, go = (jax.random.normal(k, (n,)) for k in ks)
-    out = mvr_update(gn, v, go, alpha)
+    api.reset_counters()
+    out = _mvr(gn, v, go, alpha)
+    assert api.launch_counts() == {"mvr_update": 1}, n
     ref = mvr_update_ref(gn, v, go, alpha)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
 
@@ -144,13 +168,12 @@ def test_mvr_alpha_one_is_sgd():
     """alpha=1 collapses MVR to the plain gradient (DSE-SGD reduction)."""
     ks = jax.random.split(jax.random.key(5), 3)
     gn, v, go = (jax.random.normal(k, (512,)) for k in ks)
-    np.testing.assert_allclose(np.asarray(mvr_update(gn, v, go, 1.0)), np.asarray(gn), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(_mvr(gn, v, go, 1.0)), np.asarray(gn), rtol=1e-6, atol=1e-6
+    )
 
 
 # ---------------------------------------------------------------- wkv chunk
-from repro.kernels.wkv_chunk import wkv_chunk, wkv_ref
-
-
 def _wkv_inputs(key, b, s, h, p, decay_mag=1.0, dtype=jnp.float32):
     ks = jax.random.split(key, 4)
     r = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
@@ -177,7 +200,7 @@ def test_wkv_chunk_sweep(b, s, h, p, chunk, dtype):
     # chunk * |logw| < ~25) — measured in EXPERIMENTS A1
     r, k, v, logw = _wkv_inputs(jax.random.key(7), b, s, h, p,
                                 decay_mag=0.3 if chunk > 16 else 1.0, dtype=dtype)
-    y1, s1 = wkv_chunk(r, k, v, logw, chunk)
+    y1, s1 = icall("wkv_chunk", r, k, v, logw, chunk=chunk)
     y2, s2 = wkv_ref(r, k, v, logw)
     tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2, np.float32), **tol)
@@ -188,7 +211,7 @@ def test_wkv_chunk_grad_matches_oracle():
     r, k, v, logw = _wkv_inputs(jax.random.key(9), 1, 32, 1, 16)
 
     def f_kernel(r, k, v, w):
-        y, s = wkv_chunk(r, k, v, w, 16)
+        y, s = icall("wkv_chunk", r, k, v, w, chunk=16)
         return (y ** 2).sum() + (s ** 2).sum()
 
     def f_ref(r, k, v, w):
@@ -205,6 +228,6 @@ def test_wkv_chunk_grad_matches_oracle():
 @given(s=st.sampled_from([32, 64]), p=st.sampled_from([16, 32]))
 def test_wkv_chunk_property(s, p):
     r, k, v, logw = _wkv_inputs(jax.random.key(s * p), 1, s, 2, p)
-    y1, s1 = wkv_chunk(r, k, v, logw, 16)
+    y1, s1 = icall("wkv_chunk", r, k, v, logw, chunk=16)
     y2, s2 = wkv_ref(r, k, v, logw)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-5)
