@@ -1,43 +1,140 @@
 """Communication-cost table (the paper's 'Comm.' column, measured).
 
-Analytic bytes/round/node for each method + measured HLO link bytes for the
-gossip backends on a real sharded mesh (from the dry-run results when
-available)."""
+Analytic bytes/round/node for each method — degree taken from the actual
+mixing matrix (or averaged over a scenario schedule), compressed wire bytes
+derived from the ``CommSpec.compression`` codec — plus measured HLO link
+bytes for the gossip backends on a real sharded mesh (from the dry-run
+results when available)."""
 from __future__ import annotations
 
 import json
 import os
 
+import numpy as np
 
-def analytic_rows(d_params: int = 1_000_000, n: int = 16, tau: int = 4, dtype_bytes: int = 4):
+
+def mean_degree(w) -> float:
+    """Average node degree of a mixing matrix (or a (R, N, N) schedule
+    stack): off-diagonal nonzeros per row, averaged — replaces the old
+    hardcoded ring ``deg = 2``."""
+    w = np.asarray(w, dtype=np.float64)
+    if w.ndim == 2:
+        w = w[None]
+    degs = []
+    for wt in w:
+        off = np.abs(wt - np.diag(np.diag(wt))) > 1e-12
+        degs.append(off.sum(axis=1).mean())
+    return float(np.mean(degs))
+
+
+def analytic_rows(
+    d_params: int = 1_000_000,
+    n: int = 16,
+    tau: int = 4,
+    dtype_bytes: int = 4,
+    topology=None,
+    scenario=None,
+    compression=None,
+    msg_shape=None,
+):
     """Bytes each node sends per ROUND (tau iterations), derived from each
     algorithm's declarative CommSpec: comm events per round times gossiped
-    buffers times ring degree (each node sends to 2 neighbors)."""
-    from repro.core import ALGORITHMS
+    buffers times the topology's actual degree.
 
-    pb = d_params * dtype_bytes
-    deg = 2
+    ``topology`` (a ``repro.core.Topology``) or ``scenario`` (a
+    ``repro.scenarios.Scenario``, degree averaged over its materialized W_t
+    schedule) supply the graph; default is the paper's ring.  ``compression``
+    (spec name / ``Compressor``) overrides each method's own
+    ``CommSpec.compression`` for the ``compressed_*`` column; methods whose
+    spec declares no codec and no override send raw buffers.  ``msg_shape``
+    is the per-node shape the codec's byte model sees (default the flat
+    ``(d_params,)`` vector; shape-sensitive codecs like ``low_rank`` need a
+    representative matrix shape to report real savings).
+    """
+    import jax.numpy as jnp
+
+    from repro.compression import make_compressor
+    from repro.core import ALGORITHMS, ring
+
+    if scenario is not None:
+        sched = scenario.materialize(n, n_rounds=8, round_len=max(tau, 1))
+        deg = mean_degree(sched.w)
+        graph = scenario.name
+    else:
+        topology = topology or ring(n)
+        deg = mean_degree(topology.w)
+        graph = topology.name
+
+    override = make_compressor(compression) if compression is not None else None
+    dtype = {1: jnp.int8, 2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}[dtype_bytes]
+    shape = tuple(msg_shape) if msg_shape is not None else (d_params,)
     rows = []
     for method, cls in ALGORITHMS.items():
         spec = cls.comm
         events = spec.comm_events_per_round(tau)
+        msg_bytes = d_params * dtype_bytes
+        comp = override or spec.compression
+        comp_msg_bytes = (
+            comp.payload_bytes(shape, dtype) if comp is not None else msg_bytes
+        )
         rows.append({
             "method": method,
-            "bytes_per_round": events * deg * len(spec.buffers) * pb,
+            "graph": graph,
+            "deg": round(deg, 3),
             "comm_events": events,
+            "bytes_per_round": int(events * deg * len(spec.buffers) * msg_bytes),
+            "compressed_bytes_per_round": int(
+                events * deg * len(spec.buffers) * comp_msg_bytes
+            ),
+            "compression": getattr(comp, "tag", None),
         })
     return rows
 
 
+def _row(r, bench, **extra):
+    return {
+        "bench": bench,
+        "method": r["method"],
+        "graph": r["graph"],
+        "deg": r["deg"],
+        "mbytes_per_round_per_node": r["bytes_per_round"] / 1e6,
+        "compressed_mbytes_per_round_per_node": r["compressed_bytes_per_round"] / 1e6,
+        **extra,
+    }
+
+
 def run():
-    rows = []
-    for r in analytic_rows():
-        rows.append({
-            "bench": "comm_analytic",
-            "method": r["method"],
-            "mbytes_per_round_per_node": r["bytes_per_round"] / 1e6,
-            "comm_events_per_round": r["comm_events"],
-        })
+    rows = [
+        _row(r, "comm_analytic", comm_events_per_round=r["comm_events"])
+        for r in analytic_rows()
+    ]
+    # the compressed column under each registered codec (ring graph, DSE-MVR
+    # and the every-step GT-HSGD as the two cadence extremes).  low_rank's
+    # byte model is shape-sensitive, so it sees a representative square
+    # matrix instead of the flat (d,) vector that would report no savings.
+    for comp in ("identity", "qsgd", "top_k:0.1", "rand_k:0.1", "low_rank:4"):
+        shape = (1000, 1000) if comp.startswith("low_rank") else None
+        for r in analytic_rows(compression=comp, msg_shape=shape):
+            if r["method"] not in ("dse_mvr", "gt_hsgd"):
+                continue
+            rows.append(_row(
+                r, "comm_compressed",
+                compression=r["compression"],
+                ratio=round(
+                    r["bytes_per_round"] / max(r["compressed_bytes_per_round"], 1), 2
+                ),
+            ))
+    # degree really comes from the graph, not a constant: show a torus and a
+    # time-varying one-peer schedule next to the ring
+    from repro.core import torus
+    from repro.scenarios import make_scenario
+
+    for graph_kw in ({"topology": torus(4, 4)}, {"scenario": make_scenario("one_peer")}):
+        for r in analytic_rows(**graph_kw):
+            if r["method"] == "dse_mvr":
+                rows.append(
+                    _row(r, "comm_analytic", comm_events_per_round=r["comm_events"])
+                )
     # measured gossip-backend traffic from the dry-run, if present
     path = "benchmarks/results/dryrun.json"
     if os.path.exists(path):

@@ -1,0 +1,114 @@
+"""Compressed-gossip bench: bytes-on-the-wire vs convergence.
+
+DSE-MVR on the synthetic non-convex benchmark (the tanh-MLP pseudo-MNIST
+problem from ``benchmarks/common.py``), 8-node ring through the scenario
+engine so the dense per-round tracking-error stream is on-device.  One row
+per registered codec records
+
+  * analytic wire bytes per round per node (CommSpec buffers x degree x the
+    codec's payload model over the real parameter tree),
+  * the compression ratio vs the uncompressed row,
+  * final/mean tracking error Σ_i ||v_i − ∇f(x̄)||² and final train loss,
+  * ``tracking_vs_identity`` — final tracking error relative to the
+    uncompressed run (the acceptance bar is <= 2x for qsgd / top_k).
+
+-> benchmarks/results/BENCH_compression.json
+"""
+from __future__ import annotations
+
+import time
+
+COMPRESSORS = ("identity", "qsgd", "top_k:0.1", "rand_k:0.25", "low_rank:2")
+
+
+def run(rounds: int = 24, tau: int = 4, seed: int = 0):
+    import jax
+    import numpy as np
+
+    from repro.compression import make_compressor
+    from repro.core import Simulator, make_algorithm
+    from repro.scenarios import make_scenario
+
+    from .comm import mean_degree
+    from .common import make_paper_problem, mlp_init, mlp_loss
+
+    data, _ = make_paper_problem(omega=10.0, seed=seed, n_train=1600, n_test=100)
+    params = mlp_init(jax.random.key(seed))
+    scenario = make_scenario("baseline", seed=seed)
+
+    rows = []
+    finals = {}
+    for comp_name in COMPRESSORS:
+        alg = make_algorithm(
+            "dse_mvr", lr=0.1, alpha=0.1, tau=tau, compression=comp_name
+        )
+        sim = Simulator(
+            alg, None, mlp_loss, data, batch_size=16, scenario=scenario
+        )
+        t0 = time.perf_counter()
+        out = sim.run(
+            params, jax.random.key(seed), num_steps=rounds * tau,
+            eval_every=rounds * tau,
+        )
+        wall = time.perf_counter() - t0
+        te = np.asarray(out["streams"]["tracking_err"], dtype=np.float64)
+        final_te = float(te[-1])
+        finals[comp_name] = final_te
+
+        comp = make_compressor(comp_name)
+        spec = alg.comm
+        deg = mean_degree(scenario.materialize(data.n_nodes, 4, tau).w)
+        msg_bytes = comp.tree_bytes(params)
+        raw_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+        per_round = (
+            spec.comm_events_per_round(tau) * deg * len(spec.buffers) * msg_bytes
+        )
+        raw_per_round = (
+            spec.comm_events_per_round(tau) * deg * len(spec.buffers) * raw_bytes
+        )
+        rows.append({
+            "bench": "compression",
+            "name": f"compression/dse_mvr/{comp.tag}",
+            "method": "dse_mvr",
+            "compression": comp.tag,
+            "tau": tau,
+            "rounds": rounds,
+            "n_nodes": data.n_nodes,
+            "deg": round(deg, 3),
+            "kbytes_per_round_per_node": round(per_round / 1e3, 2),
+            "bytes_ratio": round(raw_per_round / per_round, 2),
+            "final_tracking_err": final_te,
+            "mean_tracking_err": float(te[np.isfinite(te)].mean()),
+            "final_train_loss": out["history"][-1]["train_loss"],
+            "final_consensus": float(out["streams"]["consensus"][-1]),
+            "mean_compression_err": float(
+                np.nanmean(np.asarray(out["streams"]["compression_err"]))
+            ) if comp_name != "identity" else None,
+            "tracking_vs_identity": None,  # filled below
+            "us_per_call": round(wall / max(rounds, 1) * 1e6, 1),
+        })
+
+    base = finals["identity"]
+    for r in rows:
+        r["tracking_vs_identity"] = round(
+            finals[
+                next(c for c in COMPRESSORS if make_compressor(c).tag == r["compression"])
+            ] / base,
+            3,
+        )
+    return rows
+
+
+def main(rounds: int = 24):
+    import json
+    import os
+
+    rows = run(rounds=rounds)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_compression.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

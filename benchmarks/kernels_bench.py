@@ -127,7 +127,7 @@ def _shaped_cases():
     w = jnp.ones((1024,))
     r = jax.random.normal(jax.random.key(2), (1, 64, 4, 64), jnp.float32) * 0.5
     lw = -jnp.exp(jax.random.normal(jax.random.key(3), (1, 64, 4, 64)) * 0.3)
-    return {
+    cases = {
         "flash_attention": (
             (q, q, q), dict(causal=True),
             {"derived_gflops": round(4 * b * h * s * s * d / 2 / 1e9, 3)},
@@ -141,6 +141,21 @@ def _shaped_cases():
             {"derived_gb_moved": round(4 * r.size * 4 / 1e9, 4)},
         ),
     }
+    # compression pack/unpack: 8 nodes x 1M elements at 5% sparsity
+    xs = jax.random.normal(jax.random.key(4), (8, 1 << 20), jnp.float32)
+    idx = jax.random.randint(
+        jax.random.key(5), (8, (1 << 20) // 20), 0, 1 << 20
+    ).astype(jnp.int32)
+    vals = jnp.take_along_axis(xs, idx, axis=1)
+    cases["top_k_pack"] = (
+        (xs, idx), {},
+        {"derived_gb_moved": round((xs.size + 2 * idx.size) * 4 / 1e9, 4)},
+    )
+    cases["top_k_unpack"] = (
+        (idx, vals), dict(d=1 << 20),
+        {"derived_gb_moved": round((xs.size + 2 * idx.size) * 4 / 1e9, 4)},
+    )
+    return cases
 
 
 def _shaped_rows(api):

@@ -13,6 +13,7 @@ import tempfile
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import msgpack
 import numpy as np
 
@@ -21,10 +22,25 @@ PyTree = Any
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager"]
 
 
+def _to_array(v):
+    """np view of a leaf; typed PRNG keys (the compression codec state)
+    are stored as their raw uint32 key data."""
+    if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jax.dtypes.prng_key):
+        return np.asarray(jax.random.key_data(v))
+    return np.asarray(v)
+
+
+def _like_leaf(leaf, like):
+    """Inverse of :func:`_to_array` given the matching ``like`` leaf."""
+    if hasattr(like, "dtype") and jnp.issubdtype(like.dtype, jax.dtypes.prng_key):
+        return jax.random.wrap_key_data(jnp.asarray(leaf))
+    return leaf
+
+
 def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
-    leaves = [np.asarray(v) for _, v in flat]
+    leaves = [_to_array(v) for _, v in flat]
     return paths, leaves, treedef
 
 
@@ -66,7 +82,14 @@ def load_checkpoint(directory: str, step: Optional[int] = None, like: Optional[P
     data = np.load(os.path.join(path, "data.npz"))
     leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
     if like is not None:
-        _, treedef = jax.tree_util.tree_flatten(like)
+        like_leaves, treedef = jax.tree_util.tree_flatten(like)
+        if len(leaves) != len(like_leaves):
+            raise ValueError(
+                f"checkpoint at {path} has {len(leaves)} leaves but `like` "
+                f"has {len(like_leaves)} — state layout changed; load without "
+                "`like` and migrate by path"
+            )
+        leaves = [_like_leaf(l, ll) for l, ll in zip(leaves, like_leaves)]
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return tree, manifest["metadata"]
     out: Dict[str, Any] = {}

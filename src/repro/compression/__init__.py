@@ -1,0 +1,37 @@
+"""Communication-compression subsystem: quantized/sparsified gossip with
+error feedback, declared on the algorithm's :class:`~repro.core.CommSpec`.
+
+    alg = make_algorithm("dse_mvr", lr=0.1, tau=4, compression="top_k:0.1")
+    # or explicitly:
+    from repro.compression import make_compressor
+    alg = make_algorithm("dse_mvr", lr=0.1, tau=4,
+                         compression=make_compressor("qsgd", error_feedback=True))
+
+Both execution engines honor the spec through the one scanned round
+executor: the Simulator mixes decoded per-edge messages, the sharded
+runtime rolls packed payloads through collective-permute.  ``identity``
+(or no compression) is structurally bit-identical to the uncompressed path.
+"""
+from .base import (
+    COMPRESSORS,
+    CompressionState,
+    Compressor,
+    ErrorFeedback,
+    GossipChannel,
+    Packed,
+    abstract_compression_state,
+    attach_compression,
+    compression_error,
+    make_compressor,
+    register_compressor,
+)
+from .compressors import Identity, LowRank, QSGD, RandK, TopK
+from .gossip import rotation_combine
+
+__all__ = [
+    "Compressor", "ErrorFeedback", "Packed", "CompressionState",
+    "GossipChannel", "COMPRESSORS", "register_compressor", "make_compressor",
+    "attach_compression", "abstract_compression_state", "compression_error",
+    "Identity", "QSGD", "TopK", "RandK", "LowRank",
+    "rotation_combine",
+]

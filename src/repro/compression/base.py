@@ -1,0 +1,391 @@
+"""Communication compression: the declarative ``Compressor`` contract.
+
+The paper's whole premise is cutting communication in decentralized
+non-convex optimization; this package makes the *message representation* a
+first-class, declarative axis next to the algorithm's ``CommSpec``:
+
+  * :class:`Compressor` — a frozen-dataclass codec over node-stacked leaves
+    (leading axis N in BOTH engines): ``encode(leaf, key) -> Packed`` /
+    ``decode(Packed) -> leaf``, plus an analytic ``payload_bytes`` model for
+    the bandwidth tables.  Concrete codecs live in ``compressors.py``
+    (``identity``, ``qsgd``, ``top_k``, ``rand_k``, ``low_rank``).
+  * :class:`ErrorFeedback` — the composable residual wrapper: each node
+    transmits ``m = C(x + e)`` and keeps ``e' = x + e - m``, the standard
+    fix that makes biased codecs (top-k, low-rank) convergent.  Residuals
+    are *algorithm state*: :class:`CompressionState` rides in the ``comp``
+    field of every state dataclass, so they scan, checkpoint, shard and gate
+    (fault masking) exactly like any other buffer.
+  * :class:`GossipChannel` — the trace-time adapter the round executor
+    (``repro.core.algorithm.make_round_step``) wraps around ``mix_fn``.  One
+    channel per communication event; the k-th ``mix`` call inside
+    ``comm_update`` is matched to the k-th entry of ``CommSpec.buffers``
+    (per-buffer residual state), the same mutable-cell idiom the runtime
+    already uses for its metrics loss.
+
+Engines decide the *transport* of the encoded payload via a ``combine``
+callback — ``Simulator`` decompresses per node and applies the dense W
+contraction (mathematically the per-edge ``sum_j w_ij D(m_j)``), the sharded
+runtime rolls the packed payload arrays through ``collective-permute`` so
+the measured link bytes actually shrink (``gossip.py``).
+
+This module is deliberately free of ``repro.core`` imports (the executor
+imports us, not vice versa).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Packed",
+    "Compressor",
+    "ErrorFeedback",
+    "CompressionState",
+    "GossipChannel",
+    "COMPRESSORS",
+    "register_compressor",
+    "make_compressor",
+    "attach_compression",
+    "abstract_compression_state",
+    "compression_error",
+]
+
+
+@dataclasses.dataclass
+class Packed:
+    """Encoded form of ONE node-stacked leaf.
+
+    data: payload arrays, every one carrying the leading node axis N (so the
+          transport layer can permute/roll them along the node dimension).
+    meta: static description needed to decode (original per-node shape,
+          dtype name, codec extras) — hashable, participates in the pytree
+          structure, so scan/jit see a stable treedef.
+    """
+
+    data: Dict[str, jnp.ndarray]
+    meta: Tuple = ()
+
+
+jax.tree_util.register_dataclass(Packed, data_fields=["data"], meta_fields=["meta"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base codec: identity semantics, subclasses override encode/decode.
+
+    All codecs operate on *node-stacked* leaves — shape (N, ...) — which is
+    the state layout of both engines (vmapped simulator, node-sharded
+    runtime).  ``encode`` may consume PRNG ``key`` (stochastic codecs);
+    deterministic codecs ignore it.
+    """
+
+    #: True only for the no-op codec: the executor short-circuits it to the
+    #: exact uncompressed gossip path (structural bit-parity, no residuals).
+    is_identity = False
+    #: True when the codec carries per-buffer residual state (ErrorFeedback).
+    uses_residual = False
+
+    @property
+    def tag(self) -> str:
+        """Short label for sweep cell ids / bench rows."""
+        return type(self).__name__.lower()
+
+    # -- per-leaf codec ----------------------------------------------------
+    def encode(self, x: jnp.ndarray, key) -> Packed:
+        raise NotImplementedError
+
+    def decode(self, packed: Packed) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def payload_bytes(self, shape: Tuple[int, ...], dtype) -> int:
+        """Analytic bytes ONE node puts on the wire for a leaf of per-node
+        ``shape`` (node axis excluded) and ``dtype`` (bandwidth tables)."""
+        raise NotImplementedError
+
+    # -- whole-tree helpers ------------------------------------------------
+    def encode_tree(self, tree: PyTree, key) -> PyTree:
+        leaves, treedef = jax.tree.flatten(tree)
+        enc = [
+            self.encode(leaf, jax.random.fold_in(key, i))
+            for i, leaf in enumerate(leaves)
+        ]
+        return jax.tree.unflatten(treedef, enc)
+
+    def decode_tree(self, ptree: PyTree) -> PyTree:
+        return jax.tree.map(
+            self.decode, ptree, is_leaf=lambda x: isinstance(x, Packed)
+        )
+
+    def tree_bytes(self, tree: PyTree) -> int:
+        """Analytic per-node wire bytes for one message of ``tree``'s shape
+        (leaves may be arrays or ShapeDtypeStructs *without* the node axis)."""
+        return sum(
+            self.payload_bytes(tuple(l.shape), l.dtype)
+            for l in jax.tree.leaves(tree)
+        )
+
+    def roundtrip(
+        self, tree: PyTree, residual: Optional[PyTree], key
+    ) -> Tuple[PyTree, PyTree, Optional[PyTree]]:
+        """(payload, decoded, new_residual) for one gossip message."""
+        del residual  # residual-free codec
+        payload = self.encode_tree(tree, key)
+        return payload, self.decode_tree(payload), None
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback(Compressor):
+    """Composable error-feedback wrapper: transmit ``m = C(x + e)``, keep
+    ``e' = (x + e) - D(m)`` per node and per gossiped buffer.
+
+    Decoding is delegated to the inner codec, so the transport layer
+    (``gossip.py`` combines) never needs to know whether feedback is on.
+    """
+
+    inner: Compressor = None  # type: ignore[assignment]
+    uses_residual = True
+
+    def __post_init__(self):
+        if not isinstance(self.inner, Compressor):
+            raise ValueError("ErrorFeedback needs an inner Compressor")
+        if self.inner.uses_residual:
+            raise ValueError("ErrorFeedback cannot wrap another ErrorFeedback")
+
+    @property
+    def is_identity(self):  # type: ignore[override]
+        # feeding back a zero error is still the identity
+        return self.inner.is_identity
+
+    @property
+    def tag(self) -> str:
+        return f"ef_{self.inner.tag}"
+
+    def encode(self, x, key):
+        return self.inner.encode(x, key)
+
+    def decode(self, packed):
+        return self.inner.decode(packed)
+
+    def payload_bytes(self, shape, dtype):
+        return self.inner.payload_bytes(shape, dtype)
+
+    def roundtrip(self, tree, residual, key):
+        if residual is None:
+            raise ValueError("ErrorFeedback.roundtrip needs the residual state")
+        inp = jax.tree.map(
+            lambda x, e: (x.astype(jnp.float32) + e.astype(jnp.float32)).astype(x.dtype),
+            tree,
+            residual,
+        )
+        payload = self.inner.encode_tree(inp, key)
+        dec = self.inner.decode_tree(payload)
+        new_res = jax.tree.map(
+            lambda i, d, e: (
+                i.astype(jnp.float32) - d.astype(jnp.float32)
+            ).astype(e.dtype),
+            inp,
+            dec,
+            residual,
+        )
+        return payload, dec, new_res
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+COMPRESSORS: Dict[str, Callable[..., Compressor]] = {}
+
+
+def register_compressor(name: str, factory: Callable[..., Compressor]):
+    if name in COMPRESSORS:
+        raise ValueError(f"compressor {name!r} already registered")
+    COMPRESSORS[name] = factory
+    return factory
+
+
+def make_compressor(spec, error_feedback: Optional[bool] = None, **kwargs) -> Compressor:
+    """Resolve a compressor spec: a ready instance, or a registry name with
+    an optional ``:arg`` shorthand (``"top_k:0.05"``, ``"low_rank:4"``).
+
+    ``error_feedback=None`` (default) wraps every *lossy* codec in
+    :class:`ErrorFeedback`; pass ``False`` for the raw codec, ``True`` to
+    force the wrapper (a no-op around ``identity``).
+    """
+    if isinstance(spec, Compressor):
+        return spec
+    if not isinstance(spec, str):
+        raise ValueError(
+            f"compression spec must be a name or a Compressor, got {type(spec).__name__}"
+        )
+    name, _, arg = spec.partition(":")
+    try:
+        factory = COMPRESSORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {spec!r}; known: {sorted(COMPRESSORS)}"
+        ) from None
+    comp = factory(arg, **kwargs) if arg else factory(**kwargs)
+    if error_feedback is None:
+        error_feedback = not comp.is_identity
+    return ErrorFeedback(inner=comp) if error_feedback else comp
+
+
+# --------------------------------------------------------------------------
+# state + channel (consumed by the round executor)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CompressionState:
+    """Per-node compression side-state carried in the algorithm state pytree.
+
+    residuals: one params-shaped, node-stacked tree per ``CommSpec.buffers``
+               entry (empty tuple for residual-free codecs);
+    key:       scalar typed PRNG key driving stochastic codecs — scalar so
+               the fault-gating per-node selects never touch it.
+    """
+
+    residuals: Tuple[PyTree, ...]
+    key: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    CompressionState, data_fields=["residuals", "key"], meta_fields=[]
+)
+
+
+def attach_compression(algorithm, state, key: Optional[jax.Array] = None):
+    """Attach the :class:`CompressionState` an algorithm's spec calls for.
+
+    Identity / no compression returns ``state`` untouched (``comp=None``) —
+    the uncompressed state pytree is structurally unchanged, which is what
+    makes the identity bit-parity guarantee structural rather than numeric.
+
+    The is-it-active rule lives in ONE place — ``CommSpec.
+    active_compression()`` — so state attachment can never disagree with
+    the executor about whether a codec is in play.
+    """
+    comp = algorithm.comm.active_compression()
+    if comp is None:
+        return state
+    if key is None:
+        key = jax.random.key(0)
+    else:
+        arr = jnp.asarray(key)
+        if jnp.issubdtype(arr.dtype, jnp.integer):
+            if arr.ndim == 0:
+                key = jax.random.key(arr)          # plain int seed
+            else:
+                # legacy raw PRNGKey (uint32 key data, e.g. jax.random.PRNGKey)
+                key = jax.random.wrap_key_data(arr.astype(jnp.uint32))
+    residuals = ()
+    if comp.uses_residual:
+        residuals = tuple(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), state.params)
+            for _ in algorithm.comm.buffers
+        )
+    return dataclasses.replace(
+        state, comp=CompressionState(residuals=residuals, key=key)
+    )
+
+
+def abstract_compression_state(algorithm, state):
+    """ShapeDtypeStruct-level :func:`attach_compression` for ``eval_shape`` /
+    sharding derivation: same state layout, ZERO allocation.
+
+    ``attach_compression`` builds real zero residual trees — calling it
+    inside ``jax.eval_shape`` would still materialize n_buffers copies of
+    the full parameter memory (``jnp.zeros`` of a static shape is a concrete
+    constant even under tracing), which at production scale OOMs before any
+    training runs.
+    """
+    comp = algorithm.comm.active_compression()
+    if comp is None:
+        return state
+    sds = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)  # noqa: E731
+    residuals = ()
+    if comp.uses_residual:
+        residuals = tuple(
+            jax.tree.map(sds, state.params) for _ in algorithm.comm.buffers
+        )
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    return dataclasses.replace(
+        state, comp=CompressionState(residuals=residuals, key=key)
+    )
+
+
+def compression_error(state) -> jnp.ndarray:
+    """Σ ||e||² over all error-feedback residuals (NaN when the state
+    carries no compression residuals) — the per-round metrics stream."""
+    comp = getattr(state, "comp", None)
+    if comp is None or not comp.residuals:
+        return jnp.float32(jnp.nan)
+    total = jnp.float32(0.0)
+    for tree in comp.residuals:
+        for leaf in jax.tree.leaves(tree):
+            total = total + jnp.sum(leaf.astype(jnp.float32) ** 2)
+    return total
+
+
+# default transport: decode per node, hand the decoded tree to the engine's
+# linear mix (the Simulator / dense backends; the payload itself never moves)
+def _default_combine(mix_fn, scheduled: bool):
+    if scheduled:
+        return lambda payload, dec, ctx: mix_fn(dec, ctx)
+    return lambda payload, dec, ctx: mix_fn(dec)
+
+
+class GossipChannel:
+    """One communication event's compressed gossip, built fresh per trace.
+
+    The k-th ``mix`` call inside ``comm_update`` is the k-th declared buffer
+    of the ``CommSpec`` — residuals are matched positionally and collected
+    through a trace-time cell, then threaded back into the scan carry by the
+    executor via :meth:`final_state`.
+    """
+
+    def __init__(self, comp: Compressor, n_sites: int, comp_state: CompressionState,
+                 combine=None, *, mix_fn=None, scheduled: bool = False):
+        if combine is None:
+            if mix_fn is None:
+                raise ValueError("GossipChannel needs combine= or mix_fn=")
+            combine = _default_combine(mix_fn, scheduled)
+        self._comp = comp
+        self._combine = combine
+        self._n_sites = n_sites
+        self._residuals = comp_state.residuals
+        use_key, next_key = jax.random.split(comp_state.key)
+        self._use_key = use_key
+        self._next_key = next_key
+        self._new_residuals = []
+        self._calls = 0
+
+    def mix(self, tree: PyTree, ctx=None) -> PyTree:
+        i = self._calls
+        if i >= self._n_sites:
+            raise ValueError(
+                f"comm_update gossiped more than the {self._n_sites} buffers "
+                "declared in CommSpec.buffers — compression cannot match "
+                "residual state to call sites"
+            )
+        self._calls += 1
+        res = self._residuals[i] if self._comp.uses_residual else None
+        payload, dec, new_res = self._comp.roundtrip(
+            tree, res, jax.random.fold_in(self._use_key, i)
+        )
+        if new_res is not None:
+            self._new_residuals.append(new_res)
+        return self._combine(payload, dec, ctx)
+
+    def final_state(self) -> CompressionState:
+        if self._calls != self._n_sites:
+            raise ValueError(
+                f"comm_update gossiped {self._calls} buffers but CommSpec "
+                f"declares {self._n_sites} — fix the spec's buffers tuple"
+            )
+        return CompressionState(
+            residuals=tuple(self._new_residuals), key=self._next_key
+        )

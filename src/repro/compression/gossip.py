@@ -1,0 +1,86 @@
+"""Transport backends for compressed gossip.
+
+The :class:`~repro.compression.base.GossipChannel` hands every combine
+callback ``(payload, dec, ctx)``:
+
+  * ``payload`` — the encoded message tree (every array node-stacked), the
+    thing that would move on a real wire;
+  * ``dec``     — the locally decoded message ``D(m_i)`` (each node's own);
+  * ``ctx``     — the scenario round context (scheduled executors only).
+
+Dense engines (the Simulator's W contraction, the runtime's all-gather
+fallback) just mix ``dec`` — per-edge semantics ``x_i ← Σ_j w_ij D(m_j)``
+by linearity, with nothing to gain wire-wise.  The sharded runtime's
+shift-structured backend uses :func:`rotation_combine`: the *packed payload
+arrays* are rolled along the node axis (lowering to ``collective-permute``
+under GSPMD, exactly like ``Rotation.apply``), decoded per shift and
+weight-summed — so the measured HLO link bytes are the payload's, not the
+full buffer's.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.mixing import Rotation
+from .base import Compressor
+
+PyTree = Any
+Combine = Callable[[PyTree, PyTree, Optional[Any]], PyTree]
+
+__all__ = ["rotation_combine"]
+
+# (The dense transport — mix the decoded messages through the engine's
+# opaque linear gossip — is GossipChannel's built-in default in base.py;
+# only the payload-rolling rotation backend needs a dedicated combine.)
+
+
+def rotation_combine(
+    comp: Compressor, rotations: Sequence[Rotation], scheduled: bool = False
+) -> Combine:
+    """Compressed shift-structured gossip: roll the payload, decode, combine.
+
+    ``x_i ← w_self · D(m_i) + Σ_s w_s · D(m_{i+s})`` — the same linear
+    operator as the dense ``Σ_j w_ij D(m_j)`` (the Simulator's compressed
+    semantics), but only payload bytes cross links.  With ``scheduled=True``
+    the round context's ``pattern`` switches between the static rotations
+    (mirroring ``scheduled_rotation_mix``); a single rotation skips the
+    switch so the static path stays trivially traceable.
+    """
+    rotations = tuple(rotations)
+    if not rotations:
+        raise ValueError("rotation_combine needs at least one rotation")
+
+    def one(rot: Rotation, payload, dec):
+        acc = jax.tree.map(
+            lambda d: rot.self_weight * d.astype(jnp.float32), dec
+        )
+        for s, wgt in zip(rot.shifts, rot.weights):
+            shifted = jax.tree.map(lambda a: jnp.roll(a, -s, axis=0), payload)
+            dec_s = comp.decode_tree(shifted)
+            acc = jax.tree.map(
+                lambda a, d: a + wgt * d.astype(jnp.float32), acc, dec_s
+            )
+        return jax.tree.map(lambda a, d: a.astype(d.dtype), acc, dec)
+
+    if not scheduled:
+        if len(rotations) != 1:
+            raise ValueError("static rotation_combine needs exactly one rotation")
+        rot = rotations[0]
+        return lambda payload, dec, ctx: one(rot, payload, dec)
+
+    def combine(payload, dec, ctx):
+        if len(rotations) == 1:
+            return one(rotations[0], payload, dec)
+        return lax.switch(
+            ctx.pattern,
+            [functools.partial(one, r) for r in rotations],
+            payload,
+            dec,
+        )
+
+    return combine

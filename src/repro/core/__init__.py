@@ -26,7 +26,13 @@ remains available as thin deprecation shims on every class.
 import dataclasses as _dataclasses
 
 from .topology import Topology, ring, torus, fully_connected, star, metropolis_hastings, spectral_gap, check_mixing_matrix
-from .algorithm import CommSpec, DecentralizedAlgorithm, RoundCtx, make_round_step
+from .algorithm import (
+    CommSpec,
+    DecentralizedAlgorithm,
+    RoundCtx,
+    make_round_step,
+    reset_legacy_warnings,
+)
 from .dse import DSEMVR, DSESGD, DSEState
 from .baselines import DSGD, DLSGD, GTDSGD, GTHSGD, PDSGDM, SlowMoD
 from .mixing import (
@@ -69,7 +75,7 @@ __all__ = [
     "Topology", "ring", "torus", "fully_connected", "star",
     "metropolis_hastings", "spectral_gap", "check_mixing_matrix",
     "CommSpec", "DecentralizedAlgorithm", "RoundCtx", "make_round_step",
-    "make_algorithm",
+    "make_algorithm", "reset_legacy_warnings",
     "DSEMVR", "DSESGD", "DSEState",
     "DSGD", "DLSGD", "GTDSGD", "GTHSGD", "PDSGDM", "SlowMoD",
     "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",

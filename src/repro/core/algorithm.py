@@ -19,7 +19,14 @@ execution engines consume:
     for any registered algorithm from the same executor.
 
 The legacy protocol (``local_step`` / ``round_end`` / python-dispatch
-``step(..., t=int)``) is kept as thin deprecation shims on each class.
+``step(..., t=int)``) is kept as thin deprecation shims on the base class
+(warning once per class; see ``reset_legacy_warnings``).
+
+Gossip compression (``repro.compression``) plugs in declaratively: the spec's
+``compression`` field names a wire codec, and :func:`make_round_step` routes
+every ``mix_fn`` call inside ``comm_update`` through a ``GossipChannel``
+(encode -> transport/combine -> per-buffer error-feedback residuals carried
+in the state's ``comp`` field).
 """
 from __future__ import annotations
 
@@ -36,7 +43,10 @@ PyTree = Any
 GradFn = Callable[[PyTree], PyTree]       # params -> grads (batch closed over)
 MixFn = Callable[[PyTree], PyTree]        # gossip: tree -> mixed tree
 
-__all__ = ["CommSpec", "DecentralizedAlgorithm", "RoundCtx", "make_round_step"]
+__all__ = [
+    "CommSpec", "DecentralizedAlgorithm", "RoundCtx", "make_round_step",
+    "reset_legacy_warnings",
+]
 
 CADENCES = ("every_step", "every_tau")
 RESETS = ("none", "minibatch", "full")
@@ -52,22 +62,38 @@ class CommSpec:
               ``comm_update`` closes the round.
     buffers:  names of the param-sized messages gossiped per communication
               event (bandwidth accounting; e.g. DSE sends the SGT tracking
-              buffer *and* the parameters => two messages per round).
+              buffer *and* the parameters => two messages per round).  The
+              ORDER matters: the k-th ``mix_fn`` call inside ``comm_update``
+              must gossip the k-th named buffer (compression matches its
+              per-buffer residual state positionally).
     reset:    which gradient the executor should hand to ``comm_update`` as
               ``reset_grad_fn``: "full" (full/large-batch local gradient —
               the DSE-MVR v-reset), "minibatch" (a fresh minibatch gradient —
               DSE-SGD), or "none".
+    compression: how gossiped messages are encoded on the wire — None, a
+              ``repro.compression`` registry name ("identity", "qsgd",
+              "top_k:0.1", "rand_k:0.1", "low_rank:2"; lossy codecs are
+              error-feedback-wrapped by default), or a ready
+              ``repro.compression.Compressor`` instance.  None and
+              "identity" take the exact uncompressed gossip path.
     """
 
     cadence: str = "every_tau"
     buffers: Tuple[str, ...] = ("params",)
     reset: str = "none"
+    compression: Any = None
 
     def __post_init__(self):
         if self.cadence not in CADENCES:
             raise ValueError(f"cadence {self.cadence!r} not in {CADENCES}")
         if self.reset not in RESETS:
             raise ValueError(f"reset {self.reset!r} not in {RESETS}")
+        if self.compression is not None:
+            from ..compression.base import make_compressor  # lazy: no cycle
+
+            object.__setattr__(
+                self, "compression", make_compressor(self.compression)
+            )
 
     def round_len(self, tau: int) -> int:
         """Steps per communication round (1 for every-step methods)."""
@@ -76,6 +102,15 @@ class CommSpec:
     def comm_events_per_round(self, tau: int) -> int:
         """Communication events in a window of ``tau`` iterations."""
         return tau if self.cadence == "every_step" else 1
+
+    def active_compression(self):
+        """The compressor the executors must honor (None for identity —
+        identity short-circuits to the uncompressed path, which is what
+        makes its bit-parity structural rather than numeric)."""
+        comp = self.compression
+        if comp is None or comp.is_identity:
+            return None
+        return comp
 
 
 @jax.tree_util.register_dataclass
@@ -139,6 +174,24 @@ def _select_nodes(mask: Optional[jnp.ndarray], new: Any, old: Any) -> Any:
 _warned: set = set()
 
 
+def _warn_legacy(cls, method: str, alt: str) -> None:
+    """Once-per-(class, method) DeprecationWarning for the legacy shims."""
+    key = (cls, method)
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(
+        f"{cls.__name__}.{method}() is deprecated; {alt}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset_legacy_warnings() -> None:
+    """Re-arm the once-per-class legacy-shim warnings (tests)."""
+    _warned.clear()
+
+
 class DecentralizedAlgorithm:
     """Base class / protocol for all decentralized optimization methods.
 
@@ -146,9 +199,27 @@ class DecentralizedAlgorithm:
     ``init`` / ``local_update`` / ``comm_update`` as *pure* functions of the
     state (scan-compatible: no host syncs, no data-dependent Python control
     flow).  ``comm`` declares the communication schedule.
+
+    Every subclass carries a ``compression`` hyperparameter field (spec name
+    or ``Compressor`` instance); when set, the instance's ``comm`` spec is
+    rebuilt with that codec so the executors — which only ever look at
+    ``algorithm.comm`` — pick it up declaratively.
     """
 
     comm: CommSpec = CommSpec()
+
+    #: per-instance wire codec (dataclass field on every subclass); None
+    #: keeps the class spec's compression (usually None = uncompressed)
+    compression: Any = None
+
+    def __post_init__(self):
+        comp = getattr(self, "compression", None)
+        if comp is not None:
+            object.__setattr__(
+                self,
+                "comm",
+                dataclasses.replace(type(self).comm, compression=comp),
+            )
 
     #: name of the state field that estimates the (global) gradient
     #: direction, consumed by the scenario metrics streams' tracking-error
@@ -184,19 +255,26 @@ class DecentralizedAlgorithm:
         :func:`make_round_step` (or the Simulator / make_train_job drivers),
         which never leave the device.
         """
-        if type(self) not in _warned:
-            _warned.add(type(self))
-            warnings.warn(
-                f"{type(self).__name__}.step() is deprecated; drive the "
-                "algorithm through repro.core.make_round_step / Simulator",
-                DeprecationWarning,
-                stacklevel=2,
-            )
+        _warn_legacy(
+            type(self), "step",
+            "drive the algorithm through repro.core.make_round_step / Simulator",
+        )
         rl = self.comm.round_len(getattr(self, "tau", 1))
         t_ = int(t if t is not None else state.step)
         if (t_ + 1) % rl == 0:
             return self.comm_update(state, mix_fn, grad_fn, reset_grad_fn)
         return self.local_update(state, grad_fn)
+
+    def local_step(self, state, grad_fn):
+        """DEPRECATED pre-PR-1 alias of :meth:`local_update`."""
+        _warn_legacy(type(self), "local_step", "use local_update()")
+        return self.local_update(state, grad_fn)
+
+    def round_end(self, state, mix_fn, grad_fn=None, reset_grad_fn=None):
+        """DEPRECATED pre-PR-1 round-closing step; :meth:`comm_update` is the
+        canonical transition (same fallback: ``reset_grad_fn or grad_fn``)."""
+        _warn_legacy(type(self), "round_end", "use comm_update()")
+        return self.comm_update(state, mix_fn, grad_fn, reset_grad_fn)
 
 
 def make_round_step(
@@ -209,6 +287,7 @@ def make_round_step(
     scheduled: bool = False,
     gate_local: bool = True,
     gate_active: bool = True,
+    compressed_combine=None,
 ):
     """The ONE generic round executor shared by simulator and runtime.
 
@@ -236,11 +315,22 @@ def make_round_step(
     fault-free scenarios — in particular the degenerate static/no-fault one —
     bit-identical to the static executor (a traced always-true select still
     changes XLA fusion, hence ulp-level drift, if left in).
+
+    When the algorithm's spec declares an *active* compression codec
+    (``CommSpec.active_compression()``), every gossip inside ``comm_update``
+    is routed through a fresh ``repro.compression.GossipChannel``: messages
+    are encoded (with per-buffer error-feedback residuals read from / written
+    back to ``state.comp``) and delivered via ``compressed_combine`` — an
+    engine-supplied ``(payload, decoded, ctx) -> mixed`` transport (the
+    sharded runtime's payload-rolling collective-permute backend); when None,
+    the decoded messages are mixed through ``mix_fn`` (the dense engines).
+    ``compression=None`` / ``"identity"`` skips this machinery entirely, so
+    the uncompressed path is untouched — bit-identical by construction.
     """
     spec = algorithm.comm
     round_len = spec.round_len(getattr(algorithm, "tau", 1))
     comm_gb = comm_grad_of_batch or grad_of_batch
-
+    compression = spec.active_compression()
 
     def _reset_fn(gf):
         if spec.reset == "full" and full_grad_fn is not None:
@@ -248,6 +338,29 @@ def make_round_step(
         if spec.reset in ("full", "minibatch"):
             return gf
         return None
+
+    def _comm(state, gf, ctx=None):
+        """The communication step, compressed or not."""
+        if compression is None:
+            mfn = (lambda tree: mix_fn(tree, ctx)) if scheduled else mix_fn
+            return algorithm.comm_update(state, mfn, gf, _reset_fn(gf))
+        from ..compression.base import GossipChannel  # lazy: no cycle
+
+        comp_state = getattr(state, "comp", None)
+        if comp_state is None:
+            raise ValueError(
+                f"{type(algorithm).__name__} declares compression but the "
+                "state carries no CompressionState — initialize it via "
+                "repro.compression.attach_compression(algorithm, state)"
+            )
+        chan = GossipChannel(
+            compression, len(spec.buffers), comp_state,
+            compressed_combine, mix_fn=mix_fn, scheduled=scheduled,
+        )
+        new = algorithm.comm_update(
+            state, lambda tree: chan.mix(tree, ctx), gf, _reset_fn(gf)
+        )
+        return dataclasses.replace(new, comp=chan.final_state())
 
     if not scheduled:
 
@@ -261,7 +374,7 @@ def make_round_step(
                 state, _ = lax.scan(body, state, micro)
             last = jax.tree.map(lambda x: x[round_len - 1], batches)
             gf = lambda p: comm_gb(p, last)
-            return algorithm.comm_update(state, mix_fn, gf, _reset_fn(gf))
+            return _comm(state, gf)
 
         return round_step, round_len
 
@@ -283,9 +396,7 @@ def make_round_step(
             state, _ = lax.scan(body, state, (micro, masks))
         last = jax.tree.map(lambda x: x[round_len - 1], batches)
         gf = lambda p: comm_gb(p, last)
-        new = algorithm.comm_update(
-            state, lambda tree: mix_fn(tree, ctx), gf, _reset_fn(gf)
-        )
+        new = _comm(state, gf, ctx)
         return _select_nodes(ctx.active if gate_active else None, new, state)
 
     return round_step_scheduled, round_len

@@ -44,6 +44,7 @@ def _zeros_like(tree: PyTree) -> PyTree:
 class SGDState:
     params: PyTree
     step: jnp.ndarray
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +54,7 @@ class DLSGD(DecentralizedAlgorithm):
     lr: ScheduleOrFloat
     tau: int = 1
     use_fused: bool = False   # fused-op backend for the update arithmetic
+    compression: Any = None   # gossip wire codec (repro.compression name/instance)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -73,12 +75,6 @@ class DLSGD(DecentralizedAlgorithm):
         state = self.local_update(state, grad_fn)
         return dataclasses.replace(state, params=mix_fn(state.params))
 
-    # -- legacy protocol shims ---------------------------------------------
-    local_step = local_update
-
-    def round_end(self, state: SGDState, mix_fn: MixFn, grad_fn: GradFn) -> SGDState:
-        return self.comm_update(state, mix_fn, grad_fn)
-
 
 @dataclasses.dataclass(frozen=True)
 class DSGD(DLSGD):
@@ -96,6 +92,7 @@ class GTState:
     y: PyTree          # tracked global gradient estimate
     g_prev: PyTree     # g_t (for the tracking correction)
     step: jnp.ndarray
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +106,7 @@ class GTDSGD(DecentralizedAlgorithm):
     lr: ScheduleOrFloat
     tau: int = 1  # fixed: GT-DSGD is a non-local-update method
     use_fused: bool = False   # fused-op backend for the update arithmetic
+    compression: Any = None   # gossip wire codec (repro.compression name/instance)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -134,10 +132,6 @@ class GTDSGD(DecentralizedAlgorithm):
         )
         return GTState(params=x_new, y=y_new, g_prev=g_new, step=state.step + 1)
 
-    # -- legacy protocol shims ---------------------------------------------
-    def round_end(self, state, mix_fn, grad_fn):
-        return self.comm_update(state, mix_fn, grad_fn)
-
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -146,6 +140,7 @@ class GTHSGDState:
     v: PyTree          # hybrid variance-reduced local estimator
     y: PyTree          # tracked global direction
     step: jnp.ndarray
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +158,7 @@ class GTHSGD(DecentralizedAlgorithm):
     beta: float = 0.1
     tau: int = 1  # communicates every step
     use_fused: bool = False   # fused-op backend for the update arithmetic
+    compression: Any = None   # gossip wire codec (repro.compression name/instance)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -201,10 +197,6 @@ class GTHSGD(DecentralizedAlgorithm):
         return GTHSGDState(params=x_new, v=v_new, y=y_new,
                            step=state.step + 1)
 
-    # -- legacy protocol shims ---------------------------------------------
-    def round_end(self, state, mix_fn, grad_fn):
-        return self.comm_update(state, mix_fn, grad_fn)
-
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -212,6 +204,7 @@ class MomentumState:
     params: PyTree
     m: PyTree
     step: jnp.ndarray
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +216,7 @@ class PDSGDM(DecentralizedAlgorithm):
     beta: float = 0.9
     nesterov: bool = False
     use_fused: bool = False   # fused-op backend for the update arithmetic
+    compression: Any = None   # gossip wire codec (repro.compression name/instance)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -237,26 +231,23 @@ class PDSGDM(DecentralizedAlgorithm):
             m_new = fused.tree_axpby(self.beta, state.m, 1.0, g, like=state.m)
             d = fused.tree_axpby(self.beta, m_new, 1.0, g) if self.nesterov else m_new
             x_new = fused.tree_axpby(-gamma, d, 1.0, state.params)
-            return MomentumState(params=x_new, m=m_new, step=state.step + 1)
+            return dataclasses.replace(
+                state, params=x_new, m=m_new, step=state.step + 1
+            )
         m_new = jax.tree.map(lambda m, gi: (self.beta * m + gi).astype(m.dtype), state.m, g)
         d = (
             jax.tree.map(lambda m, gi: self.beta * m + gi, m_new, g)
             if self.nesterov
             else m_new
         )
-        return MomentumState(
-            params=tree_axpy(-gamma, d, state.params), m=m_new, step=state.step + 1
+        return dataclasses.replace(
+            state, params=tree_axpy(-gamma, d, state.params), m=m_new,
+            step=state.step + 1,
         )
 
     def comm_update(self, state, mix_fn, grad_fn=None, reset_grad_fn=None) -> MomentumState:
         state = self.local_update(state, grad_fn)
         return dataclasses.replace(state, params=mix_fn(state.params))
-
-    # -- legacy protocol shims ---------------------------------------------
-    local_step = local_update
-
-    def round_end(self, state, mix_fn, grad_fn) -> MomentumState:
-        return self.comm_update(state, mix_fn, grad_fn)
 
 
 @jax.tree_util.register_dataclass
@@ -266,6 +257,7 @@ class SlowMoState:
     x_ref: PyTree      # params at round start
     u: PyTree          # slow momentum buffer
     step: jnp.ndarray
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,6 +275,7 @@ class SlowMoD(DecentralizedAlgorithm):
     slow_lr: float = 1.0
     beta: float = 0.95
     use_fused: bool = False   # fused-op backend for the update arithmetic
+    compression: Any = None   # gossip wire codec (repro.compression name/instance)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -336,8 +329,3 @@ class SlowMoD(DecentralizedAlgorithm):
             step=state.step,
         )
 
-    # -- legacy protocol shims ---------------------------------------------
-    local_step = local_update
-
-    def round_end(self, state: SlowMoState, mix_fn: MixFn, grad_fn: GradFn) -> SlowMoState:
-        return self.comm_update(state, mix_fn, grad_fn)

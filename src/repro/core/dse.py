@@ -77,6 +77,8 @@ class DSEState:
 
     ``y`` and ``h_prev`` are None when tracking buffers are fused into ``z``;
     ``z`` is None otherwise.  ``v`` is None for DSE-SGD (no momentum buffer).
+    ``comp`` (None unless gossip compression with error feedback is on)
+    carries the per-buffer residual state — see ``repro.compression``.
     """
 
     params: PyTree
@@ -86,6 +88,7 @@ class DSEState:
     h_prev: Optional[PyTree]      # h_{tau(t)} from the previous round
     z: Optional[PyTree]           # fused y - h_prev buffer
     step: jnp.ndarray             # global iteration t
+    comp: Optional[Any] = None    # gossip-compression side state
 
 
 def _zeros_like_f32(tree: PyTree, dtype) -> PyTree:
@@ -106,6 +109,9 @@ class DSEMVR(DecentralizedAlgorithm):
     #: MVR inner update and the dual-slow combine.  False (default) keeps
     #: today's exact per-leaf jnp path bit-for-bit.
     use_fused: bool = False
+    #: gossip wire codec (``repro.compression`` name or instance); None /
+    #: "identity" keeps the exact uncompressed gossip path
+    compression: Any = None
 
     # one comm event per round, two param-sized messages (SGT y + SPA x);
     # v resets with the full/large-batch local gradient (Alg. 1 line 11)
@@ -235,16 +241,8 @@ class DSEMVR(DecentralizedAlgorithm):
             **y_upd,
         )
 
-    # -- legacy protocol shims (deprecated; see core/algorithm.py) ----------
-    local_step = local_update
-
-    def round_end(
-        self,
-        state: DSEState,
-        mix_fn: MixFn,
-        reset_grad_fn: Optional[GradFn] = None,
-    ) -> DSEState:
-        return self.comm_update(state, mix_fn, None, reset_grad_fn)
+    # legacy local_step / round_end shims live on the base class
+    # (DecentralizedAlgorithm), where they warn once per class.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -286,14 +284,3 @@ class DSESGD(DSEMVR):
             v_new = _cast_like(rf(state.params), state.v)
             state = dataclasses.replace(state, v=v_new)
         return state
-
-    # -- legacy protocol shims ---------------------------------------------
-    local_step = local_update
-
-    def round_end(
-        self,
-        state: DSEState,
-        mix_fn: MixFn,
-        reset_grad_fn: Optional[GradFn] = None,
-    ) -> DSEState:
-        return self.comm_update(state, mix_fn, None, reset_grad_fn)

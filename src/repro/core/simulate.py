@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compression.base import attach_compression
 from .algorithm import RoundCtx, make_round_step
 from .mixing import dense_mix, scheduled_dense_mix
 from .topology import Topology
@@ -277,11 +278,17 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def init_state(self, params: PyTree, key: jax.Array):
-        """Broadcast identical x_0 to all nodes (paper: x_0^{(i)} = x_0)."""
+        """Broadcast identical x_0 to all nodes (paper: x_0^{(i)} = x_0).
+
+        With an active gossip-compression spec, the compression side state
+        (error-feedback residuals + codec PRNG key) is attached here; the
+        identity / no-compression path returns the state untouched."""
         stacked = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (self.n_nodes,) + p.shape), params
         )
-        return self.alg.init(stacked, self._full_grad_fn)
+        state = self.alg.init(stacked, self._full_grad_fn)
+        # fold so the codec's noise stream never aliases the batch sampling
+        return attach_compression(self.alg, state, jax.random.fold_in(key, 0x636F))
 
     # ------------------------------------------------------------------
     def run(

@@ -1,4 +1,5 @@
-"""Scenario sweep: a grid runner over algorithm x scenario x tau x omega.
+"""Scenario sweep: a grid runner over algorithm x scenario x tau x omega
+x compressor.
 
 Each grid cell runs one decentralized training job through the scenario
 engine — on the CPU simulator (``--engines sim``), the sharded runtime
@@ -21,6 +22,7 @@ Example (the paper's iid/non-iid table plus fault-robustness curves):
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import os
 import time
@@ -62,6 +64,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--taus", default="4", help="comma list of ints")
     p.add_argument("--omegas", default="iid",
                    help="comma list of Dirichlet omegas ('iid' = uniform split)")
+    p.add_argument("--compressors", default="identity",
+                   help="comma list of repro.compression specs "
+                        "(identity, qsgd, top_k:0.1, rand_k:0.1, low_rank:2)")
     p.add_argument("--engines", default="sim",
                    help="comma list from {sim, sharded}")
     p.add_argument("--nodes", type=int, default=8)
@@ -133,13 +138,15 @@ def _sim_problem(args, omega):
     return data, loss_fn, params
 
 
-def run_sim_cell(args, alg_name: str, scenario, tau: int, omega) -> Dict[str, Any]:
+def run_sim_cell(args, alg_name: str, scenario, tau: int, omega,
+                 compressor: str = "identity") -> Dict[str, Any]:
     import jax
 
     from ..core import Simulator, make_algorithm
 
     data, loss_fn, params = _sim_problem(args, omega)
-    alg = make_algorithm(alg_name, lr=args.lr, alpha=args.alpha, tau=tau)
+    alg = make_algorithm(alg_name, lr=args.lr, alpha=args.alpha, tau=tau,
+                         compression=compressor)
     sim = Simulator(
         alg, None, loss_fn, data, batch_size=args.batch_size, scenario=scenario
     )
@@ -158,7 +165,8 @@ def run_sim_cell(args, alg_name: str, scenario, tau: int, omega) -> Dict[str, An
     }
 
 
-def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega) -> Dict[str, Any]:
+def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega,
+                     compressor: str = "identity") -> Dict[str, Any]:
     """One cell through the sharded runtime (tiny LM on an N x 1 mesh).
 
     omega has no LM analogue here — per-node token streams are drawn from
@@ -184,7 +192,7 @@ def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega) -> Dict[str
     )
     job = make_train_job(
         cfg, mesh, algorithm=alg_name, tau=tau, lr=args.sharded_lr,
-        alpha=args.alpha, scenario=scenario,
+        alpha=args.alpha, scenario=scenario, compression=compressor,
     )
     rl = job.round_len
     schedule = job.schedule_for(args.rounds)
@@ -232,6 +240,7 @@ def run_sweep(args) -> List[Dict[str, Any]]:
     scenario_names = [s for s in args.scenarios.split(",") if s]
     taus = [int(t) for t in args.taus.split(",") if t]
     omegas = [_parse_omega(o) for o in args.omegas.split(",") if o]
+    compressors = [c for c in args.compressors.split(",") if c]
     engines = [e for e in args.engines.split(",") if e]
     for e in engines:
         if e not in ("sim", "sharded"):
@@ -249,53 +258,57 @@ def run_sweep(args) -> List[Dict[str, Any]]:
             if engine == "sharded" and len(omegas) > 1:
                 print(f"[sweep] sharded engine ignores omega; "
                       f"running omega={_omega_tag(omegas[0])} only")
-            for alg_name in algorithms:
-                for scen_name in scenario_names:
-                    for tau in taus:
-                        for omega in engine_omegas:
-                            scenario = make_scenario(scen_name, seed=args.seed)
-                            cell_id = (
-                                f"{engine}-{alg_name}-{scen_name}"
-                                f"-tau{tau}-omega{_omega_tag(omega)}"
-                            )
-                            runner = run_sim_cell if engine == "sim" else run_sharded_cell
-                            result = runner(args, alg_name, scenario, tau, omega)
-                            cell = {
-                                "cell_id": cell_id,
-                                "engine": engine,
-                                "algorithm": alg_name,
-                                "scenario": scenario.to_config(),
-                                "tau": tau,
-                                "omega": _omega_tag(omega),
-                                "rounds": args.rounds,
-                                "n_nodes": args.nodes,
-                                "batch_size": args.batch_size,
-                                "lr": args.lr if engine == "sim" else args.sharded_lr,
-                                "seed": args.seed,
-                            }
-                            artifact = _jsonable({"cell": cell, **result})
-                            with open(
-                                os.path.join(args.out, "cells", f"{cell_id}.json"), "w"
-                            ) as f:
-                                json.dump(artifact, f, indent=1, allow_nan=False)
-                            row = {
-                                **{k: v for k, v in cell.items() if k != "scenario"},
-                                "scenario": scen_name,
-                                "final": result["final"],
-                                "mean_consensus": _mean(result["streams"].get("consensus")),
-                                "mean_tracking_err": _mean(result["streams"].get("tracking_err")),
-                                "mean_spectral_gap": _mean(result["streams"].get("spectral_gap")),
-                                "wall_s": result["wall_s"],
-                            }
-                            row = _jsonable(row)
-                            summary.write(json.dumps(row, allow_nan=False) + "\n")
-                            summary.flush()
-                            rows.append(row)
-                            print(
-                                f"[{len(rows):3d}] {cell_id:48s} "
-                                f"wall={result['wall_s']:.2f}s "
-                                f"final={result['final']}"
-                            )
+            grid = itertools.product(
+                algorithms, scenario_names, taus, compressors, engine_omegas
+            )
+            for alg_name, scen_name, tau, compressor, omega in grid:
+                scenario = make_scenario(scen_name, seed=args.seed)
+                comp_tag = compressor.replace(":", "")
+                cell_id = (
+                    f"{engine}-{alg_name}-{scen_name}"
+                    f"-tau{tau}-omega{_omega_tag(omega)}"
+                    + ("" if compressor == "identity" else f"-{comp_tag}")
+                )
+                runner = run_sim_cell if engine == "sim" else run_sharded_cell
+                result = runner(args, alg_name, scenario, tau, omega, compressor)
+                cell = {
+                    "cell_id": cell_id,
+                    "engine": engine,
+                    "algorithm": alg_name,
+                    "scenario": scenario.to_config(),
+                    "tau": tau,
+                    "omega": _omega_tag(omega),
+                    "compression": compressor,
+                    "rounds": args.rounds,
+                    "n_nodes": args.nodes,
+                    "batch_size": args.batch_size,
+                    "lr": args.lr if engine == "sim" else args.sharded_lr,
+                    "seed": args.seed,
+                }
+                artifact = _jsonable({"cell": cell, **result})
+                with open(
+                    os.path.join(args.out, "cells", f"{cell_id}.json"), "w"
+                ) as f:
+                    json.dump(artifact, f, indent=1, allow_nan=False)
+                row = {
+                    **{k: v for k, v in cell.items() if k != "scenario"},
+                    "scenario": scen_name,
+                    "final": result["final"],
+                    "mean_consensus": _mean(result["streams"].get("consensus")),
+                    "mean_tracking_err": _mean(result["streams"].get("tracking_err")),
+                    "mean_spectral_gap": _mean(result["streams"].get("spectral_gap")),
+                    "mean_compression_err": _mean(result["streams"].get("compression_err")),
+                    "wall_s": result["wall_s"],
+                }
+                row = _jsonable(row)
+                summary.write(json.dumps(row, allow_nan=False) + "\n")
+                summary.flush()
+                rows.append(row)
+                print(
+                    f"[{len(rows):3d}] {cell_id:48s} "
+                    f"wall={result['wall_s']:.2f}s "
+                    f"final={result['final']}"
+                )
     if args.bench_out:
         bench_rows = [
             {
@@ -306,11 +319,13 @@ def run_sweep(args) -> List[Dict[str, Any]]:
                 "scenario": r["scenario"],
                 "tau": r["tau"],
                 "omega": r["omega"],
+                "compression": r.get("compression", "identity"),
                 "rounds": r["rounds"],
                 "final": r["final"],
                 "mean_consensus": r["mean_consensus"],
                 "mean_tracking_err": r["mean_tracking_err"],
                 "mean_spectral_gap": r["mean_spectral_gap"],
+                "mean_compression_err": r["mean_compression_err"],
                 "wall_s": r["wall_s"],
             }
             for r in rows

@@ -11,11 +11,21 @@ ref), tile policy, custom VJPs and the bucketed whole-pytree executor
 Importing this package populates the registry:
 
     elementwise (tree_apply-able): mvr_update, axpby, add_sub,
-                                   dse_combine, dse_combine_yh
-    shaped:                        flash_attention, rms_norm, wkv_chunk
+                                   dse_combine, dse_combine_yh,
+                                   qsgd_quantize, qsgd_dequantize
+    shaped:                        flash_attention, rms_norm, wkv_chunk,
+                                   top_k_pack, top_k_unpack
 """
 from . import api
-from . import dse_combine, flash_attention, mvr_update, rms_norm, tree_math, wkv_chunk
+from . import (
+    comm_compress,
+    dse_combine,
+    flash_attention,
+    mvr_update,
+    rms_norm,
+    tree_math,
+    wkv_chunk,
+)
 from .api import (
     REGISTRY,
     FusedOp,
@@ -37,7 +47,7 @@ from .api import (
 __all__ = [
     "api",
     "flash_attention", "rms_norm", "mvr_update", "wkv_chunk",
-    "tree_math", "dse_combine",
+    "tree_math", "dse_combine", "comm_compress",
     "FusedOp", "TilePolicy", "REGISTRY", "register",
     "call", "tree_apply", "dispatch_mode",
     "tree_mvr_update", "tree_axpby", "tree_add_sub",

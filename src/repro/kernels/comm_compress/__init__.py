@@ -1,0 +1,12 @@
+from . import ops  # registers the fused ops
+from .ref import (
+    qsgd_dequantize_ref,
+    qsgd_quantize_ref,
+    top_k_pack_ref,
+    top_k_unpack_ref,
+)
+
+__all__ = [
+    "qsgd_quantize_ref", "qsgd_dequantize_ref",
+    "top_k_pack_ref", "top_k_unpack_ref",
+]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the communication-compression fused ops."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "qsgd_quantize_ref", "qsgd_dequantize_ref",
+    "top_k_pack_ref", "top_k_unpack_ref",
+]
+
+
+def qsgd_quantize_ref(x: jnp.ndarray, u: jnp.ndarray, levels) -> jnp.ndarray:
+    """sign(x) * min(floor(|x| * levels + u), levels) in fp32."""
+    xf = x.astype(jnp.float32)
+    L = jnp.float32(levels)
+    q = jnp.floor(jnp.abs(xf) * L + u.astype(jnp.float32))
+    return (jnp.sign(xf) * jnp.minimum(q, L)).astype(x.dtype)
+
+
+def qsgd_dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, inv_levels) -> jnp.ndarray:
+    """q * scale * (1/levels) in fp32, in the SCALE's dtype — q is the int8
+    payload on the production path, and the registered op's out_dtype_from
+    points at the scale input for exactly that reason."""
+    out = (
+        q.astype(jnp.float32) * scale.astype(jnp.float32) * jnp.float32(inv_levels)
+    )
+    return out.astype(scale.dtype)
+
+
+
+def top_k_pack_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """vals[i, j] = x[i, idx[i, j]] — the gather behind the packed payload."""
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def top_k_unpack_ref(idx: jnp.ndarray, vals: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Scatter-add vals back into a dense zeros (N, d) buffer."""
+    n, _ = idx.shape
+    out = jnp.zeros((n, d), vals.dtype)
+    rows = jnp.arange(n, dtype=idx.dtype)[:, None]
+    return out.at[rows, idx].add(vals)

@@ -28,9 +28,16 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compression.base import (
+    CompressionState,
+    abstract_compression_state,
+    attach_compression,
+)
+from ..compression.gossip import rotation_combine
 from ..core import make_algorithm, ring
 from ..core.algorithm import DecentralizedAlgorithm, RoundCtx, make_round_step
 from ..core.mixing import (
+    Rotation,
     dense_mix,
     identity_mix,
     roll_mix,
@@ -118,13 +125,17 @@ class TrainJob:
         )
 
     def init_state(self, key) -> PyTree:
-        """Materialized initial state (small models / tests)."""
+        """Materialized initial state (small models / tests); attaches the
+        gossip-compression side state when the algorithm's spec asks for it."""
         params = self.model.init(key)
         n = self.n_nodes
         stacked = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params
         )
-        return self.algorithm.init(stacked)
+        state = self.algorithm.init(stacked)
+        return attach_compression(
+            self.algorithm, state, jax.random.fold_in(key, 0x636F)
+        )
 
 
 def _node_batch_struct(model: Model, tau: int, n_nodes: int, seq_len: int, global_batch: int):
@@ -151,6 +162,7 @@ def make_train_job(
     algorithm_kwargs: Optional[Dict[str, Any]] = None,
     scenario=None,
     use_fused: bool = False,
+    compression=None,
 ) -> TrainJob:
     """Build a sharded decentralized training round for ANY registered
     algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
@@ -162,6 +174,16 @@ def make_train_job(
     fused-op backend (``repro.kernels.api``): whole-pytree bucketed kernel
     launches on TPU, the bucketed jnp path elsewhere; the default False keeps
     the exact per-leaf jnp arithmetic.
+
+    ``compression`` (a ``repro.compression`` spec name like ``"qsgd"`` /
+    ``"top_k:0.1"``, or a ``Compressor`` instance) encodes every gossiped
+    buffer on the wire.  On the ``"roll"`` backends the *packed payload*
+    arrays are what rolls through collective-permute (decoded per shift on
+    arrival), so the measured HLO link bytes shrink by the codec's ratio;
+    the dense backends mix the decoded messages (same iterates, no wire
+    win).  ``None`` / ``"identity"`` is bit-identical to the uncompressed
+    path.  Ignored when ``algorithm`` is a ready instance (set the field on
+    the instance instead).
 
     With a ``scenario`` (``repro.scenarios.Scenario``), the train step
     consumes a per-round :class:`RoundCtx` and gossips over the scenario's
@@ -181,10 +203,12 @@ def make_train_job(
         alg = make_algorithm(
             algorithm, lr=lr, alpha=alpha, tau=tau,
             fuse_tracking_buffers=True, state_dtype=state_dtype,
-            use_fused=use_fused,
+            use_fused=use_fused, compression=compression,
             **(algorithm_kwargs or {}),
         )
     round_len = alg.comm.round_len(getattr(alg, "tau", 1))
+    comp = alg.comm.active_compression()
+    compressed_combine = None   # None => mix the decoded messages densely
 
     if scenario is not None:
         scenario.warn_if_vacuous(round_len, runtime_batches=True)
@@ -197,6 +221,12 @@ def make_train_job(
             mix_fn = lambda tree, ctx: tree
         elif gossip == "roll" and rotations:
             mix_fn = scheduled_rotation_mix(rotations)
+            if comp is not None:
+                # compress before collective-permute: only the packed payload
+                # arrays roll across links, decoded per shift on arrival
+                compressed_combine = rotation_combine(
+                    comp, rotations, scheduled=True
+                )
         elif gossip in ("roll", "dense"):
             mix_fn = scheduled_dense_mix()
         else:
@@ -207,6 +237,10 @@ def make_train_job(
         mix_fn = dense_mix(topology.w)
     elif gossip == "roll":
         mix_fn = roll_mix(topology)
+        if comp is not None:
+            compressed_combine = rotation_combine(
+                comp, (Rotation.from_topology(topology),)
+            )
     else:
         raise ValueError(gossip)
 
@@ -287,6 +321,7 @@ def make_train_job(
                 round_step, _ = make_round_step(
                     alg, mix_fn, grad_of_batch=vgrad,
                     comm_grad_of_batch=_make_comm_grad(loss_cell),
+                    compressed_combine=compressed_combine,
                 )
                 state = round_step(state, batches)
                 return state, _base_metrics(state, loss_cell)
@@ -308,6 +343,7 @@ def make_train_job(
                     scheduled=True,
                     gate_local=scenario.needs_local_gate,
                     gate_active=scenario.needs_active_gate,
+                    compressed_combine=compressed_combine,
                 )
                 state = round_step(state, batches, ctx)
                 metrics = _base_metrics(state, loss_cell)
@@ -323,7 +359,9 @@ def make_train_job(
     stacked_struct = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n_nodes,) + s.shape, s.dtype), shapes
     )
-    abstract_state = jax.eval_shape(lambda p: alg.init(p), stacked_struct)
+    abstract_state = abstract_compression_state(
+        alg, jax.eval_shape(lambda p: alg.init(p), stacked_struct)
+    )
 
     with axis_rules(rules, mesh, param_rules=param_rules):
         node_prefix = (node_axes if node_axes else None,)
@@ -334,6 +372,12 @@ def make_train_job(
         v = getattr(abstract_state, f.name)
         if v is None:
             state_spec_fields[f.name] = None
+        elif isinstance(v, CompressionState):
+            # per-buffer residual trees are params-shaped (node-stacked);
+            # the codec PRNG key is a replicated scalar
+            state_spec_fields[f.name] = CompressionState(
+                residuals=tuple(param_spec for _ in v.residuals), key=P()
+            )
         elif isinstance(v, jax.ShapeDtypeStruct) and v.ndim == 0:
             state_spec_fields[f.name] = P()
         else:

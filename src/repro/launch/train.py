@@ -48,6 +48,9 @@ def main(argv=None):
     p.add_argument("--gossip", default="roll", choices=["roll", "dense"])
     p.add_argument("--use-fused", action="store_true",
                    help="route update arithmetic through the fused-op backend")
+    p.add_argument("--compression", default=None,
+                   help="gossip wire codec (repro.compression spec, e.g. "
+                        "qsgd, top_k:0.1, rand_k:0.1, low_rank:2)")
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
@@ -62,7 +65,7 @@ def main(argv=None):
     job = make_train_job(
         cfg, mesh, algorithm=args.algorithm, tau=args.tau,
         lr=args.lr, alpha=args.alpha, gossip=args.gossip,
-        use_fused=args.use_fused,
+        use_fused=args.use_fused, compression=args.compression,
     )
     n = job.n_nodes
     rl = job.round_len  # batches per jitted round (1 for every-step methods)

@@ -21,6 +21,10 @@ scanned round loop, so a run emits dense per-round streams at device speed:
                         ``core.topology.spectral_gap(W_t)`` when all nodes
                         are active.
   * ``active_nodes``  — |a| (dropout visibility).
+  * ``compression_err`` — Σ_i Σ_buffers ||e_i||² of the gossip-compression
+                        error-feedback residuals (``state.comp``); NaN for
+                        uncompressed / residual-free runs.  Tracks how much
+                        signal the codec is deferring round over round.
 
 All functions are pure jnp and scan/jit compatible.
 """
@@ -31,6 +35,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..compression.base import compression_error
 from ..core.simulate import node_mean
 
 PyTree = Any
@@ -44,7 +49,10 @@ __all__ = [
     "make_stream_fn",
 ]
 
-STREAM_FIELDS = ("consensus", "tracking_err", "spectral_gap", "active_nodes")
+STREAM_FIELDS = (
+    "consensus", "tracking_err", "spectral_gap", "active_nodes",
+    "compression_err",
+)
 
 
 def masked_consensus(tree: PyTree, active: Optional[jnp.ndarray]) -> jnp.ndarray:
@@ -161,6 +169,7 @@ def make_stream_fn(
                 if active is not None
                 else jnp.float32(n)
             ),
+            "compression_err": compression_error(state),
         }
 
     return stream

@@ -1,0 +1,121 @@
+"""DeprecationWarning regression coverage for the legacy shims.
+
+The PR-1 algorithm-protocol shims (``step`` / ``local_step`` / ``round_end``)
+and the PR-3 legacy kernel entry points must keep emitting
+``DeprecationWarning`` — these tests pin that contract so a refactor can't
+silently drop the warnings (and with them, the migration signal).
+
+The algorithm shims warn once per (class, method); ``reset_legacy_warnings``
+re-arms them so each assertion observes its own warning.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DLSGD, DSEMVR, GTDSGD, make_algorithm, reset_legacy_warnings
+from repro.core.mixing import identity_mix
+
+N, D = 4, 6
+
+
+def _stacked():
+    return {"w": jnp.ones((N, D))}
+
+
+def _grad_fn(p):
+    return jax.tree.map(jnp.ones_like, p)
+
+
+# ------------------------------------------------------ algorithm shims
+def test_step_shim_warns():
+    reset_legacy_warnings()
+    alg = DSEMVR(lr=0.1, tau=2)
+    state = alg.init(_stacked())
+    with pytest.warns(DeprecationWarning, match="step.*deprecated"):
+        state = alg.step(state, _grad_fn, identity_mix, t=0)
+    assert int(state.step) == 1
+
+
+def test_local_step_shim_warns_and_matches_local_update():
+    reset_legacy_warnings()
+    alg = DLSGD(lr=0.1, tau=3)
+    state = alg.init(_stacked())
+    ref = alg.local_update(state, _grad_fn)
+    with pytest.warns(DeprecationWarning, match="local_step.*deprecated"):
+        got = alg.local_step(state, _grad_fn)
+    np.testing.assert_array_equal(np.asarray(got.params["w"]), np.asarray(ref.params["w"]))
+
+
+def test_round_end_shim_warns_and_matches_comm_update():
+    reset_legacy_warnings()
+    alg = GTDSGD(lr=0.1)
+    state = alg.init(_stacked(), _grad_fn)
+    ref = alg.comm_update(state, identity_mix, _grad_fn)
+    with pytest.warns(DeprecationWarning, match="round_end.*deprecated"):
+        got = alg.round_end(state, identity_mix, _grad_fn)
+    np.testing.assert_array_equal(np.asarray(got.params["w"]), np.asarray(ref.params["w"]))
+
+
+def test_round_end_reset_grad_keyword_matches_dse_semantics():
+    """The pre-PR-1 DSE round_end took reset_grad_fn; the unified shim must
+    keep both the keyword and the positional-grad_fn fallback equivalent."""
+    reset_legacy_warnings()
+    alg = DSEMVR(lr=0.1, tau=2)
+    state = alg.init(_stacked())
+    ref = alg.comm_update(state, identity_mix, None, _grad_fn)
+    with pytest.warns(DeprecationWarning):
+        via_kw = alg.round_end(state, identity_mix, reset_grad_fn=_grad_fn)
+    via_pos = alg.round_end(state, identity_mix, _grad_fn)
+    for a, b in ((via_kw, ref), (via_pos, ref)):
+        np.testing.assert_array_equal(
+            np.asarray(a.params["w"]), np.asarray(b.params["w"])
+        )
+
+
+def test_shim_warnings_fire_once_per_class():
+    reset_legacy_warnings()
+    alg = DLSGD(lr=0.1, tau=2)
+    state = alg.init(_stacked())
+    with pytest.warns(DeprecationWarning):
+        alg.local_step(state, _grad_fn)
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        alg.local_step(state, _grad_fn)       # second call: silent
+    # a different class still gets its own warning
+    alg2 = make_algorithm("pd_sgdm", lr=0.1, tau=2)
+    state2 = alg2.init(_stacked())
+    with pytest.warns(DeprecationWarning):
+        alg2.local_step(state2, _grad_fn)
+
+
+# ------------------------------------------------------ legacy kernel entries
+def test_legacy_kernel_entry_points_warn():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.mvr_update import mvr_update, mvr_update_tree
+    from repro.kernels.rms_norm import rms_norm
+    from repro.kernels.wkv_chunk import wkv_chunk
+
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    g, v, go = (jax.random.normal(k, (256,)) for k in ks[:3])
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        mvr_update(g, v, go, 0.1)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        mvr_update_tree({"a": g}, {"a": v}, {"a": go}, 0.1)
+
+    x = jax.random.normal(ks[0], (8, 64))
+    w = jnp.ones((64,))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        rms_norm(x, w)
+
+    q = jax.random.normal(ks[1], (1, 128, 2, 64))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        flash_attention(q, q, q, causal=True)
+
+    r = jax.random.normal(ks[2], (1, 32, 1, 16)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (1, 32, 1, 16)) * 0.3)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        wkv_chunk(r, r, r, lw, chunk=16)

@@ -133,10 +133,15 @@ def test_shaped_ops_registered_and_dispatch():
     w = jax.random.normal(jax.random.fold_in(key, 1), (64,))
     r = jax.random.normal(key, (1, 32, 1, 16)) * 0.5
     logw = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 1, 16)) * 0.3)
+    xs = jax.random.normal(jax.random.fold_in(key, 3), (4, 300))
+    idx = jax.random.randint(jax.random.fold_in(key, 4), (4, 9), 0, 300).astype(jnp.int32)
+    vals = jax.random.normal(jax.random.fold_in(key, 5), (4, 9))
     cases = {
         "flash_attention": ((q, q, q), dict(causal=True)),
         "rms_norm": ((x, w), dict(eps=1e-6, plus_one=False)),
         "wkv_chunk": ((r, r, r, logw), dict(chunk=16)),
+        "top_k_pack": ((xs, idx), {}),
+        "top_k_unpack": ((idx, vals), dict(d=300)),
     }
     shaped = {n for n, op in api.REGISTRY.items() if not op.elementwise}
     assert shaped == set(cases), shaped

@@ -169,7 +169,8 @@ def test_degenerate_scenario_bit_identical(name):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # and the streams are emitted alongside (observation, not perturbation)
     assert set(out["streams"]) == {
-        "consensus", "tracking_err", "spectral_gap", "active_nodes"
+        "consensus", "tracking_err", "spectral_gap", "active_nodes",
+        "compression_err",
     }
     n_rounds = 8 // sim.round_len  # one stream entry per communication round
     assert all(len(v) == n_rounds for v in out["streams"].values())
