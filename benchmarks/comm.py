@@ -36,6 +36,8 @@ def analytic_rows(
     scenario=None,
     compression=None,
     msg_shape=None,
+    channel: str = "sync",
+    send_rate: float = 1.0,
 ):
     """Bytes each node sends per ROUND (tau iterations), derived from each
     algorithm's declarative CommSpec: comm events per round times gossiped
@@ -47,9 +49,14 @@ def analytic_rows(
     (spec name / ``Compressor``) overrides each method's own
     ``CommSpec.compression`` for the ``compressed_*`` column; methods whose
     spec declares no codec and no override send raw buffers.  ``msg_shape``
-    is the per-node shape the codec's byte model sees (default the flat
-    ``(d_params,)`` vector; shape-sensitive codecs like ``low_rank`` need a
-    representative matrix shape to report real savings).
+    is the per-node shape the codec's byte model sees — the default is the
+    most-square matrix factorization of ``d_params`` (size-preserving, so
+    element-count codecs are unaffected), NOT the flat ``(d,)`` vector,
+    because shape-sensitive codecs (``low_rank``) fall back to raw bytes on
+    a vector and their factor-pair payload silently vanished from
+    ``compressed_mbytes_per_round_per_node``.  ``send_rate`` scales the
+    compressed column for event-triggered channels (a skipped send moves
+    nothing); ``channel`` is recorded on the rows.
     """
     import jax.numpy as jnp
 
@@ -66,8 +73,16 @@ def analytic_rows(
         graph = topology.name
 
     override = make_compressor(compression) if compression is not None else None
+    if override is not None and not channel.startswith("sync"):
+        # difference/stale channels replace error feedback with replicas —
+        # mirror GossipChannel.bind so the recorded codec tag matches what
+        # the channel actually runs (payload bytes are identical either way)
+        from repro.compression import ErrorFeedback
+
+        if isinstance(override, ErrorFeedback):
+            override = override.inner
     dtype = {1: jnp.int8, 2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}[dtype_bytes]
-    shape = tuple(msg_shape) if msg_shape is not None else (d_params,)
+    shape = tuple(msg_shape) if msg_shape is not None else most_square(d_params)
     rows = []
     for method, cls in ALGORITHMS.items():
         spec = cls.comm
@@ -77,6 +92,7 @@ def analytic_rows(
         comp_msg_bytes = (
             comp.payload_bytes(shape, dtype) if comp is not None else msg_bytes
         )
+        comp_msg_bytes *= max(min(float(send_rate), 1.0), 0.0)
         rows.append({
             "method": method,
             "graph": graph,
@@ -87,8 +103,21 @@ def analytic_rows(
                 events * deg * len(spec.buffers) * comp_msg_bytes
             ),
             "compression": getattr(comp, "tag", None),
+            "channel": channel,
         })
     return rows
+
+
+def most_square(d: int) -> tuple:
+    """Most-square (m, n) factorization of d — the representative per-node
+    message shape for the analytic byte models (factor-pair codecs see a
+    matrix; element-count codecs only see the product)."""
+    m = 1
+    for f in range(int(d ** 0.5), 0, -1):
+        if d % f == 0:
+            m = f
+            break
+    return (m, d // m)
 
 
 def _row(r, bench, **extra):
@@ -109,17 +138,44 @@ def run():
         for r in analytic_rows()
     ]
     # the compressed column under each registered codec (ring graph, DSE-MVR
-    # and the every-step GT-HSGD as the two cadence extremes).  low_rank's
-    # byte model is shape-sensitive, so it sees a representative square
-    # matrix instead of the flat (d,) vector that would report no savings.
+    # and the every-step GT-HSGD as the two cadence extremes).  The default
+    # msg_shape is now the most-square factorization of d_params, so the
+    # shape-sensitive low_rank factor-pair payload is reflected without a
+    # per-codec special case (element-count codecs see the same product).
     for comp in ("identity", "qsgd", "top_k:0.1", "rand_k:0.1", "low_rank:4"):
-        shape = (1000, 1000) if comp.startswith("low_rank") else None
-        for r in analytic_rows(compression=comp, msg_shape=shape):
+        for r in analytic_rows(compression=comp):
             if r["method"] not in ("dse_mvr", "gt_hsgd"):
                 continue
             rows.append(_row(
                 r, "comm_compressed",
                 compression=r["compression"],
+                ratio=round(
+                    r["bytes_per_round"] / max(r["compressed_bytes_per_round"], 1), 2
+                ),
+            ))
+    # gossip-channel rows: CHOCO puts the same payload bytes on the wire as
+    # the sync codec (the *difference* is what shrinks, not the packet) but
+    # without the EF wrapper; async channels scale by the triggered-send
+    # rate, taken from the measured BENCH_gossip record when present.
+    async_rate = 1.0 / 4.0  # forced-refresh floor at staleness bound 4
+    try:
+        with open("benchmarks/results/BENCH_gossip.json") as f:
+            for g in json.load(f):
+                if g.get("config") == "async4_thr0.5_top_k0.1" and g.get("mean_send_rate"):
+                    async_rate = g["mean_send_rate"]
+    except (OSError, ValueError):
+        pass
+    for chan, kw in (
+        ("choco", dict(compression="top_k:0.1")),
+        ("async:4", dict(compression="top_k:0.1", send_rate=async_rate)),
+    ):
+        for r in analytic_rows(channel=chan, **kw):
+            if r["method"] not in ("dse_mvr", "gt_hsgd"):
+                continue
+            rows.append(_row(
+                r, "comm_channels",
+                compression=r["compression"],
+                channel=r["channel"],
                 ratio=round(
                     r["bytes_per_round"] / max(r["compressed_bytes_per_round"], 1), 2
                 ),

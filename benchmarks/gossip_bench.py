@@ -1,0 +1,151 @@
+"""Gossip-channel bench: bytes-on-the-wire vs tracking error vs staleness.
+
+DSE-MVR on the synthetic non-convex benchmark (the tanh-MLP pseudo-MNIST
+problem from ``benchmarks/common.py``), 8-node ring through the scenario
+engine so the dense per-round tracking-error / replica-drift / staleness
+streams are on-device.  One row per (channel, codec) configuration records
+
+  * analytic wire bytes per round per node (CommSpec buffers x degree x the
+    codec's payload model; async rows are scaled by the MEASURED triggered-
+    send rate — a skipped send puts nothing on the wire),
+  * ``tracking_vs_identity`` — final tracking error Σ_i ||v_i − ∇f(x̄)||²
+    relative to the uncompressed synchronous run,
+  * mean staleness / send rate / replica drift where the channel defines
+    them.
+
+The acceptance bar asserted in CI: CHOCO difference gossip with top_k:0.1
+tracks ≤ 1.5x identity at ≥ 4x byte reduction (error feedback alone sits at
+~3x — BENCH_compression), and bound-1 async matches sync exactly.
+
+-> benchmarks/results/BENCH_gossip.json
+"""
+from __future__ import annotations
+
+import time
+
+# (channel spec, compressor spec, row tag).  The compressed async row uses
+# a larger trigger threshold: compressed differences keep the replica drift
+# high, so a tight trigger degenerates to always-send (= choco).
+CONFIGS = (
+    ("sync", "identity", "sync_identity"),
+    ("sync", "top_k:0.1", "sync_ef_top_k0.1"),
+    ("choco", "top_k:0.1", "choco1.0_top_k0.1"),
+    ("choco:0.8", "top_k:0.1", "choco0.8_top_k0.1"),
+    ("async_thr:0.1", None, "async4_thr0.1_raw"),
+    ("async_thr:0.5", "top_k:0.1", "async4_thr0.5_top_k0.1"),
+)
+
+
+def _make_channel(chan_spec):
+    if chan_spec.startswith("async_thr:"):
+        from repro.compression import AsyncChannel
+
+        return AsyncChannel(
+            max_staleness=4, threshold=float(chan_spec.split(":")[1])
+        )
+    return chan_spec
+
+
+def run(rounds: int = 24, tau: int = 4, seed: int = 0):
+    import jax
+    import numpy as np
+
+    from repro.core import Simulator, make_algorithm
+    from repro.scenarios import make_scenario
+
+    def _nanmean(a):
+        a = np.asarray(a, dtype=np.float64)
+        a = a[np.isfinite(a)]
+        return float(a.mean()) if a.size else float("nan")
+
+    from .comm import mean_degree
+    from .common import make_paper_problem, mlp_init, mlp_loss
+
+    data, _ = make_paper_problem(omega=10.0, seed=seed, n_train=1600, n_test=100)
+    params = mlp_init(jax.random.key(seed))
+    scenario = make_scenario("baseline", seed=seed)
+    deg = mean_degree(scenario.materialize(data.n_nodes, 4, tau).w)
+    raw_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+
+    rows = []
+    finals = {}
+    for chan_spec, comp_name, tag in CONFIGS:
+        alg = make_algorithm(
+            "dse_mvr", lr=0.1, alpha=0.1, tau=tau,
+            compression=comp_name, channel=_make_channel(chan_spec),
+        )
+        sim = Simulator(
+            alg, None, mlp_loss, data, batch_size=16, scenario=scenario
+        )
+        t0 = time.perf_counter()
+        out = sim.run(
+            params, jax.random.key(seed), num_steps=rounds * tau,
+            eval_every=rounds * tau,
+        )
+        wall = time.perf_counter() - t0
+        s = out["streams"]
+        te = np.asarray(s["tracking_err"], dtype=np.float64)
+        final_te = float(te[-1])
+        finals[tag] = final_te
+
+        send_rate = _nanmean(s["send_rate"])
+        staleness = _nanmean(s["staleness"])
+        drift = _nanmean(s["replica_drift"])
+
+        spec = alg.comm
+        chan = spec.resolved_channel()
+        comp = getattr(chan, "compression", None) if chan is not None else (
+            spec.active_compression()
+        )
+        msg_bytes = comp.tree_bytes(params) if comp else raw_bytes
+        per_round = (
+            spec.comm_events_per_round(tau) * deg * len(spec.buffers) * msg_bytes
+        )
+        if np.isfinite(send_rate):       # skipped sends move nothing
+            per_round *= max(send_rate, 1e-9)
+        raw_per_round = (
+            spec.comm_events_per_round(tau) * deg * len(spec.buffers) * raw_bytes
+        )
+        rows.append({
+            "bench": "gossip",
+            "name": f"gossip/dse_mvr/{tag}",
+            "method": "dse_mvr",
+            "channel": getattr(chan, "name", "sync"),
+            "compression": comp.tag if comp else None,
+            "config": tag,
+            "tau": tau,
+            "rounds": rounds,
+            "n_nodes": data.n_nodes,
+            "deg": round(deg, 3),
+            "kbytes_per_round_per_node": round(per_round / 1e3, 2),
+            "bytes_ratio": round(raw_per_round / per_round, 2),
+            "final_tracking_err": final_te,
+            "mean_tracking_err": float(te[np.isfinite(te)].mean()),
+            "final_train_loss": out["history"][-1]["train_loss"],
+            "final_consensus": float(np.asarray(s["consensus"])[-1]),
+            "mean_replica_drift": drift if np.isfinite(drift) else None,
+            "mean_staleness": staleness if np.isfinite(staleness) else None,
+            "mean_send_rate": send_rate if np.isfinite(send_rate) else None,
+            "tracking_vs_identity": None,  # filled below
+            "us_per_call": round(wall / max(rounds, 1) * 1e6, 1),
+        })
+
+    base = finals["sync_identity"]
+    for r in rows:
+        r["tracking_vs_identity"] = round(finals[r["config"]] / base, 3)
+    return rows
+
+
+def main(rounds: int = 24):
+    import json
+    import os
+
+    rows = run(rounds=rounds)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_gossip.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
     args = p.parse_args(argv)
     only = set(args.only.split(","))
@@ -57,6 +57,11 @@ def main(argv=None):
     if "compression" in only:
         from . import compression_bench
         rows = compression_bench.main(rounds=12 if args.fast else 24)
+        all_rows += rows
+        _csv(rows)
+    if "gossip" in only:
+        from . import gossip_bench
+        rows = gossip_bench.main(rounds=12 if args.fast else 24)
         all_rows += rows
         _csv(rows)
     if "kernels" in only:

@@ -1,37 +1,64 @@
-"""Communication-compression subsystem: quantized/sparsified gossip with
-error feedback, declared on the algorithm's :class:`~repro.core.CommSpec`.
+"""Communication subsystem: stateful gossip channels over declarative codecs.
 
-    alg = make_algorithm("dse_mvr", lr=0.1, tau=4, compression="top_k:0.1")
-    # or explicitly:
-    from repro.compression import make_compressor
+Three orthogonal, declarative axes compose one communication event:
+
+  * **codec** (``Compressor`` registry — identity/qsgd/top_k/rand_k/low_rank,
+    composable ``ErrorFeedback``) — the wire representation;
+  * **channel** (``GossipChannel`` registry — ``sync``, ``choco`` difference
+    gossip, ``async`` stale-mix) — the gossip protocol, owning per-node,
+    per-buffer wire state (:class:`ChannelState`) in the algorithm state
+    pytrees;
+  * **transport** (engine-supplied) — dense W contraction on the Simulator,
+    payload-rolling ``collective-permute`` on the sharded roll backends.
+
     alg = make_algorithm("dse_mvr", lr=0.1, tau=4,
-                         compression=make_compressor("qsgd", error_feedback=True))
+                         compression="top_k:0.1", channel="choco")
+    job = make_train_job(cfg, mesh, algorithm="dse_mvr",
+                         compression="qsgd", channel="async:3")
 
 Both execution engines honor the spec through the one scanned round
-executor: the Simulator mixes decoded per-edge messages, the sharded
-runtime rolls packed payloads through collective-permute.  ``identity``
-(or no compression) is structurally bit-identical to the uncompressed path.
+executor.  ``channel=None`` / ``"sync"`` with no active codec is
+structurally bit-identical to the plain gossip path.
 """
 from .base import (
     COMPRESSORS,
+    ChannelState,
     CompressionState,
     Compressor,
     ErrorFeedback,
-    GossipChannel,
     Packed,
+    abstract_channel_state,
     abstract_compression_state,
+    attach_channel_state,
     attach_compression,
     compression_error,
     make_compressor,
     register_compressor,
 )
+from .channels import (
+    CHANNELS,
+    AsyncChannel,
+    ChannelSession,
+    ChocoChannel,
+    GossipChannel,
+    SyncChannel,
+    Transport,
+    make_channel,
+    register_channel,
+)
 from .compressors import Identity, LowRank, QSGD, RandK, TopK
 from .gossip import rotation_combine
 
 __all__ = [
-    "Compressor", "ErrorFeedback", "Packed", "CompressionState",
-    "GossipChannel", "COMPRESSORS", "register_compressor", "make_compressor",
-    "attach_compression", "abstract_compression_state", "compression_error",
+    "Compressor", "ErrorFeedback", "Packed",
+    "ChannelState", "CompressionState",
+    "COMPRESSORS", "register_compressor", "make_compressor",
+    "GossipChannel", "SyncChannel", "ChocoChannel", "AsyncChannel",
+    "CHANNELS", "register_channel", "make_channel",
+    "Transport", "ChannelSession",
+    "attach_channel_state", "attach_compression",
+    "abstract_channel_state", "abstract_compression_state",
+    "compression_error",
     "Identity", "QSGD", "TopK", "RandK", "LowRank",
     "rotation_combine",
 ]

@@ -15,18 +15,19 @@ first-class, declarative axis next to the algorithm's ``CommSpec``:
     are *algorithm state*: :class:`CompressionState` rides in the ``comp``
     field of every state dataclass, so they scan, checkpoint, shard and gate
     (fault masking) exactly like any other buffer.
-  * :class:`GossipChannel` — the trace-time adapter the round executor
-    (``repro.core.algorithm.make_round_step``) wraps around ``mix_fn``.  One
-    channel per communication event; the k-th ``mix`` call inside
-    ``comm_update`` is matched to the k-th entry of ``CommSpec.buffers``
-    (per-buffer residual state), the same mutable-cell idiom the runtime
-    already uses for its metrics loss.
+  * :class:`ChannelState` — the per-node, per-buffer *wire state* carried in
+    the ``comp`` field of every algorithm state pytree: one wire tree per
+    ``CommSpec.buffers`` entry (error-feedback residuals ``{"res": ...}``,
+    CHOCO replica estimates ``{"hat": ...}``, async staleness ages) plus the
+    codec PRNG key.  Because it is ordinary state, it scans, checkpoints,
+    shards and fault-gates like any other buffer.
 
-Engines decide the *transport* of the encoded payload via a ``combine``
-callback — ``Simulator`` decompresses per node and applies the dense W
-contraction (mathematically the per-edge ``sum_j w_ij D(m_j)``), the sharded
-runtime rolls the packed payload arrays through ``collective-permute`` so
-the measured link bytes actually shrink (``gossip.py``).
+The gossip *protocol* — what is encoded and what each node mixes against —
+is the :class:`~repro.compression.channels.GossipChannel` axis (sync /
+CHOCO difference gossip / async stale-mix); engines decide the *transport*
+of the encoded payload (``Simulator`` decompresses per node and applies the
+dense W contraction, the sharded runtime rolls packed payload arrays through
+``collective-permute`` — ``gossip.py``).
 
 This module is deliberately free of ``repro.core`` imports (the executor
 imports us, not vice versa).
@@ -45,12 +46,14 @@ __all__ = [
     "Packed",
     "Compressor",
     "ErrorFeedback",
+    "ChannelState",
     "CompressionState",
-    "GossipChannel",
     "COMPRESSORS",
     "register_compressor",
     "make_compressor",
+    "attach_channel_state",
     "attach_compression",
+    "abstract_channel_state",
     "abstract_compression_state",
     "compression_error",
 ]
@@ -96,22 +99,28 @@ class Compressor:
         return type(self).__name__.lower()
 
     # -- per-leaf codec ----------------------------------------------------
-    def encode(self, x: jnp.ndarray, key) -> Packed:
+    def encode(self, x: jnp.ndarray, key, scale=None) -> Packed:
+        """``scale`` (an optional traced scalar in (0, 1]) is the adaptive-
+        compression knob: codecs that support per-round schedules shrink
+        their *effective* payload to that fraction of the shape-static one
+        (payload arrays keep their static shape so everything scans);
+        codecs without a sensible notion of it ignore the knob."""
         raise NotImplementedError
 
     def decode(self, packed: Packed) -> jnp.ndarray:
         raise NotImplementedError
 
-    def payload_bytes(self, shape: Tuple[int, ...], dtype) -> int:
+    def payload_bytes(self, shape: Tuple[int, ...], dtype, scale=None) -> int:
         """Analytic bytes ONE node puts on the wire for a leaf of per-node
-        ``shape`` (node axis excluded) and ``dtype`` (bandwidth tables)."""
+        ``shape`` (node axis excluded) and ``dtype`` (bandwidth tables).
+        ``scale`` is the (host-side float) adaptive knob of :meth:`encode`."""
         raise NotImplementedError
 
     # -- whole-tree helpers ------------------------------------------------
-    def encode_tree(self, tree: PyTree, key) -> PyTree:
+    def encode_tree(self, tree: PyTree, key, scale=None) -> PyTree:
         leaves, treedef = jax.tree.flatten(tree)
         enc = [
-            self.encode(leaf, jax.random.fold_in(key, i))
+            self.encode(leaf, jax.random.fold_in(key, i), scale=scale)
             for i, leaf in enumerate(leaves)
         ]
         return jax.tree.unflatten(treedef, enc)
@@ -130,11 +139,11 @@ class Compressor:
         )
 
     def roundtrip(
-        self, tree: PyTree, residual: Optional[PyTree], key
+        self, tree: PyTree, residual: Optional[PyTree], key, scale=None
     ) -> Tuple[PyTree, PyTree, Optional[PyTree]]:
         """(payload, decoded, new_residual) for one gossip message."""
         del residual  # residual-free codec
-        payload = self.encode_tree(tree, key)
+        payload = self.encode_tree(tree, key, scale=scale)
         return payload, self.decode_tree(payload), None
 
 
@@ -165,16 +174,16 @@ class ErrorFeedback(Compressor):
     def tag(self) -> str:
         return f"ef_{self.inner.tag}"
 
-    def encode(self, x, key):
-        return self.inner.encode(x, key)
+    def encode(self, x, key, scale=None):
+        return self.inner.encode(x, key, scale=scale)
 
     def decode(self, packed):
         return self.inner.decode(packed)
 
-    def payload_bytes(self, shape, dtype):
-        return self.inner.payload_bytes(shape, dtype)
+    def payload_bytes(self, shape, dtype, scale=None):
+        return self.inner.payload_bytes(shape, dtype, scale=scale)
 
-    def roundtrip(self, tree, residual, key):
+    def roundtrip(self, tree, residual, key, scale=None):
         if residual is None:
             raise ValueError("ErrorFeedback.roundtrip needs the residual state")
         inp = jax.tree.map(
@@ -182,7 +191,7 @@ class ErrorFeedback(Compressor):
             tree,
             residual,
         )
-        payload = self.inner.encode_tree(inp, key)
+        payload = self.inner.encode_tree(inp, key, scale=scale)
         dec = self.inner.decode_tree(payload)
         new_res = jax.tree.map(
             lambda i, d, e: (
@@ -236,156 +245,117 @@ def make_compressor(spec, error_feedback: Optional[bool] = None, **kwargs) -> Co
 
 
 # --------------------------------------------------------------------------
-# state + channel (consumed by the round executor)
+# wire state (consumed by the round executor's ChannelSession)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
-class CompressionState:
-    """Per-node compression side-state carried in the algorithm state pytree.
+class ChannelState:
+    """Per-node gossip-channel wire state carried in the algorithm state
+    pytree (the ``comp`` field of every state dataclass).
 
-    residuals: one params-shaped, node-stacked tree per ``CommSpec.buffers``
-               entry (empty tuple for residual-free codecs);
-    key:       scalar typed PRNG key driving stochastic codecs — scalar so
-               the fault-gating per-node selects never touch it.
+    wire: one pytree per ``CommSpec.buffers`` entry, matched positionally to
+          the ``mix`` calls inside ``comm_update``.  The layout is owned by
+          the channel (``GossipChannel.init_wire``): sync error feedback
+          stores ``{"res": <params-shaped residuals>}``, CHOCO stores
+          ``{"hat": <replica estimates>}``, async adds per-node ``"age"`` /
+          ``"sent"`` vectors.  Entries are None for wire-free buffers.
+    key:  scalar typed PRNG key driving stochastic codecs — scalar so the
+          fault-gating per-node selects never touch it.
     """
 
-    residuals: Tuple[PyTree, ...]
+    wire: Tuple[PyTree, ...]
     key: jnp.ndarray
 
 
 jax.tree_util.register_dataclass(
-    CompressionState, data_fields=["residuals", "key"], meta_fields=[]
+    ChannelState, data_fields=["wire", "key"], meta_fields=[]
 )
 
+#: legacy NAME only — the wire state used to be called "compression state".
+#: The field layout changed with the channel refactor (``wire=`` tuple of
+#: per-buffer dicts replaces the ``residuals=`` tuple), so isinstance checks
+#: keep working but old constructor calls / ``.residuals`` reads do not.
+CompressionState = ChannelState
 
-def attach_compression(algorithm, state, key: Optional[jax.Array] = None):
-    """Attach the :class:`CompressionState` an algorithm's spec calls for.
 
-    Identity / no compression returns ``state`` untouched (``comp=None``) —
-    the uncompressed state pytree is structurally unchanged, which is what
-    makes the identity bit-parity guarantee structural rather than numeric.
+def _as_typed_key(key: Optional[jax.Array]) -> jax.Array:
+    if key is None:
+        return jax.random.key(0)
+    arr = jnp.asarray(key)
+    if jnp.issubdtype(arr.dtype, jnp.integer):
+        if arr.ndim == 0:
+            return jax.random.key(arr)          # plain int seed
+        # legacy raw PRNGKey (uint32 key data, e.g. jax.random.PRNGKey)
+        return jax.random.wrap_key_data(arr.astype(jnp.uint32))
+    return key
+
+
+def attach_channel_state(algorithm, state, key: Optional[jax.Array] = None):
+    """Attach the :class:`ChannelState` an algorithm's spec calls for.
+
+    No channel machinery (sync gossip, no active codec) returns ``state``
+    untouched (``comp=None``) — the plain state pytree is structurally
+    unchanged, which is what makes the dense/sync bit-parity guarantee
+    structural rather than numeric.
 
     The is-it-active rule lives in ONE place — ``CommSpec.
-    active_compression()`` — so state attachment can never disagree with
-    the executor about whether a codec is in play.
+    resolved_channel()`` — so state attachment can never disagree with the
+    executor about whether a channel is in play.
     """
-    comp = algorithm.comm.active_compression()
-    if comp is None:
+    channel = algorithm.comm.resolved_channel()
+    if channel is None:
         return state
-    if key is None:
-        key = jax.random.key(0)
-    else:
-        arr = jnp.asarray(key)
-        if jnp.issubdtype(arr.dtype, jnp.integer):
-            if arr.ndim == 0:
-                key = jax.random.key(arr)          # plain int seed
-            else:
-                # legacy raw PRNGKey (uint32 key data, e.g. jax.random.PRNGKey)
-                key = jax.random.wrap_key_data(arr.astype(jnp.uint32))
-    residuals = ()
-    if comp.uses_residual:
-        residuals = tuple(
-            jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), state.params)
-            for _ in algorithm.comm.buffers
-        )
+    wire = tuple(channel.init_wire(state.params) for _ in algorithm.comm.buffers)
     return dataclasses.replace(
-        state, comp=CompressionState(residuals=residuals, key=key)
+        state, comp=ChannelState(wire=wire, key=_as_typed_key(key))
     )
 
 
-def abstract_compression_state(algorithm, state):
-    """ShapeDtypeStruct-level :func:`attach_compression` for ``eval_shape`` /
-    sharding derivation: same state layout, ZERO allocation.
+def abstract_channel_state(algorithm, state):
+    """ShapeDtypeStruct-level :func:`attach_channel_state` for ``eval_shape``
+    / sharding derivation: same state layout, ZERO allocation.
 
-    ``attach_compression`` builds real zero residual trees — calling it
-    inside ``jax.eval_shape`` would still materialize n_buffers copies of
-    the full parameter memory (``jnp.zeros`` of a static shape is a concrete
-    constant even under tracing), which at production scale OOMs before any
-    training runs.
+    ``attach_channel_state`` builds real zero wire trees — calling it inside
+    ``jax.eval_shape`` would still materialize n_buffers copies of the full
+    parameter memory (``jnp.zeros`` of a static shape is a concrete constant
+    even under tracing), which at production scale OOMs before any training
+    runs.
     """
-    comp = algorithm.comm.active_compression()
-    if comp is None:
+    channel = algorithm.comm.resolved_channel()
+    if channel is None:
         return state
     sds = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)  # noqa: E731
-    residuals = ()
-    if comp.uses_residual:
-        residuals = tuple(
-            jax.tree.map(sds, state.params) for _ in algorithm.comm.buffers
-        )
+    params = jax.tree.map(sds, state.params)
+    wire = tuple(channel.abstract_wire(params) for _ in algorithm.comm.buffers)
     key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
-    return dataclasses.replace(
-        state, comp=CompressionState(residuals=residuals, key=key)
-    )
+    return dataclasses.replace(state, comp=ChannelState(wire=wire, key=key))
+
+
+#: legacy names (PR-4 attached only compression residuals)
+attach_compression = attach_channel_state
+abstract_compression_state = abstract_channel_state
+
+
+def _wire_entries(state, kind: str):
+    """All ``kind`` subtrees ("res", "hat", "age", "sent") across the wire
+    state's buffers; empty when no channel state is attached."""
+    comp = getattr(state, "comp", None)
+    if comp is None:
+        return []
+    return [
+        w[kind]
+        for w in comp.wire
+        if isinstance(w, dict) and w.get(kind) is not None
+    ]
 
 
 def compression_error(state) -> jnp.ndarray:
     """Σ ||e||² over all error-feedback residuals (NaN when the state
-    carries no compression residuals) — the per-round metrics stream."""
-    comp = getattr(state, "comp", None)
-    if comp is None or not comp.residuals:
+    carries no residual wire state) — the per-round metrics stream."""
+    residuals = _wire_entries(state, "res")
+    if not residuals:
         return jnp.float32(jnp.nan)
     total = jnp.float32(0.0)
-    for tree in comp.residuals:
+    for tree in residuals:
         for leaf in jax.tree.leaves(tree):
             total = total + jnp.sum(leaf.astype(jnp.float32) ** 2)
     return total
-
-
-# default transport: decode per node, hand the decoded tree to the engine's
-# linear mix (the Simulator / dense backends; the payload itself never moves)
-def _default_combine(mix_fn, scheduled: bool):
-    if scheduled:
-        return lambda payload, dec, ctx: mix_fn(dec, ctx)
-    return lambda payload, dec, ctx: mix_fn(dec)
-
-
-class GossipChannel:
-    """One communication event's compressed gossip, built fresh per trace.
-
-    The k-th ``mix`` call inside ``comm_update`` is the k-th declared buffer
-    of the ``CommSpec`` — residuals are matched positionally and collected
-    through a trace-time cell, then threaded back into the scan carry by the
-    executor via :meth:`final_state`.
-    """
-
-    def __init__(self, comp: Compressor, n_sites: int, comp_state: CompressionState,
-                 combine=None, *, mix_fn=None, scheduled: bool = False):
-        if combine is None:
-            if mix_fn is None:
-                raise ValueError("GossipChannel needs combine= or mix_fn=")
-            combine = _default_combine(mix_fn, scheduled)
-        self._comp = comp
-        self._combine = combine
-        self._n_sites = n_sites
-        self._residuals = comp_state.residuals
-        use_key, next_key = jax.random.split(comp_state.key)
-        self._use_key = use_key
-        self._next_key = next_key
-        self._new_residuals = []
-        self._calls = 0
-
-    def mix(self, tree: PyTree, ctx=None) -> PyTree:
-        i = self._calls
-        if i >= self._n_sites:
-            raise ValueError(
-                f"comm_update gossiped more than the {self._n_sites} buffers "
-                "declared in CommSpec.buffers — compression cannot match "
-                "residual state to call sites"
-            )
-        self._calls += 1
-        res = self._residuals[i] if self._comp.uses_residual else None
-        payload, dec, new_res = self._comp.roundtrip(
-            tree, res, jax.random.fold_in(self._use_key, i)
-        )
-        if new_res is not None:
-            self._new_residuals.append(new_res)
-        return self._combine(payload, dec, ctx)
-
-    def final_state(self) -> CompressionState:
-        if self._calls != self._n_sites:
-            raise ValueError(
-                f"comm_update gossiped {self._calls} buffers but CommSpec "
-                f"declares {self._n_sites} — fix the spec's buffers tuple"
-            )
-        return CompressionState(
-            residuals=tuple(self._new_residuals), key=self._next_key
-        )

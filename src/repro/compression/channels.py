@@ -1,0 +1,526 @@
+"""Stateful gossip channels: HOW a communication event moves on the wire.
+
+The compression package factors a communication event into three declarative
+axes the round executor composes:
+
+  * the **codec** (``Compressor``, ``base.py``) — the message representation;
+  * the **channel** (this module) — the gossip *protocol*: what is encoded
+    (iterate vs difference-to-replica), what each node mixes against
+    (fresh values vs bounded-staleness snapshots), and when a node sends;
+  * the **transport** (:class:`Transport`, fed by ``gossip.py``) — the
+    engine-level delivery of the encoded payload (dense W contraction,
+    payload-rolling ``collective-permute``).
+
+Channels are frozen declarative specs registered in :data:`CHANNELS` and
+named on ``CommSpec.channel``; their per-node, per-buffer **wire state**
+(replica estimates, error-feedback residuals, staleness ages) lives in the
+algorithm state pytrees as a :class:`~repro.compression.base.ChannelState`,
+so it scans, checkpoints, shards and fault-gates like any other buffer.
+
+  * :class:`SyncChannel`  — today's synchronous gossip: every node encodes
+    its value each round (error-feedback residual wire state when the codec
+    asks for it).  With no active codec it is a pass-through: the executor
+    short-circuits to the exact uncompressed path, which is what keeps the
+    dense/sync channel bit-identical to the pre-channel executor.
+  * :class:`ChocoChannel` — CHOCO-style difference gossip (Koloskova et al.
+    2019): nodes share replica estimates ``x̂`` and gossip the *compressed
+    difference* ``q(x − x̂)``; everyone applies the same replica update, and
+    the iterate moves by ``x ← x + γ (W x̂⁺ − x̂⁺)``.  Differences shrink as
+    consensus is approached, so aggressive sparsifiers stop paying the
+    tracking-error tax error feedback alone cannot fix.
+  * :class:`AsyncChannel` — asynchronous stale-mix: nodes mix against
+    bounded-staleness snapshots of their neighbors' payloads, refreshing a
+    snapshot only on an event trigger (relative drift ``‖x − x̂‖`` exceeding
+    a threshold) or when its age hits the staleness bound.  Bound 1 forces a
+    send every round and statically short-circuits to the exact sync path.
+
+The per-event driver is :class:`ChannelSession` — the trace-time object the
+round executor wraps around ``mix_fn`` (one session per ``comm_update``
+trace; the k-th ``mix`` call is matched positionally to the k-th entry of
+``CommSpec.buffers``, the same mutable-cell idiom the runtime uses for its
+metrics loss).
+
+This module imports only ``base`` (never ``repro.core``): the executor
+imports us, not vice versa.  Round-context knobs (``ctx.comp_scale`` /
+``ctx.trigger``) are read with ``getattr`` so channels run identically under
+the static (ctx-less) executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ChannelState, Compressor, ErrorFeedback
+
+PyTree = Any
+
+__all__ = [
+    "GossipChannel",
+    "SyncChannel",
+    "ChocoChannel",
+    "AsyncChannel",
+    "CHANNELS",
+    "register_channel",
+    "make_channel",
+    "Transport",
+    "ChannelSession",
+]
+
+
+def _n_nodes(tree: PyTree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def _zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), tree)
+
+
+def _sds_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _ctx_scale(ctx):
+    return getattr(ctx, "comp_scale", None) if ctx is not None else None
+
+
+def _tree_sub_f32(a: PyTree, b: PyTree) -> PyTree:
+    """a − b in fp32, cast back to a's leaf dtypes."""
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32) - y.astype(jnp.float32)).astype(x.dtype),
+        a,
+        b,
+    )
+
+
+def _tree_add_f32(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32) + y.astype(jnp.float32)).astype(x.dtype),
+        a,
+        b,
+    )
+
+
+class Transport:
+    """Engine adapter a channel delivers through.
+
+    ``mix``          — the engine's opaque linear gossip on a raw tree (the
+                       Simulator's dense W contraction, the runtime's
+                       collective-permute rotations).
+    ``mix_payload``  — payload-level delivery when the engine provides one
+                       (the sharded roll backend's ``rotation_combine``,
+                       which permutes the *packed* arrays so the measured
+                       link bytes are the payload's); falls back to mixing
+                       the locally decoded message through ``mix``.
+    """
+
+    def __init__(self, mix_fn: Callable, scheduled: bool = False,
+                 payload_combine: Optional[Callable] = None):
+        self._mix_fn = mix_fn
+        self._scheduled = scheduled
+        self._payload_combine = payload_combine
+
+    def mix(self, tree: PyTree, ctx=None) -> PyTree:
+        if self._scheduled:
+            return self._mix_fn(tree, ctx)
+        return self._mix_fn(tree)
+
+    def mix_payload(self, payload: PyTree, dec: PyTree, ctx=None) -> PyTree:
+        if self._payload_combine is not None:
+            return self._payload_combine(payload, dec, ctx)
+        return self.mix(dec, ctx)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipChannel:
+    """Base declarative channel spec.
+
+    ``compression`` is the wire codec the channel encodes with (a resolved
+    ``Compressor`` or None = raw).  Subclasses define the protocol via
+    :meth:`gossip` and describe their wire state via ``init_wire`` /
+    ``abstract_wire`` / ``wire_spec`` — three views of the SAME layout
+    (concrete zeros, ShapeDtypeStructs, PartitionSpecs) so state attachment,
+    ``eval_shape`` derivation and sharding can never disagree.
+    """
+
+    compression: Any = None
+
+    name = "base"
+
+    @property
+    def tag(self) -> str:
+        comp = self.compression
+        return self.name if comp is None else f"{self.name}_{comp.tag}"
+
+    @property
+    def is_passthrough(self) -> bool:
+        """True when the channel adds nothing over the plain gossip path —
+        the executor then skips the channel machinery entirely, keeping the
+        uncompressed path structurally bit-identical."""
+        return False
+
+    def bind(self, compression: Optional[Compressor]) -> "GossipChannel":
+        """Attach the CommSpec's codec; a codec already set on the channel
+        instance wins.  Subclasses that replace error feedback with their
+        own mechanism (difference gossip) unwrap the EF default."""
+        if self.compression is not None or compression is None:
+            return self
+        return dataclasses.replace(self, compression=compression)
+
+    # -- wire-state layout (one tree per CommSpec.buffers entry) -----------
+    def init_wire(self, params: PyTree) -> Optional[PyTree]:
+        return None
+
+    def abstract_wire(self, params: PyTree) -> Optional[PyTree]:
+        return None
+
+    def wire_spec(self, param_spec: PyTree, node_spec: Any) -> Optional[PyTree]:
+        """PartitionSpec tree mirroring :meth:`init_wire`: ``param_spec``
+        for params-shaped subtrees, ``node_spec`` for (N,) per-node leaves."""
+        return None
+
+    # -- the protocol -------------------------------------------------------
+    def gossip(self, tree: PyTree, wire: Optional[PyTree], key, ctx,
+               transport: Transport):
+        """One buffer's communication: ``(mixed_tree, new_wire)``."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncChannel(GossipChannel):
+    """Synchronous gossip (the pre-channel semantics): every node encodes
+    its current value every round; the codec's error-feedback residual is
+    the only wire state.  No codec (or identity) is a pass-through."""
+
+    name = "sync"
+
+    @property
+    def is_passthrough(self) -> bool:
+        comp = self.compression
+        return comp is None or comp.is_identity
+
+    def init_wire(self, params):
+        if self.compression is not None and self.compression.uses_residual:
+            return {"res": _zeros_like(params)}
+        return None
+
+    def abstract_wire(self, params):
+        if self.compression is not None and self.compression.uses_residual:
+            return {"res": _sds_like(params)}
+        return None
+
+    def wire_spec(self, param_spec, node_spec):
+        if self.compression is not None and self.compression.uses_residual:
+            return {"res": param_spec}
+        return None
+
+    def gossip(self, tree, wire, key, ctx, transport):
+        comp = self.compression
+        res = wire["res"] if wire is not None else None
+        payload, dec, new_res = comp.roundtrip(
+            tree, res, key, scale=_ctx_scale(ctx)
+        )
+        mixed = transport.mix_payload(payload, dec, ctx)
+        return mixed, (None if new_res is None else {"res": new_res})
+
+
+@dataclasses.dataclass(frozen=True)
+class ChocoChannel(GossipChannel):
+    """CHOCO-style difference gossip: per-buffer replica estimates ``x̂``
+    (node-stacked, zero-initialized) are shared knowledge; each node
+    transmits ``q(x − x̂)``, every node applies the same replica update
+    ``x̂⁺ = x̂ + D(q)``, and the iterate moves by the consensus step
+
+        x ← x + γ (Σ_j w_ij x̂⁺_j − x̂⁺_i)
+
+    (γ = 1, W doubly stochastic reduces to ``x + W x̂⁺ − x̂⁺``; with the
+    identity codec and γ = 1 this is exactly W x up to fp reassociation).
+    The payload on the wire is the compressed difference — same analytic
+    bytes as compressing x directly, but the signal being quantized decays
+    with consensus, which is what closes the top-k tracking-error gap.
+    """
+
+    gamma: float = 1.0
+    name = "choco"
+
+    def __post_init__(self):
+        if not 0.0 < float(self.gamma) <= 1.0:
+            raise ValueError(f"choco gamma must be in (0, 1], got {self.gamma}")
+
+    def bind(self, compression):
+        if self.compression is not None or compression is None:
+            return self
+        # difference gossip replaces error feedback: the replica IS the
+        # memory, feeding a residual on top would double-count the error
+        if isinstance(compression, ErrorFeedback):
+            compression = compression.inner
+        return dataclasses.replace(self, compression=compression)
+
+    def init_wire(self, params):
+        return {"hat": _zeros_like(params)}
+
+    def abstract_wire(self, params):
+        return {"hat": _sds_like(params)}
+
+    def wire_spec(self, param_spec, node_spec):
+        return {"hat": param_spec}
+
+    def _encode_diff(self, diff, key, ctx):
+        comp = self.compression
+        if comp is None or comp.is_identity:
+            return diff, diff
+        payload = comp.encode_tree(diff, key, scale=_ctx_scale(ctx))
+        return payload, comp.decode_tree(payload)
+
+    def _consensus_step(self, tree, hat_new, ctx, transport):
+        """x ← x + γ (W x̂⁺ − x̂⁺): the replica consensus step shared by
+        difference (choco) and stale-mix (async) gossip."""
+        mixed_hat = transport.mix(hat_new, ctx)
+        g = jnp.float32(self.gamma)
+        return jax.tree.map(
+            lambda x, m, h: (
+                x.astype(jnp.float32)
+                + g * (m.astype(jnp.float32) - h.astype(jnp.float32))
+            ).astype(x.dtype),
+            tree,
+            mixed_hat,
+            hat_new,
+        )
+
+    def gossip(self, tree, wire, key, ctx, transport):
+        hat = wire["hat"]
+        diff = _tree_sub_f32(tree, hat)
+        _, dec = self._encode_diff(diff, key, ctx)
+        hat_new = _tree_add_f32(hat, dec)
+        out = self._consensus_step(tree, hat_new, ctx, transport)
+        return out, {"hat": hat_new}
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncChannel(ChocoChannel):
+    """Asynchronous stale-mix gossip: same replica algebra as CHOCO, but a
+    node refreshes its public snapshot only when an event fires —
+
+        send_i = (age_i + 1 ≥ max_staleness)  OR  ‖x_i − x̂_i‖² > θ² ‖x_i‖²
+
+    — so between events its neighbors mix against the stale snapshot (ages
+    are bounded by construction).  ``threshold`` θ is the relative-drift
+    trigger (0 = send whenever anything changed); the scenario engine can
+    override it per round via ``ctx.trigger`` (< 0 = keep the static value).
+    ``max_staleness=1`` forces a send every round and — with no codec —
+    statically short-circuits to the exact synchronous mix, which is the
+    bound-1 ≡ sync acceptance guarantee.
+
+    Wire state per buffer: the snapshot tree ``hat``, per-node ``age``
+    (rounds since last send) and the last round's ``sent`` mask (the
+    triggered-send-rate metrics stream).
+    """
+
+    max_staleness: int = 4
+    threshold: float = 0.0
+    name = "async"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if int(self.max_staleness) < 1:
+            raise ValueError(
+                f"async max_staleness must be >= 1, got {self.max_staleness}"
+            )
+        if float(self.threshold) < 0.0:
+            raise ValueError(
+                f"async threshold must be >= 0, got {self.threshold}"
+            )
+
+    def init_wire(self, params):
+        n = _n_nodes(params)
+        return {
+            "hat": _zeros_like(params),
+            "age": jnp.zeros((n,), jnp.int32),
+            "sent": jnp.zeros((n,), jnp.bool_),
+        }
+
+    def abstract_wire(self, params):
+        n = _n_nodes(params)
+        return {
+            "hat": _sds_like(params),
+            "age": jax.ShapeDtypeStruct((n,), jnp.int32),
+            "sent": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        }
+
+    def wire_spec(self, param_spec, node_spec):
+        return {"hat": param_spec, "age": node_spec, "sent": node_spec}
+
+    @property
+    def _raw(self) -> bool:
+        return self.compression is None or self.compression.is_identity
+
+    @property
+    def is_passthrough(self) -> bool:
+        # staleness bound 1 forces a send every round: with nothing to
+        # compress this IS synchronous gossip, so the executor takes the
+        # structurally identical plain path — the bound-1 ≡ sync guarantee
+        # is bit-exact on BOTH engines by construction, like identity codecs
+        return int(self.max_staleness) == 1 and self._raw
+
+    def gossip(self, tree, wire, key, ctx, transport):
+        n = _n_nodes(tree)
+        if int(self.max_staleness) == 1 and self._raw:
+            # every round is a forced send: snapshots equal the fresh values,
+            # so mix them directly — bit-identical to the sync channel (the
+            # snapshot aliases the input; no extra ops enter the trace)
+            mixed = transport.mix(tree, ctx)
+            wire_new = {
+                "hat": tree,
+                "age": jnp.zeros((n,), jnp.int32),
+                "sent": jnp.ones((n,), jnp.bool_),
+            }
+            return mixed, wire_new
+
+        hat, age = wire["hat"], wire["age"]
+        diff = _tree_sub_f32(tree, hat)
+        drift2 = sum(
+            jnp.sum(d.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
+            for d in jax.tree.leaves(diff)
+        )
+        ref2 = sum(
+            jnp.sum(x.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
+            for x in jax.tree.leaves(tree)
+        )
+        thr = jnp.float32(self.threshold)
+        ctx_thr = getattr(ctx, "trigger", None) if ctx is not None else None
+        if ctx_thr is not None:
+            thr = jnp.where(ctx_thr >= 0, ctx_thr.astype(jnp.float32), thr)
+        forced = (age + 1) >= jnp.int32(self.max_staleness)
+        send = forced | (drift2 > thr * thr * (ref2 + 1e-12))
+
+        _, dec = self._encode_diff(diff, key, ctx)
+        hat_new = jax.tree.map(
+            lambda h, d: (
+                h.astype(jnp.float32)
+                + jnp.where(
+                    send.reshape((n,) + (1,) * (d.ndim - 1)),
+                    d.astype(jnp.float32),
+                    0.0,
+                )
+            ).astype(h.dtype),
+            hat,
+            dec,
+        )
+        out = self._consensus_step(tree, hat_new, ctx, transport)
+        wire_new = {
+            "hat": hat_new,
+            "age": jnp.where(send, 0, age + 1).astype(jnp.int32),
+            "sent": send,
+        }
+        return out, wire_new
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+CHANNELS: Dict[str, Callable[..., GossipChannel]] = {}
+
+
+def register_channel(name: str, factory: Callable[..., GossipChannel]):
+    if name in CHANNELS:
+        raise ValueError(f"channel {name!r} already registered")
+    CHANNELS[name] = factory
+    return factory
+
+
+def make_channel(spec, **kwargs) -> GossipChannel:
+    """Resolve a channel spec: a ready instance, or a registry name with an
+    optional ``:arg`` shorthand (``"choco:0.8"`` = consensus step γ,
+    ``"async:2"`` = staleness bound)."""
+    if isinstance(spec, GossipChannel):
+        return spec
+    if not isinstance(spec, str):
+        raise ValueError(
+            f"channel spec must be a name or a GossipChannel, got {type(spec).__name__}"
+        )
+    name, _, arg = spec.partition(":")
+    try:
+        factory = CHANNELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown channel {spec!r}; known: {sorted(CHANNELS)}"
+        ) from None
+    return factory(arg, **kwargs) if arg else factory(**kwargs)
+
+
+def _sync(arg=None, **kw):
+    if arg:
+        raise ValueError(
+            f"the sync channel takes no :arg shorthand (got {arg!r}); "
+            "did you mean choco:<gamma> or async:<staleness>?"
+        )
+    return SyncChannel(**kw)
+
+
+def _choco(arg=None, **kw):
+    if arg is not None:
+        kw.setdefault("gamma", float(arg))
+    return ChocoChannel(**kw)
+
+
+def _async(arg=None, **kw):
+    if arg is not None:
+        kw.setdefault("max_staleness", int(arg))
+    return AsyncChannel(**kw)
+
+
+register_channel("sync", _sync)
+register_channel("choco", _choco)
+register_channel("async", _async)
+
+
+# --------------------------------------------------------------------------
+# trace-time session (built fresh per comm_update trace by the executor)
+# --------------------------------------------------------------------------
+class ChannelSession:
+    """One communication event's channel driver.
+
+    The k-th ``mix`` call inside ``comm_update`` is the k-th declared buffer
+    of the ``CommSpec`` — wire state is matched positionally and collected
+    through a trace-time cell, then threaded back into the scan carry by the
+    executor via :meth:`final_state`.
+    """
+
+    def __init__(self, channel: GossipChannel, n_buffers: int,
+                 chan_state: ChannelState, transport: Transport):
+        self._channel = channel
+        self._transport = transport
+        self._n_buffers = n_buffers
+        self._wire = chan_state.wire
+        use_key, next_key = jax.random.split(chan_state.key)
+        self._use_key = use_key
+        self._next_key = next_key
+        self._new_wire = []
+        self._calls = 0
+
+    def mix(self, tree: PyTree, ctx=None) -> PyTree:
+        i = self._calls
+        if i >= self._n_buffers:
+            raise ValueError(
+                f"comm_update gossiped more than the {self._n_buffers} buffers "
+                "declared in CommSpec.buffers — the channel cannot match "
+                "wire state to call sites"
+            )
+        self._calls += 1
+        wire = self._wire[i] if i < len(self._wire) else None
+        mixed, new_wire = self._channel.gossip(
+            tree, wire, jax.random.fold_in(self._use_key, i), ctx,
+            self._transport,
+        )
+        self._new_wire.append(new_wire)
+        return mixed
+
+    def final_state(self) -> ChannelState:
+        if self._calls != self._n_buffers:
+            raise ValueError(
+                f"comm_update gossiped {self._calls} buffers but CommSpec "
+                f"declares {self._n_buffers} — fix the spec's buffers tuple"
+            )
+        return ChannelState(wire=tuple(self._new_wire), key=self._next_key)

@@ -78,14 +78,15 @@ class Identity(Compressor):
     def tag(self) -> str:
         return "identity"
 
-    def encode(self, x, key):
-        del key
+    def encode(self, x, key, scale=None):
+        del key, scale
         return Packed({"raw": x})
 
     def decode(self, packed):
         return packed.data["raw"]
 
-    def payload_bytes(self, shape, dtype):
+    def payload_bytes(self, shape, dtype, scale=None):
+        del scale
         return int(math.prod(shape)) * _dtype_bytes(dtype)
 
 
@@ -107,17 +108,35 @@ class QSGD(Compressor):
     def tag(self) -> str:
         return "qsgd"
 
-    def encode(self, x, key):
+    def encode(self, x, key, scale=None):
         flat, shape = _flat(x)
-        scale = jnp.max(jnp.abs(flat.astype(jnp.float32)), axis=1)
-        safe = jnp.where(scale > 0, scale, 1.0)
+        s = jnp.max(jnp.abs(flat.astype(jnp.float32)), axis=1)
+        safe = jnp.where(s > 0, s, 1.0)
         xn = flat.astype(jnp.float32) / safe[:, None]
         u = _hash_uniform(key, flat.shape)
-        qf = fused.call(
-            "qsgd_quantize", xn, u, scalars=(float(self.levels),)
-        )
+        if scale is None:
+            qf = fused.call(
+                "qsgd_quantize", xn, u, scalars=(float(self.levels),)
+            )
+            return Packed(
+                {"q": qf.astype(jnp.int8), "scale": s},
+                meta=(shape, jnp.dtype(x.dtype).name),
+            )
+        # adaptive levels: the per-round schedule scales the level count, so
+        # the effective bits/element shrink as scale drops.  The level count
+        # is traced (it rides the scan), so it travels in the payload and the
+        # quantize runs through plain jnp instead of the static-scalar fused
+        # op — the fused path is byte-identical at scale=None.
+        lv = jnp.clip(jnp.round(jnp.float32(self.levels) * scale), 1.0,
+                      float(self.levels))
+        qf = jnp.sign(xn) * jnp.floor(jnp.abs(xn) * lv + u)
+        qf = jnp.clip(qf, -127.0, 127.0)
         return Packed(
-            {"q": qf.astype(jnp.int8), "scale": scale},
+            {
+                "q": qf.astype(jnp.int8),
+                "scale": s,
+                "lv": jnp.broadcast_to(lv, (flat.shape[0],)),
+            },
             meta=(shape, jnp.dtype(x.dtype).name),
         )
 
@@ -125,17 +144,28 @@ class QSGD(Compressor):
         shape, dtype = packed.meta
         q = packed.data["q"]          # int8 straight in: the flat launcher
         scale = packed.data["scale"]  # upcasts in-register (1 byte/elem read)
-        deq = fused.call(
-            "qsgd_dequantize",
-            q,
-            jnp.broadcast_to(scale[:, None], q.shape),
-            scalars=(1.0 / float(self.levels),),
-        )
+        if "lv" in packed.data:       # adaptive-levels payload (traced count)
+            lv = packed.data["lv"]
+            deq = q.astype(jnp.float32) * (scale / lv)[:, None]
+        else:
+            deq = fused.call(
+                "qsgd_dequantize",
+                q,
+                jnp.broadcast_to(scale[:, None], q.shape),
+                scalars=(1.0 / float(self.levels),),
+            )
         return deq.reshape((q.shape[0],) + shape).astype(jnp.dtype(dtype))
 
-    def payload_bytes(self, shape, dtype):
-        del dtype  # always 1 byte/element + the fp32 scale
-        return int(math.prod(shape)) * 1 + 4
+    def payload_bytes(self, shape, dtype, scale=None):
+        del dtype  # 1 byte/element + the fp32 scale; fewer levels still cost
+        # a full int8 slot on this wire format, so the analytic model only
+        # credits the entropy win down to ceil(log2(2L+1)) bits/element
+        d = int(math.prod(shape))
+        if scale is None:
+            return d * 1 + 4
+        lv = max(1, min(int(self.levels), round(self.levels * float(scale))))
+        bits = math.ceil(math.log2(2 * lv + 1))
+        return math.ceil(d * min(bits, 8) / 8) + 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,12 +192,20 @@ class TopK(Compressor):
         _, idx = lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
         return idx.astype(jnp.int32)
 
-    def encode(self, x, key):
+    def encode(self, x, key, scale=None):
         flat, shape = _flat(x)
         d = flat.shape[1]
         k = self.k_for(d)
         idx = self._indices(flat, key, k)
         vals = fused.call("top_k_pack", flat, idx)
+        if scale is not None:
+            # adaptive ratio: keep only the first ceil(scale * k) slots (the
+            # largest magnitudes — top_k returns them sorted), zeroing the
+            # rest so the payload shape stays static while the effective
+            # sparsity follows the per-round schedule
+            k_eff = jnp.clip(jnp.ceil(jnp.float32(k) * scale), 1.0, float(k))
+            keep = jnp.arange(k, dtype=jnp.float32)[None, :] < k_eff
+            vals = jnp.where(keep, vals, 0.0).astype(vals.dtype)
         return Packed(
             {"idx": idx, "vals": vals},
             meta=(shape, jnp.dtype(x.dtype).name, d),
@@ -179,9 +217,11 @@ class TopK(Compressor):
         dense = fused.call("top_k_unpack", idx, vals, d=d)
         return dense.reshape((idx.shape[0],) + shape).astype(jnp.dtype(dtype))
 
-    def payload_bytes(self, shape, dtype):
+    def payload_bytes(self, shape, dtype, scale=None):
         d = int(math.prod(shape))
         k = self.k_for(d)
+        if scale is not None:
+            k = max(1, min(k, int(math.ceil(k * float(scale)))))
         return k * (4 + _dtype_bytes(dtype))
 
 
@@ -230,7 +270,8 @@ class LowRank(Compressor):
             return None
         return m, nn, r
 
-    def encode(self, x, key):
+    def encode(self, x, key, scale=None):
+        del scale  # rank is structural; no per-round knob for this codec
         flat_shape = tuple(x.shape[1:])
         plan = self._plan(flat_shape)
         if plan is None:
@@ -253,7 +294,8 @@ class LowRank(Compressor):
         mat = jnp.einsum("nmr,ncr->nmc", p, q)
         return mat.reshape((p.shape[0],) + shape).astype(jnp.dtype(dtype))
 
-    def payload_bytes(self, shape, dtype):
+    def payload_bytes(self, shape, dtype, scale=None):
+        del scale
         plan = self._plan(tuple(shape))
         if plan is None:
             return int(math.prod(shape)) * _dtype_bytes(dtype)

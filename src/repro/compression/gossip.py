@@ -1,7 +1,7 @@
 """Transport backends for compressed gossip.
 
-The :class:`~repro.compression.base.GossipChannel` hands every combine
-callback ``(payload, dec, ctx)``:
+The channel layer's :class:`~repro.compression.channels.Transport` hands
+every payload-combine callback ``(payload, dec, ctx)``:
 
   * ``payload`` — the encoded message tree (every array node-stacked), the
     thing that would move on a real wire;
@@ -35,7 +35,7 @@ Combine = Callable[[PyTree, PyTree, Optional[Any]], PyTree]
 __all__ = ["rotation_combine"]
 
 # (The dense transport — mix the decoded messages through the engine's
-# opaque linear gossip — is GossipChannel's built-in default in base.py;
+# opaque linear gossip — is Transport's built-in fallback in channels.py;
 # only the payload-rolling rotation backend needs a dedicated combine.)
 
 

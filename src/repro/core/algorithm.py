@@ -22,11 +22,13 @@ The legacy protocol (``local_step`` / ``round_end`` / python-dispatch
 ``step(..., t=int)``) is kept as thin deprecation shims on the base class
 (warning once per class; see ``reset_legacy_warnings``).
 
-Gossip compression (``repro.compression``) plugs in declaratively: the spec's
-``compression`` field names a wire codec, and :func:`make_round_step` routes
-every ``mix_fn`` call inside ``comm_update`` through a ``GossipChannel``
-(encode -> transport/combine -> per-buffer error-feedback residuals carried
-in the state's ``comp`` field).
+The communication runtime (``repro.compression``) plugs in declaratively:
+the spec's ``compression`` field names a wire codec and its ``channel``
+field a gossip protocol (``sync``, ``choco`` difference gossip, ``async``
+stale-mix); :func:`make_round_step` routes every ``mix_fn`` call inside
+``comm_update`` through a trace-time ``ChannelSession`` (encode ->
+transport/combine -> per-buffer wire state — residuals, replica estimates,
+staleness ages — carried in the state's ``comp`` field).
 """
 from __future__ import annotations
 
@@ -76,12 +78,23 @@ class CommSpec:
               error-feedback-wrapped by default), or a ready
               ``repro.compression.Compressor`` instance.  None and
               "identity" take the exact uncompressed gossip path.
+    channel:  the gossip *protocol* — None / "sync" (synchronous gossip,
+              today's semantics), "choco" (CHOCO-style compressed-difference
+              gossip against shared replica estimates; ``choco:0.8`` sets
+              the consensus step γ), "async" (stale-mix against bounded-
+              staleness snapshots with event-triggered sends; ``async:2``
+              sets the staleness bound), or a ready
+              ``repro.compression.GossipChannel`` instance.  The channel
+              encodes with the spec's ``compression`` codec (difference-
+              gossip channels unwrap the error-feedback default — the
+              replica is the memory).
     """
 
     cadence: str = "every_tau"
     buffers: Tuple[str, ...] = ("params",)
     reset: str = "none"
     compression: Any = None
+    channel: Any = None
 
     def __post_init__(self):
         if self.cadence not in CADENCES:
@@ -93,6 +106,14 @@ class CommSpec:
 
             object.__setattr__(
                 self, "compression", make_compressor(self.compression)
+            )
+        if self.channel is not None:
+            from ..compression.channels import make_channel  # lazy: no cycle
+
+            object.__setattr__(
+                self,
+                "channel",
+                make_channel(self.channel).bind(self.compression),
             )
 
     def round_len(self, tau: int) -> int:
@@ -111,6 +132,22 @@ class CommSpec:
         if comp is None or comp.is_identity:
             return None
         return comp
+
+    def resolved_channel(self):
+        """The :class:`~repro.compression.GossipChannel` the executors must
+        drive, or None when the plain gossip path applies (sync channel, no
+        active codec) — the ONE is-it-active rule shared by the executor,
+        state attachment and the sharding derivation, so they can never
+        disagree.  A bare ``compression`` spec implies the sync channel."""
+        chan = self.channel
+        if chan is not None:
+            return None if chan.is_passthrough else chan
+        comp = self.active_compression()
+        if comp is None:
+            return None
+        from ..compression.channels import SyncChannel  # lazy: no cycle
+
+        return SyncChannel(compression=comp)
 
 
 @jax.tree_util.register_dataclass
@@ -135,12 +172,20 @@ class RoundCtx:
                 node skips that local update (state unchanged).
     pattern:    () int32 — index into a static tuple of gossip rotations for
                 shift-structured schedules (collective-permute backend).
+    comp_scale: () float32 — this round's adaptive-compression knob in
+                (0, 1]: the fraction of the codec's shape-static payload
+                actually spent (warmup-dense -> compress-harder schedules).
+                None = no schedule, codecs run at their static setting.
+    trigger:    () float32 — this round's event-trigger threshold override
+                for async channels (< 0 = keep the channel's static value).
     """
 
     w: Optional[jnp.ndarray] = None
     active: Optional[jnp.ndarray] = None
     local_mask: Optional[jnp.ndarray] = None
     pattern: Optional[jnp.ndarray] = None
+    comp_scale: Optional[jnp.ndarray] = None
+    trigger: Optional[jnp.ndarray] = None
 
 
 def _select_nodes(mask: Optional[jnp.ndarray], new: Any, old: Any) -> Any:
@@ -200,10 +245,11 @@ class DecentralizedAlgorithm:
     state (scan-compatible: no host syncs, no data-dependent Python control
     flow).  ``comm`` declares the communication schedule.
 
-    Every subclass carries a ``compression`` hyperparameter field (spec name
-    or ``Compressor`` instance); when set, the instance's ``comm`` spec is
-    rebuilt with that codec so the executors — which only ever look at
-    ``algorithm.comm`` — pick it up declaratively.
+    Every subclass carries ``compression`` and ``channel`` hyperparameter
+    fields (spec names or ``Compressor`` / ``GossipChannel`` instances);
+    when set, the instance's ``comm`` spec is rebuilt with that codec /
+    gossip protocol so the executors — which only ever look at
+    ``algorithm.comm`` — pick them up declaratively.
     """
 
     comm: CommSpec = CommSpec()
@@ -212,13 +258,23 @@ class DecentralizedAlgorithm:
     #: keeps the class spec's compression (usually None = uncompressed)
     compression: Any = None
 
+    #: per-instance gossip channel ("sync" / "choco" / "async:2" / instance);
+    #: None keeps the class spec's channel (usually None = sync)
+    channel: Any = None
+
     def __post_init__(self):
         comp = getattr(self, "compression", None)
-        if comp is not None:
+        chan = getattr(self, "channel", None)
+        if comp is not None or chan is not None:
+            repl = {}
+            if comp is not None:
+                repl["compression"] = comp
+            if chan is not None:
+                repl["channel"] = chan
             object.__setattr__(
                 self,
                 "comm",
-                dataclasses.replace(type(self).comm, compression=comp),
+                dataclasses.replace(type(self).comm, **repl),
             )
 
     #: name of the state field that estimates the (global) gradient
@@ -316,21 +372,24 @@ def make_round_step(
     bit-identical to the static executor (a traced always-true select still
     changes XLA fusion, hence ulp-level drift, if left in).
 
-    When the algorithm's spec declares an *active* compression codec
-    (``CommSpec.active_compression()``), every gossip inside ``comm_update``
-    is routed through a fresh ``repro.compression.GossipChannel``: messages
-    are encoded (with per-buffer error-feedback residuals read from / written
-    back to ``state.comp``) and delivered via ``compressed_combine`` — an
-    engine-supplied ``(payload, decoded, ctx) -> mixed`` transport (the
-    sharded runtime's payload-rolling collective-permute backend); when None,
-    the decoded messages are mixed through ``mix_fn`` (the dense engines).
-    ``compression=None`` / ``"identity"`` skips this machinery entirely, so
-    the uncompressed path is untouched — bit-identical by construction.
+    When the algorithm's spec resolves to an *active* gossip channel
+    (``CommSpec.resolved_channel()`` — an explicit ``channel=`` protocol, or
+    the sync channel implied by an active compression codec), every gossip
+    inside ``comm_update`` is routed through a fresh trace-time
+    ``repro.compression.ChannelSession``: the channel encodes each buffer
+    (reading/writing its per-buffer wire state — residuals, replica
+    estimates, staleness ages — in ``state.comp``) and delivers through a
+    ``Transport`` wrapping ``mix_fn`` plus the optional engine-supplied
+    ``compressed_combine`` — a ``(payload, decoded, ctx) -> mixed`` payload
+    transport (the sharded runtime's payload-rolling collective-permute
+    backend); without one, decoded messages mix through ``mix_fn`` (the
+    dense engines).  No channel and no codec skips this machinery entirely,
+    so the plain path is untouched — bit-identical by construction.
     """
     spec = algorithm.comm
     round_len = spec.round_len(getattr(algorithm, "tau", 1))
     comm_gb = comm_grad_of_batch or grad_of_batch
-    compression = spec.active_compression()
+    channel = spec.resolved_channel()
 
     def _reset_fn(gf):
         if spec.reset == "full" and full_grad_fn is not None:
@@ -340,27 +399,28 @@ def make_round_step(
         return None
 
     def _comm(state, gf, ctx=None):
-        """The communication step, compressed or not."""
-        if compression is None:
+        """The communication step, channel-routed or plain."""
+        if channel is None:
             mfn = (lambda tree: mix_fn(tree, ctx)) if scheduled else mix_fn
             return algorithm.comm_update(state, mfn, gf, _reset_fn(gf))
-        from ..compression.base import GossipChannel  # lazy: no cycle
+        from ..compression.channels import ChannelSession, Transport  # lazy
 
-        comp_state = getattr(state, "comp", None)
-        if comp_state is None:
+        chan_state = getattr(state, "comp", None)
+        if chan_state is None:
             raise ValueError(
-                f"{type(algorithm).__name__} declares compression but the "
-                "state carries no CompressionState — initialize it via "
-                "repro.compression.attach_compression(algorithm, state)"
+                f"{type(algorithm).__name__} declares a gossip channel but "
+                "the state carries no ChannelState — initialize it via "
+                "repro.compression.attach_channel_state(algorithm, state)"
             )
-        chan = GossipChannel(
-            compression, len(spec.buffers), comp_state,
-            compressed_combine, mix_fn=mix_fn, scheduled=scheduled,
+        session = ChannelSession(
+            channel, len(spec.buffers), chan_state,
+            Transport(mix_fn, scheduled=scheduled,
+                      payload_combine=compressed_combine),
         )
         new = algorithm.comm_update(
-            state, lambda tree: chan.mix(tree, ctx), gf, _reset_fn(gf)
+            state, lambda tree: session.mix(tree, ctx), gf, _reset_fn(gf)
         )
-        return dataclasses.replace(new, comp=chan.final_state())
+        return dataclasses.replace(new, comp=session.final_state())
 
     if not scheduled:
 

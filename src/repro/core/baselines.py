@@ -55,6 +55,7 @@ class DLSGD(DecentralizedAlgorithm):
     tau: int = 1
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
+    channel: Any = None       # gossip channel protocol (sync/choco/async)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -107,6 +108,7 @@ class GTDSGD(DecentralizedAlgorithm):
     tau: int = 1  # fixed: GT-DSGD is a non-local-update method
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
+    channel: Any = None       # gossip channel protocol (sync/choco/async)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -159,6 +161,7 @@ class GTHSGD(DecentralizedAlgorithm):
     tau: int = 1  # communicates every step
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
+    channel: Any = None       # gossip channel protocol (sync/choco/async)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -217,6 +220,7 @@ class PDSGDM(DecentralizedAlgorithm):
     nesterov: bool = False
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
+    channel: Any = None       # gossip channel protocol (sync/choco/async)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -276,6 +280,7 @@ class SlowMoD(DecentralizedAlgorithm):
     beta: float = 0.95
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
+    channel: Any = None       # gossip channel protocol (sync/choco/async)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 

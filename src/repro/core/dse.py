@@ -112,6 +112,9 @@ class DSEMVR(DecentralizedAlgorithm):
     #: gossip wire codec (``repro.compression`` name or instance); None /
     #: "identity" keeps the exact uncompressed gossip path
     compression: Any = None
+    #: gossip channel protocol ("sync" / "choco" / "async:2" / instance);
+    #: None keeps synchronous gossip
+    channel: Any = None
 
     # one comm event per round, two param-sized messages (SGT y + SPA x);
     # v resets with the full/large-batch local gradient (Alg. 1 line 11)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..compression.base import attach_compression
+from ..compression.base import attach_channel_state
 from .algorithm import RoundCtx, make_round_step
 from .mixing import dense_mix, scheduled_dense_mix
 from .topology import Topology
@@ -233,6 +233,7 @@ class Simulator:
                 make_stream_fn(
                     self._grad_at_mean,
                     buffer_name=getattr(algorithm, "tracking_buffer", None),
+                    comm_buffers=algorithm.comm.buffers,
                 )
                 if stream_metrics
                 else None
@@ -240,13 +241,16 @@ class Simulator:
 
             @jax.jit
             def _run_scheduled(state, key, w, active, local_mask, pattern,
+                               comp_scale=None, trigger=None,
                                node_batch_sizes=None):
                 """Scan the schedule: one xs slice per communication round,
-                per-round metrics streamed as the scan ys."""
+                per-round metrics streamed as the scan ys.  ``comp_scale`` /
+                ``trigger`` are the optional per-round channel knobs (None —
+                an empty pytree — scans transparently)."""
 
                 def body(carry, xs):
                     state, key = carry
-                    wt, at, lm, pt = xs
+                    wt, at, lm, pt, cs, tg = xs
                     per_step = []
                     for _ in range(self.round_len):  # unrolled: tau is small
                         key, sk = jax.random.split(key)
@@ -254,13 +258,15 @@ class Simulator:
                             self.data.sample(sk, self.batch_size, node_batch_sizes)
                         )
                     batches = jax.tree.map(lambda *xs_: jnp.stack(xs_), *per_step)
-                    ctx = RoundCtx(w=wt, active=at, local_mask=lm, pattern=pt)
+                    ctx = RoundCtx(w=wt, active=at, local_mask=lm, pattern=pt,
+                                   comp_scale=cs, trigger=tg)
                     state = sched_step(state, batches, ctx)
                     ys = stream_fn(state, ctx) if stream_fn is not None else {}
                     return (state, key), ys
 
                 (state, key), ys = jax.lax.scan(
-                    body, (state, key), (w, active, local_mask, pattern)
+                    body, (state, key),
+                    (w, active, local_mask, pattern, comp_scale, trigger),
                 )
                 return state, key, ys
 
@@ -280,15 +286,18 @@ class Simulator:
     def init_state(self, params: PyTree, key: jax.Array):
         """Broadcast identical x_0 to all nodes (paper: x_0^{(i)} = x_0).
 
-        With an active gossip-compression spec, the compression side state
-        (error-feedback residuals + codec PRNG key) is attached here; the
-        identity / no-compression path returns the state untouched."""
+        With an active gossip channel (compression residuals, CHOCO
+        replicas, async snapshot ages) the per-buffer wire state + codec
+        PRNG key are attached here; the plain sync / no-codec path returns
+        the state untouched."""
         stacked = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (self.n_nodes,) + p.shape), params
         )
         state = self.alg.init(stacked, self._full_grad_fn)
         # fold so the codec's noise stream never aliases the batch sampling
-        return attach_compression(self.alg, state, jax.random.fold_in(key, 0x636F))
+        return attach_channel_state(
+            self.alg, state, jax.random.fold_in(key, 0x636F)
+        )
 
     # ------------------------------------------------------------------
     def run(
@@ -332,6 +341,10 @@ class Simulator:
                 jnp.asarray(schedule.active),
                 jnp.asarray(schedule.local_mask),
                 jnp.asarray(schedule.pattern),
+                None if schedule.comp_scale is None
+                else jnp.asarray(schedule.comp_scale),
+                None if schedule.trigger is None
+                else jnp.asarray(schedule.trigger),
             )
             stream_chunks: List[Any] = []
 
@@ -362,7 +375,9 @@ class Simulator:
             if self.scenario is None:
                 state, key = self._run_rounds(state, key, n_rounds=stop - start)
             else:
-                xs = tuple(a[start:stop] for a in xs_all)
+                xs = tuple(
+                    None if a is None else a[start:stop] for a in xs_all
+                )
                 state, key, ys = self._run_scheduled(state, key, *xs, node_bs)
                 if ys:
                     stream_chunks.append(ys)

@@ -1,5 +1,5 @@
 """Scenario sweep: a grid runner over algorithm x scenario x tau x omega
-x compressor.
+x compressor x gossip channel.
 
 Each grid cell runs one decentralized training job through the scenario
 engine — on the CPU simulator (``--engines sim``), the sharded runtime
@@ -67,6 +67,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--compressors", default="identity",
                    help="comma list of repro.compression specs "
                         "(identity, qsgd, top_k:0.1, rand_k:0.1, low_rank:2)")
+    p.add_argument("--channels", default="sync",
+                   help="comma list of gossip channel specs "
+                        "(sync, choco, choco:0.8, async:2)")
     p.add_argument("--engines", default="sim",
                    help="comma list from {sim, sharded}")
     p.add_argument("--nodes", type=int, default=8)
@@ -139,14 +142,15 @@ def _sim_problem(args, omega):
 
 
 def run_sim_cell(args, alg_name: str, scenario, tau: int, omega,
-                 compressor: str = "identity") -> Dict[str, Any]:
+                 compressor: str = "identity",
+                 channel: str = "sync") -> Dict[str, Any]:
     import jax
 
     from ..core import Simulator, make_algorithm
 
     data, loss_fn, params = _sim_problem(args, omega)
     alg = make_algorithm(alg_name, lr=args.lr, alpha=args.alpha, tau=tau,
-                         compression=compressor)
+                         compression=compressor, channel=channel)
     sim = Simulator(
         alg, None, loss_fn, data, batch_size=args.batch_size, scenario=scenario
     )
@@ -166,7 +170,8 @@ def run_sim_cell(args, alg_name: str, scenario, tau: int, omega,
 
 
 def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega,
-                     compressor: str = "identity") -> Dict[str, Any]:
+                     compressor: str = "identity",
+                     channel: str = "sync") -> Dict[str, Any]:
     """One cell through the sharded runtime (tiny LM on an N x 1 mesh).
 
     omega has no LM analogue here — per-node token streams are drawn from
@@ -193,6 +198,7 @@ def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega,
     job = make_train_job(
         cfg, mesh, algorithm=alg_name, tau=tau, lr=args.sharded_lr,
         alpha=args.alpha, scenario=scenario, compression=compressor,
+        channel=channel,
     )
     rl = job.round_len
     schedule = job.schedule_for(args.rounds)
@@ -241,6 +247,7 @@ def run_sweep(args) -> List[Dict[str, Any]]:
     taus = [int(t) for t in args.taus.split(",") if t]
     omegas = [_parse_omega(o) for o in args.omegas.split(",") if o]
     compressors = [c for c in args.compressors.split(",") if c]
+    channels = [c for c in getattr(args, "channels", "sync").split(",") if c]
     engines = [e for e in args.engines.split(",") if e]
     for e in engines:
         if e not in ("sim", "sharded"):
@@ -259,18 +266,22 @@ def run_sweep(args) -> List[Dict[str, Any]]:
                 print(f"[sweep] sharded engine ignores omega; "
                       f"running omega={_omega_tag(omegas[0])} only")
             grid = itertools.product(
-                algorithms, scenario_names, taus, compressors, engine_omegas
+                algorithms, scenario_names, taus, compressors, channels,
+                engine_omegas
             )
-            for alg_name, scen_name, tau, compressor, omega in grid:
+            for alg_name, scen_name, tau, compressor, chan, omega in grid:
                 scenario = make_scenario(scen_name, seed=args.seed)
                 comp_tag = compressor.replace(":", "")
+                chan_tag = chan.replace(":", "")
                 cell_id = (
                     f"{engine}-{alg_name}-{scen_name}"
                     f"-tau{tau}-omega{_omega_tag(omega)}"
                     + ("" if compressor == "identity" else f"-{comp_tag}")
+                    + ("" if chan == "sync" else f"-{chan_tag}")
                 )
                 runner = run_sim_cell if engine == "sim" else run_sharded_cell
-                result = runner(args, alg_name, scenario, tau, omega, compressor)
+                result = runner(args, alg_name, scenario, tau, omega,
+                                compressor, chan)
                 cell = {
                     "cell_id": cell_id,
                     "engine": engine,
@@ -279,6 +290,7 @@ def run_sweep(args) -> List[Dict[str, Any]]:
                     "tau": tau,
                     "omega": _omega_tag(omega),
                     "compression": compressor,
+                    "channel": chan,
                     "rounds": args.rounds,
                     "n_nodes": args.nodes,
                     "batch_size": args.batch_size,
@@ -298,6 +310,9 @@ def run_sweep(args) -> List[Dict[str, Any]]:
                     "mean_tracking_err": _mean(result["streams"].get("tracking_err")),
                     "mean_spectral_gap": _mean(result["streams"].get("spectral_gap")),
                     "mean_compression_err": _mean(result["streams"].get("compression_err")),
+                    "mean_replica_drift": _mean(result["streams"].get("replica_drift")),
+                    "mean_staleness": _mean(result["streams"].get("staleness")),
+                    "mean_send_rate": _mean(result["streams"].get("send_rate")),
                     "wall_s": result["wall_s"],
                 }
                 row = _jsonable(row)
@@ -320,12 +335,16 @@ def run_sweep(args) -> List[Dict[str, Any]]:
                 "tau": r["tau"],
                 "omega": r["omega"],
                 "compression": r.get("compression", "identity"),
+                "channel": r.get("channel", "sync"),
                 "rounds": r["rounds"],
                 "final": r["final"],
                 "mean_consensus": r["mean_consensus"],
                 "mean_tracking_err": r["mean_tracking_err"],
                 "mean_spectral_gap": r["mean_spectral_gap"],
                 "mean_compression_err": r["mean_compression_err"],
+                "mean_replica_drift": r.get("mean_replica_drift"),
+                "mean_staleness": r.get("mean_staleness"),
+                "mean_send_rate": r.get("mean_send_rate"),
                 "wall_s": r["wall_s"],
             }
             for r in rows

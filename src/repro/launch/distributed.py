@@ -29,10 +29,11 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compression.base import (
-    CompressionState,
-    abstract_compression_state,
-    attach_compression,
+    ChannelState,
+    abstract_channel_state,
+    attach_channel_state,
 )
+from ..compression.channels import SyncChannel
 from ..compression.gossip import rotation_combine
 from ..core import make_algorithm, ring
 from ..core.algorithm import DecentralizedAlgorithm, RoundCtx, make_round_step
@@ -113,15 +114,30 @@ class TrainJob:
             active=jnp.asarray(schedule.active[r]),
             local_mask=jnp.asarray(schedule.local_mask[r]),
             pattern=jnp.asarray(schedule.pattern[r]),
+            comp_scale=(
+                None if schedule.comp_scale is None
+                else jnp.asarray(schedule.comp_scale[r])
+            ),
+            trigger=(
+                None if schedule.trigger is None
+                else jnp.asarray(schedule.trigger[r])
+            ),
         )
 
     def abstract_ctx(self) -> RoundCtx:
         n, L = self.n_nodes, max(self.round_len - 1, 1)
+        def knob(name):
+            if self.scenario is not None and getattr(self.scenario, name) is not None:
+                return jax.ShapeDtypeStruct((), jnp.float32)
+            return None
+
         return RoundCtx(
             w=jax.ShapeDtypeStruct((n, n), jnp.float32),
             active=jax.ShapeDtypeStruct((n,), jnp.bool_),
             local_mask=jax.ShapeDtypeStruct((L, n), jnp.bool_),
             pattern=jax.ShapeDtypeStruct((), jnp.int32),
+            comp_scale=knob("comp_scale"),
+            trigger=knob("trigger"),
         )
 
     def init_state(self, key) -> PyTree:
@@ -133,7 +149,7 @@ class TrainJob:
             lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params
         )
         state = self.algorithm.init(stacked)
-        return attach_compression(
+        return attach_channel_state(
             self.algorithm, state, jax.random.fold_in(key, 0x636F)
         )
 
@@ -163,6 +179,7 @@ def make_train_job(
     scenario=None,
     use_fused: bool = False,
     compression=None,
+    channel=None,
 ) -> TrainJob:
     """Build a sharded decentralized training round for ANY registered
     algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
@@ -185,6 +202,15 @@ def make_train_job(
     path.  Ignored when ``algorithm`` is a ready instance (set the field on
     the instance instead).
 
+    ``channel`` selects the gossip protocol (``"sync"`` — default semantics;
+    ``"choco"`` — compressed-difference gossip against replica estimates;
+    ``"async:k"`` — stale-mix with staleness bound k and event-triggered
+    sends).  Channel wire state (replicas, ages) is node-sharded like any
+    other state buffer; difference/stale channels deliver through the
+    engine's mix operator (replica trees move on the wire — the payload-
+    rolling win currently applies to the sync channel's packed messages).
+    Like ``compression``, ignored when ``algorithm`` is a ready instance.
+
     With a ``scenario`` (``repro.scenarios.Scenario``), the train step
     consumes a per-round :class:`RoundCtx` and gossips over the scenario's
     time-varying W_t: shift-structured schedules with W-preserving faults map
@@ -203,11 +229,15 @@ def make_train_job(
         alg = make_algorithm(
             algorithm, lr=lr, alpha=alpha, tau=tau,
             fuse_tracking_buffers=True, state_dtype=state_dtype,
-            use_fused=use_fused, compression=compression,
+            use_fused=use_fused, compression=compression, channel=channel,
             **(algorithm_kwargs or {}),
         )
     round_len = alg.comm.round_len(getattr(alg, "tau", 1))
-    comp = alg.comm.active_compression()
+    chan = alg.comm.resolved_channel()
+    # only the sync channel encodes the buffers themselves — its packed
+    # payloads are what the roll backends permute; difference/stale channels
+    # gossip replica trees through the engine mix operator instead
+    comp = chan.compression if isinstance(chan, SyncChannel) else None
     compressed_combine = None   # None => mix the decoded messages densely
 
     if scenario is not None:
@@ -331,7 +361,8 @@ def make_train_job(
 
         # runtime reference: the buffer mean (no full-batch closure here)
         stream_fn = make_stream_fn(
-            buffer_name=getattr(alg, "tracking_buffer", None)
+            buffer_name=getattr(alg, "tracking_buffer", None),
+            comm_buffers=alg.comm.buffers,
         )
 
         def train_step(state, batches, ctx):
@@ -359,7 +390,7 @@ def make_train_job(
     stacked_struct = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n_nodes,) + s.shape, s.dtype), shapes
     )
-    abstract_state = abstract_compression_state(
+    abstract_state = abstract_channel_state(
         alg, jax.eval_shape(lambda p: alg.init(p), stacked_struct)
     )
 
@@ -372,11 +403,17 @@ def make_train_job(
         v = getattr(abstract_state, f.name)
         if v is None:
             state_spec_fields[f.name] = None
-        elif isinstance(v, CompressionState):
-            # per-buffer residual trees are params-shaped (node-stacked);
-            # the codec PRNG key is a replicated scalar
-            state_spec_fields[f.name] = CompressionState(
-                residuals=tuple(param_spec for _ in v.residuals), key=P()
+        elif isinstance(v, ChannelState):
+            # the channel describes its own wire layout: params-shaped
+            # subtrees (residuals / replicas) get the param sharding, (N,)
+            # per-node vectors (ages, send masks) shard over the node axes,
+            # and the codec PRNG key is a replicated scalar
+            node_vec_spec = P(node_axes if node_axes else None)
+            state_spec_fields[f.name] = ChannelState(
+                wire=tuple(
+                    chan.wire_spec(param_spec, node_vec_spec) for _ in v.wire
+                ),
+                key=P(),
             )
         elif isinstance(v, jax.ShapeDtypeStruct) and v.ndim == 0:
             state_spec_fields[f.name] = P()

@@ -51,6 +51,9 @@ def main(argv=None):
     p.add_argument("--compression", default=None,
                    help="gossip wire codec (repro.compression spec, e.g. "
                         "qsgd, top_k:0.1, rand_k:0.1, low_rank:2)")
+    p.add_argument("--channel", default=None,
+                   help="gossip channel protocol (sync, choco, choco:0.8, "
+                        "async:2); default is synchronous gossip")
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
@@ -66,6 +69,7 @@ def main(argv=None):
         cfg, mesh, algorithm=args.algorithm, tau=args.tau,
         lr=args.lr, alpha=args.alpha, gossip=args.gossip,
         use_fused=args.use_fused, compression=args.compression,
+        channel=args.channel,
     )
     n = job.n_nodes
     rl = job.round_len  # batches per jitted round (1 for every-step methods)

@@ -23,8 +23,10 @@ from .schedules import (
     ExponentialSchedule,
     OnePeerRandom,
     PeriodicSwitch,
+    RoundSchedule,
     StaticSchedule,
     TopologySchedule,
+    make_round_schedule,
     make_topology_schedule,
     torus_dims,
 )
@@ -45,6 +47,9 @@ from .metrics import (
     effective_spectral_gap,
     make_stream_fn,
     masked_consensus,
+    replica_drift,
+    send_rate,
+    staleness,
     tracking_error,
 )
 
@@ -53,9 +58,10 @@ __all__ = [
     "TopologySchedule", "StaticSchedule", "OnePeerRandom",
     "ExponentialSchedule", "PeriodicSwitch", "TOPOLOGY_SCHEDULES",
     "make_topology_schedule", "torus_dims",
+    "RoundSchedule", "make_round_schedule",
     "FaultModel", "Stragglers", "Dropout", "LinkDrop", "FAULT_MODELS",
     "make_fault", "renormalize_dropout", "renormalize_link_drop",
     "ClientJitter", "uniform_profile",
     "STREAM_FIELDS", "make_stream_fn", "masked_consensus", "tracking_error",
-    "effective_spectral_gap",
+    "effective_spectral_gap", "replica_drift", "staleness", "send_rate",
 ]

@@ -25,17 +25,27 @@ scanned round loop, so a run emits dense per-round streams at device speed:
                         error-feedback residuals (``state.comp``); NaN for
                         uncompressed / residual-free runs.  Tracks how much
                         signal the codec is deferring round over round.
+  * ``replica_drift``   — Σ_i Σ_buffers ||b_i − x̂_i||² between the gossiped
+                        buffers and the channel's replica/snapshot estimates
+                        (CHOCO / async wire state); NaN for channels without
+                        replicas.  The quantity event triggers fire on.
+  * ``staleness``       — mean per-node snapshot age (rounds since last
+                        send) across async wire buffers; NaN for non-async
+                        channels.  Bounded by the channel's staleness bound.
+  * ``send_rate``       — fraction of (node, buffer) sites whose event
+                        trigger fired this round (async channels; NaN
+                        otherwise).  1.0 ≡ synchronous gossip.
 
 All functions are pure jnp and scan/jit compatible.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from ..compression.base import compression_error
+from ..compression.base import _wire_entries, compression_error
 from ..core.simulate import node_mean
 
 PyTree = Any
@@ -46,12 +56,15 @@ __all__ = [
     "tracking_buffer",
     "tracking_error",
     "effective_spectral_gap",
+    "replica_drift",
+    "staleness",
+    "send_rate",
     "make_stream_fn",
 ]
 
 STREAM_FIELDS = (
     "consensus", "tracking_err", "spectral_gap", "active_nodes",
-    "compression_err",
+    "compression_err", "replica_drift", "staleness", "send_rate",
 )
 
 
@@ -142,16 +155,59 @@ def effective_spectral_gap(
     return jnp.max(jnp.abs(jnp.linalg.eigvalsh(m)))
 
 
+def replica_drift(state, comm_buffers: Optional[Sequence[str]] = None) -> jnp.ndarray:
+    """Σ ||b − x̂||² between each gossiped buffer and its channel replica /
+    snapshot (``"hat"`` wire entries); NaN for channels without replicas.
+
+    ``comm_buffers`` is the spec's buffer-name tuple — wire entries are
+    matched positionally, so the i-th ``"hat"`` tree is compared against
+    ``getattr(state, comm_buffers[i])`` (skipped when that field is absent,
+    e.g. the fused-``z`` DSE layout has no materialized ``y``)."""
+    comp = getattr(state, "comp", None)
+    if comp is None or comm_buffers is None:
+        return jnp.float32(jnp.nan)
+    total = None
+    for name, wire in zip(comm_buffers, comp.wire):
+        if not isinstance(wire, dict) or wire.get("hat") is None:
+            continue
+        buf = getattr(state, name, None)
+        if buf is None:
+            continue
+        for b, h in zip(jax.tree.leaves(buf), jax.tree.leaves(wire["hat"])):
+            d = b.astype(jnp.float32) - h.astype(jnp.float32)
+            total = jnp.sum(d * d) + (0.0 if total is None else total)
+    return jnp.float32(jnp.nan) if total is None else total
+
+
+def staleness(state) -> jnp.ndarray:
+    """Mean per-node snapshot age over async wire buffers (NaN otherwise)."""
+    ages = _wire_entries(state, "age")
+    if not ages:
+        return jnp.float32(jnp.nan)
+    return sum(a.astype(jnp.float32).mean() for a in ages) / len(ages)
+
+
+def send_rate(state) -> jnp.ndarray:
+    """Fraction of (node, buffer) sites that sent this round (NaN when no
+    async wire state is attached)."""
+    sent = _wire_entries(state, "sent")
+    if not sent:
+        return jnp.float32(jnp.nan)
+    return sum(s.astype(jnp.float32).mean() for s in sent) / len(sent)
+
+
 def make_stream_fn(
     grad_at_mean: Optional[Callable[[PyTree], PyTree]] = None,
     buffer_name: Optional[str] = None,
+    comm_buffers: Optional[Sequence[str]] = None,
 ):
     """Build the per-round stream function ``(state, ctx) -> dict``.
 
-    ``buffer_name`` is the algorithm's declared ``tracking_buffer``.  The
-    returned dict (one scalar per field in :data:`STREAM_FIELDS`) is emitted
-    as the ys of the engines' round scan — shape (R,) per field after the
-    scan."""
+    ``buffer_name`` is the algorithm's declared ``tracking_buffer``;
+    ``comm_buffers`` the spec's gossiped-buffer names (replica-drift
+    matching).  The returned dict (one scalar per field in
+    :data:`STREAM_FIELDS`) is emitted as the ys of the engines' round scan —
+    shape (R,) per field after the scan."""
 
     def stream(state, ctx) -> dict:
         active = ctx.active
@@ -170,6 +226,9 @@ def make_stream_fn(
                 else jnp.float32(n)
             ),
             "compression_err": compression_error(state),
+            "replica_drift": replica_drift(state, comm_buffers),
+            "staleness": staleness(state),
+            "send_rate": send_rate(state),
         }
 
     return stream

@@ -26,7 +26,13 @@ import numpy as np
 from ..core.topology import spectral_gap
 from .faults import FaultModel, make_fault
 from .heterogeneity import ClientJitter
-from .schedules import StaticSchedule, TopologySchedule, make_topology_schedule
+from .schedules import (
+    RoundSchedule,
+    StaticSchedule,
+    TopologySchedule,
+    make_round_schedule,
+    make_topology_schedule,
+)
 
 __all__ = ["Scenario", "Schedule", "SCENARIOS", "register_scenario", "make_scenario"]
 
@@ -40,6 +46,8 @@ class Schedule:
     local_mask: np.ndarray             # (R, L, N) bool
     pattern: np.ndarray                # (R,) int32
     batch_sizes: Optional[np.ndarray] = None   # (N,) int32 per-node batch
+    comp_scale: Optional[np.ndarray] = None    # (R,) float32 channel knob
+    trigger: Optional[np.ndarray] = None       # (R,) float32 async trigger
 
     @property
     def n_rounds(self) -> int:
@@ -73,6 +81,15 @@ class Scenario:
     topology_kwargs: extra factory kwargs (e.g. ``period`` for switching).
     faults:          tuple of :class:`FaultModel` instances, applied in order.
     jitter:          client heterogeneity profile (None = uniform clients).
+    comp_scale:      per-round adaptive-compression knob (None, a float, a
+                     ``(kind, start, end[, hold])`` tuple or a
+                     :class:`RoundSchedule`): the fraction of the codec's
+                     shape-static payload spent each round — "warmup dense
+                     -> compress harder" schedules.  Only read by active
+                     gossip channels.
+    trigger:         per-round async event-trigger threshold override (same
+                     spec forms; < 0 or None keeps the channel's static
+                     threshold).
     seed:            all schedule randomness (matchings, faults, jitter)
                      derives from this.
     """
@@ -82,6 +99,8 @@ class Scenario:
     topology_kwargs: Tuple[Tuple[str, Any], ...] = ()
     faults: Tuple[FaultModel, ...] = ()
     jitter: Optional[ClientJitter] = None
+    comp_scale: Any = None
+    trigger: Any = None
     seed: int = 0
 
     # ------------------------------------------------------------------
@@ -194,6 +213,12 @@ class Scenario:
                 schedule.batch_sizes = self.jitter.node_batch_sizes(
                     n_nodes, batch_size, rng
                 )
+        if self.comp_scale is not None:
+            schedule.comp_scale = make_round_schedule(self.comp_scale).values(
+                n_rounds
+            )
+        if self.trigger is not None:
+            schedule.trigger = make_round_schedule(self.trigger).values(n_rounds)
         return schedule
 
     # ------------------------------------------------------------------
@@ -204,6 +229,11 @@ class Scenario:
             if isinstance(self.topology, str)
             else getattr(self.topology, "name", type(self.topology).__name__)
         )
+        def _sched_cfg(spec):
+            if spec is None:
+                return None
+            return dataclasses.asdict(make_round_schedule(spec))
+
         return {
             "name": self.name,
             "topology": topo,
@@ -212,6 +242,8 @@ class Scenario:
                 {"name": f.name, **dataclasses.asdict(f)} for f in self.faults
             ],
             "jitter": dataclasses.asdict(self.jitter) if self.jitter else None,
+            "comp_scale": _sched_cfg(self.comp_scale),
+            "trigger": _sched_cfg(self.trigger),
             "seed": self.seed,
         }
 
@@ -268,5 +300,24 @@ register_scenario(
         topology="one_peer_random",
         faults=(make_fault("dropout", p=0.1), make_fault("stragglers", p=0.2)),
         jitter=ClientJitter(batch_frac_range=(0.5, 1.0)),
+    )
+)
+register_scenario(
+    Scenario(
+        # the sweepable adaptive-compression preset: gossip dense while the
+        # iterates move fast, then spend a tenth of the payload once the
+        # error-feedback / replica machinery has signal to work with
+        name="warmup_compress",
+        comp_scale=RoundSchedule("linear", 1.0, 0.1, hold=4),
+    )
+)
+register_scenario(
+    Scenario(
+        # async channels under an unreliable network: lossy links plus a
+        # drift trigger that tightens over the run (send less as consensus
+        # is approached) — pair with channel="async:<bound>"
+        name="async_lossy",
+        faults=(make_fault("link_drop", p=0.2),),
+        trigger=RoundSchedule("linear", 0.0, 0.05),
     )
 )

@@ -33,6 +33,8 @@ __all__ = [
     "TOPOLOGY_SCHEDULES",
     "make_topology_schedule",
     "torus_dims",
+    "RoundSchedule",
+    "make_round_schedule",
 ]
 
 
@@ -250,3 +252,65 @@ def make_topology_schedule(name: str, n_nodes: int, **kwargs) -> TopologySchedul
             f"unknown topology schedule {name!r}; known: {sorted(TOPOLOGY_SCHEDULES)}"
         )
     return factory(n_nodes, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# per-round scalar knob schedules (adaptive compression, async triggers)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """A per-round scalar schedule for the channel knobs carried in
+    ``RoundCtx`` (``comp_scale``: fraction of the codec's shape-static
+    payload to spend; ``trigger``: async event threshold).
+
+    kind:  "constant" (always ``start``), "linear" (``start`` -> ``end``
+           over the run), or "step" (``start`` for ``hold`` rounds, then
+           ``end``).
+    hold:  warmup rounds pinned at ``start`` before interpolation begins —
+           the "warmup dense -> compress harder" shape is
+           ``RoundSchedule("linear", 1.0, 0.1, hold=8)``.
+    """
+
+    kind: str = "constant"
+    start: float = 1.0
+    end: float = 1.0
+    hold: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("constant", "linear", "step"):
+            raise ValueError(
+                f"RoundSchedule kind {self.kind!r} not in "
+                "('constant', 'linear', 'step')"
+            )
+        if self.hold < 0:
+            raise ValueError(f"hold must be >= 0, got {self.hold}")
+
+    def values(self, n_rounds: int) -> np.ndarray:
+        """(R,) float32 materialized knob values."""
+        r = np.arange(n_rounds, dtype=np.float64)
+        if self.kind == "constant":
+            v = np.full(n_rounds, self.start)
+        elif self.kind == "step":
+            v = np.where(r < self.hold, self.start, self.end)
+        else:  # linear, after the hold prefix
+            span = max(n_rounds - 1 - self.hold, 1)
+            t = np.clip((r - self.hold) / span, 0.0, 1.0)
+            v = self.start + (self.end - self.start) * t
+        return v.astype(np.float32)
+
+
+def make_round_schedule(spec) -> RoundSchedule:
+    """Resolve a knob-schedule spec: a ready :class:`RoundSchedule`, a bare
+    float (constant), or a ``(kind, start, end[, hold])`` tuple."""
+    if isinstance(spec, RoundSchedule):
+        return spec
+    if isinstance(spec, (int, float)):
+        return RoundSchedule("constant", float(spec), float(spec))
+    if isinstance(spec, (tuple, list)) and len(spec) in (3, 4):
+        kind, start, end = spec[0], float(spec[1]), float(spec[2])
+        hold = int(spec[3]) if len(spec) == 4 else 0
+        return RoundSchedule(str(kind), start, end, hold)
+    raise ValueError(
+        f"cannot build a RoundSchedule from {spec!r}; pass a RoundSchedule, "
+        "a float, or a (kind, start, end[, hold]) tuple"
+    )

@@ -18,6 +18,43 @@ def test_comm_analytic_table():
     assert rows["dse_mvr"]["bytes_per_round"] < rows["dsgd"]["bytes_per_round"]
 
 
+def test_comm_low_rank_and_channel_accounting():
+    """low_rank's factor-pair payload must be reflected by DEFAULT (the old
+    flat (d,) message shape silently fell back to raw bytes), and async
+    channel rows scale wire bytes by the triggered-send rate."""
+    from benchmarks.comm import analytic_rows, most_square
+
+    assert most_square(1_000_000) == (1000, 1000)
+    assert most_square(4000) == (50, 80)
+    lr_rows = {r["method"]: r for r in analytic_rows(compression="low_rank:4")}
+    r = lr_rows["dse_mvr"]
+    assert r["compressed_bytes_per_round"] < r["bytes_per_round"] / 50
+    # element-count codecs are unaffected by the matrix default shape
+    tk = {r["method"]: r for r in analytic_rows(compression="top_k:0.1")}
+    assert tk["dse_mvr"]["bytes_per_round"] / tk["dse_mvr"][
+        "compressed_bytes_per_round"] == pytest.approx(5.0, rel=1e-3)
+    # async send-rate scaling + the channel tag on the rows
+    half = {r["method"]: r for r in analytic_rows(
+        compression="top_k:0.1", channel="async:4", send_rate=0.5)}
+    assert half["dse_mvr"]["channel"] == "async:4"
+    assert half["dse_mvr"]["compressed_bytes_per_round"] == pytest.approx(
+        tk["dse_mvr"]["compressed_bytes_per_round"] / 2, rel=1e-2)
+
+
+def test_gossip_bench_rows_fast():
+    from benchmarks import gossip_bench
+
+    rows = gossip_bench.run(rounds=2)
+    configs = {r["config"] for r in rows}
+    assert {"sync_identity", "sync_ef_top_k0.1", "choco0.8_top_k0.1"} <= configs
+    for r in rows:
+        assert r["tracking_vs_identity"] is not None
+        assert r["kbytes_per_round_per_node"] > 0
+        if r["channel"] == "async":
+            assert r["mean_send_rate"] is not None
+            assert r["mean_staleness"] is not None
+
+
 def test_kernel_bench_rows():
     from benchmarks import kernels_bench
     from repro.kernels import api

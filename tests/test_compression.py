@@ -8,7 +8,7 @@ Covers the new_subsystem criteria:
     unbiasedness, top-k/rand-k sparsity, low-rank reconstruction) and the
     analytic ``payload_bytes`` model (>= 4x for qsgd / top_k:0.1);
   * error feedback: residual = input - decode(encode(input)), matched
-    per-buffer through the round executor's GossipChannel;
+    per-buffer through the round executor's ChannelSession;
   * ``compression="identity"`` is BIT-identical to the uncompressed gossip
     path for all 8 algorithms on the simulator (the sharded-engine half of
     that guarantee lives in the subprocess test below);
@@ -30,14 +30,16 @@ import pytest
 
 from repro.compression import (
     COMPRESSORS,
-    CompressionState,
+    ChannelSession,
+    ChannelState,
     ErrorFeedback,
-    GossipChannel,
     Identity,
     LowRank,
     QSGD,
     RandK,
+    SyncChannel,
     TopK,
+    Transport,
     attach_compression,
     compression_error,
     make_compressor,
@@ -236,23 +238,25 @@ def test_error_feedback_residual_semantics():
     )
 
 
-def test_gossip_channel_enforces_buffer_count():
-    comp = make_compressor("top_k:0.5")
+def test_channel_session_enforces_buffer_count():
+    channel = SyncChannel(compression=make_compressor("top_k:0.5"))
     tree = {"w": _leaf(jax.random.key(10))}
-    res = jax.tree.map(jnp.zeros_like, tree)
-    state = CompressionState(residuals=(res, res), key=jax.random.key(0))
-    chan = GossipChannel(comp, 2, state, mix_fn=lambda t: t)
-    chan.mix(tree)
+    wire = channel.init_wire(tree)
+    transport = Transport(lambda t: t)
+    state = ChannelState(wire=(wire, wire), key=jax.random.key(0))
+    sess = ChannelSession(channel, 2, state, transport)
+    sess.mix(tree)
     with pytest.raises(ValueError):
-        chan.final_state()          # only 1 of 2 declared buffers gossiped
-    chan.mix(tree)
-    out = chan.final_state()
-    assert len(out.residuals) == 2
-    chan2 = GossipChannel(comp, 1, CompressionState((res,), jax.random.key(0)),
-                          mix_fn=lambda t: t)
-    chan2.mix(tree)
+        sess.final_state()          # only 1 of 2 declared buffers gossiped
+    sess.mix(tree)
+    out = sess.final_state()
+    assert len(out.wire) == 2
+    sess2 = ChannelSession(
+        channel, 1, ChannelState((wire,), jax.random.key(0)), transport
+    )
+    sess2.mix(tree)
     with pytest.raises(ValueError):
-        chan2.mix(tree)             # more gossip calls than declared buffers
+        sess2.mix(tree)             # more gossip calls than declared buffers
 
 
 # ------------------------------------------------------- simulator engine
@@ -321,8 +325,9 @@ def test_attach_compression_noop_without_codec():
     assert not np.isfinite(float(compression_error(state)))
     alg_c = make_algorithm("dse_mvr", lr=0.1, tau=2, compression="top_k:0.5")
     state_c = attach_compression(alg_c, alg_c.init(stacked), jax.random.key(0))
-    assert isinstance(state_c.comp, CompressionState)
-    assert len(state_c.comp.residuals) == len(alg_c.comm.buffers)
+    assert isinstance(state_c.comp, ChannelState)
+    assert len(state_c.comp.wire) == len(alg_c.comm.buffers)
+    assert all("res" in w for w in state_c.comp.wire)
     assert float(compression_error(state_c)) == 0.0
 
 

@@ -168,10 +168,10 @@ def test_degenerate_scenario_bit_identical(name):
     ):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # and the streams are emitted alongside (observation, not perturbation)
-    assert set(out["streams"]) == {
-        "consensus", "tracking_err", "spectral_gap", "active_nodes",
-        "compression_err",
-    }
+    from repro.scenarios import STREAM_FIELDS
+
+    assert set(out["streams"]) == set(STREAM_FIELDS)
+    assert {"replica_drift", "staleness", "send_rate"} <= set(out["streams"])
     n_rounds = 8 // sim.round_len  # one stream entry per communication round
     assert all(len(v) == n_rounds for v in out["streams"].values())
 
