@@ -64,31 +64,38 @@ def make_paper_problem(
     return data, (xte, yte)
 
 
-def make_algorithm(name: str, lr: float, tau: int, total_steps: int, alpha: float = 0.05):
-    """Paper-tuned hyperparameters per method, on top of the core registry."""
+def make_algorithm(name: str, lr: float, tau: int, total_steps: int, alpha: float = 0.05,
+                   channel=None, compression=None):
+    """Paper-tuned hyperparameters per method, on top of the core registry.
+
+    ``channel`` / ``compression`` thread the gossip-protocol and wire-codec
+    axes through the paper tables (same specs as ``sweep.py --channels``)."""
     from repro.core import make_algorithm as registry_make
 
+    comm = dict(channel=channel, compression=compression)
     sched = paper_mnist_schedule(lr, total_steps)
     if name == "dse_mvr":
-        return DSEMVR(lr=sched, alpha=decay_weight(alpha, 0.99), tau=tau)
+        return DSEMVR(lr=sched, alpha=decay_weight(alpha, 0.99), tau=tau, **comm)
     if name == "dse_sgd":
-        return DSESGD(lr=sched, tau=tau)
+        return DSESGD(lr=sched, tau=tau, **comm)
     if name == "dlsgd":
-        return DLSGD(lr=sched, tau=tau)
+        return DLSGD(lr=sched, tau=tau, **comm)
     if name == "pd_sgdm":
-        return PDSGDM(lr=paper_mnist_schedule(lr * 0.3, total_steps), tau=tau, beta=0.9)
+        return PDSGDM(lr=paper_mnist_schedule(lr * 0.3, total_steps), tau=tau, beta=0.9, **comm)
     if name == "slowmo_d":
-        return SlowMoD(lr=sched, tau=tau, slow_lr=0.7, beta=0.6)
+        return SlowMoD(lr=sched, tau=tau, slow_lr=0.7, beta=0.6, **comm)
     if name in ALGORITHMS:  # every-step baselines: dsgd, gt_dsgd, gt_hsgd
-        return registry_make(name, lr=paper_mnist_schedule(lr * 0.5, total_steps), tau=tau)
+        return registry_make(name, lr=paper_mnist_schedule(lr * 0.5, total_steps), tau=tau,
+                             **comm)
     raise ValueError(name)
 
 
 def run_method(
-    name: str, omega: float, tau: int, b: int, steps: int, seed: int = 0, lr: float = 0.3
+    name: str, omega: float, tau: int, b: int, steps: int, seed: int = 0, lr: float = 0.3,
+    channel=None, compression=None,
 ) -> Dict[str, float]:
     data, (xte, yte) = make_paper_problem(omega, seed=seed)
-    alg = make_algorithm(name, lr, tau, steps)
+    alg = make_algorithm(name, lr, tau, steps, channel=channel, compression=compression)
     top = ring(N_NODES)
     sim = Simulator(
         alg, top, mlp_loss, data, batch_size=b,

@@ -14,13 +14,13 @@ import jax
 from repro.core import Simulator, ring
 
 
-def _history(method, omega, tau, b, steps, seed=0, lr=0.3):
+def _history(method, omega, tau, b, steps, seed=0, lr=0.3, channel=None):
     from .common import (
         accuracy, make_algorithm, make_paper_problem, mlp_init, mlp_loss, N_NODES,
     )
 
     data, (xte, yte) = make_paper_problem(omega, seed=seed)
-    alg = make_algorithm(method, lr, tau, steps)
+    alg = make_algorithm(method, lr, tau, steps, channel=channel)
     sim = Simulator(alg, ring(N_NODES), mlp_loss, data, batch_size=b,
                     eval_fn=lambda p: {"test_acc": accuracy(p, xte, yte)})
     out = sim.run(mlp_init(jax.random.key(seed)), jax.random.key(seed + 1),
@@ -36,8 +36,11 @@ def _rounds_to(history, key, thresh, cmp="lt", tau=1):
     return float("nan")
 
 
-def run(steps: int = 150):
+def run(steps: int = 150, channel=None):
+    """``channel`` threads the gossip-protocol axis through the figure
+    sweeps (same specs as ``sweep.py --channels``)."""
     os.makedirs("benchmarks/results", exist_ok=True)
+    chan_tag = channel or "sync"
     rows = []
     methods = ["dlsgd", "dse_sgd", "dse_mvr"]
     sweeps = {
@@ -49,11 +52,12 @@ def run(steps: int = 150):
     for bench, cases in sweeps.items():
         for varname, val, kw in cases:
             for m in methods:
-                hist = _history(m, steps=steps, **kw)
-                all_hist[f"{bench}|{m}|{varname}={val}"] = hist
+                hist = _history(m, steps=steps, channel=channel, **kw)
+                all_hist[f"{bench}|{m}|{varname}={val}|{chan_tag}"] = hist
                 rows.append({
                     "bench": bench,
                     "method": m,
+                    "channel": chan_tag,
                     varname: val,
                     "final_loss": hist[-1]["train_loss"],
                     "final_acc": hist[-1]["test_acc"],

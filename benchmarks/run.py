@@ -30,8 +30,11 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
+    p.add_argument("--channel", default=None,
+                   help="gossip channel spec for table2/curves (sync, choco[:g], "
+                        "async[:s] — same grammar as sweep.py --channels)")
     args = p.parse_args(argv)
     only = set(args.only.split(","))
 
@@ -41,12 +44,12 @@ def main(argv=None):
 
     if "table2" in only:
         from . import table2
-        rows = table2.run(steps=60 if args.fast else 200)
+        rows = table2.run(steps=60 if args.fast else 200, channel=args.channel)
         all_rows += rows
         _csv(rows)
     if "curves" in only:
         from . import curves
-        rows = curves.run(steps=50 if args.fast else 150)
+        rows = curves.run(steps=50 if args.fast else 150, channel=args.channel)
         all_rows += rows
         _csv(rows)
     if "comm" in only:
@@ -62,6 +65,11 @@ def main(argv=None):
     if "gossip" in only:
         from . import gossip_bench
         rows = gossip_bench.main(rounds=12 if args.fast else 24)
+        all_rows += rows
+        _csv(rows)
+    if "serving" in only:
+        from . import serving_bench
+        rows = serving_bench.main(rounds=6 if args.fast else 16)
         all_rows += rows
         _csv(rows)
     if "kernels" in only:

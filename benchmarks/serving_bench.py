@@ -1,0 +1,196 @@
+"""Serving-plane bench: requests/sec and output quality vs staleness x codec.
+
+A tiny LM trains on a 4-node ring (DSE-MVR through the Simulator); after
+every communication round the node-mean parameters are published to one
+``repro.serving.ReplicaSet`` per snapshot codec, each holding one replica
+per staleness bound.  At the end every replica is load-tested with the
+continuous-batching ``RequestDriver`` (requests/sec over the real
+``decode_step`` path) and scored on a held-out eval batch — the eval loss
+of the SERVED (stale, dequantized) params next to the LIVE trained params.
+
+One row per (codec x staleness bound) records:
+
+  * ``requests_per_sec`` / ``tokens_per_sec`` — continuous-batching load
+    test against that replica's snapshot;
+  * ``eval_loss_served`` vs ``eval_loss_live`` (and their gap) — the
+    quality cost of staleness + quantization;
+  * ``link_kbytes`` / ``bytes_ratio_vs_raw`` — analytic wire bytes that
+    replica's link moved over the run (bound b pays ~1/b of bound 1; a
+    quantized codec stacks its own ratio on top): bytes-for-freshness,
+    measured;
+  * ``bit_identical`` — whether the served params equal the live params
+    bit-for-bit.  The identity-codec / bound-1 row MUST be True (asserted
+    here, in tests/test_serving.py and in the CI serving-smoke job);
+  * ``slo_ok`` / ``max_age`` — the freshness SLO verdict (age < bound at
+    every publish).
+
+-> benchmarks/results/BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+CODECS = ("identity", "qsgd", "top_k:0.1")
+BOUNDS = (1, 2, 4)
+
+VOCAB, SEQ = 128, 16
+N_NODES = 4
+
+
+def _make_lm_problem(seed: int = 0, n_per_node: int = 64, n_eval: int = 32):
+    """Synthetic token streams with learnable structure: a noisy modular
+    walk, so a few rounds of training measurably beat the init loss."""
+    import numpy as np
+
+    from repro.core import NodeData
+
+    rng = np.random.default_rng(seed)
+
+    def sequences(n):
+        toks = np.zeros((n, SEQ + 1), np.int32)
+        toks[:, 0] = rng.integers(0, VOCAB, n)
+        for t in range(SEQ):
+            step = np.where(rng.random(n) < 0.9, 3, rng.integers(1, VOCAB, n))
+            toks[:, t + 1] = (toks[:, t] + step) % VOCAB
+        return toks[:, :-1], toks[:, 1:]
+
+    xs, ys = [], []
+    for _ in range(N_NODES):
+        x, y = sequences(n_per_node)
+        xs.append(x)
+        ys.append(y)
+    xe, ye = sequences(n_eval)
+    return NodeData(x=np.stack(xs), y=np.stack(ys)), (xe, ye)
+
+
+def run(rounds: int = 16, tau: int = 2, seed: int = 0, *, bounds=BOUNDS,
+        codecs=CODECS, requests: int = 8, prompt_len: int = 8,
+        new_tokens: int = 8):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Simulator, make_algorithm, ring
+    from repro.core.simulate import node_mean
+    from repro.models import Model, ModelConfig
+    from repro.serving import ReplicaSet, RequestDriver
+
+    cfg = ModelConfig(
+        name="lm-serving-bench", arch_type="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=VOCAB,
+    )
+    model = Model(cfg)
+
+    def lm_loss(params, batch):
+        xb, yb = batch
+        return model.loss(params, {"tokens": xb, "targets": yb}, dtype=jnp.float32)
+
+    data, (xe, ye) = _make_lm_problem(seed)
+    alg = make_algorithm("dse_mvr", lr=0.05, alpha=0.1, tau=tau)
+    sim = Simulator(alg, ring(N_NODES), lm_loss, data, batch_size=8)
+
+    params0 = model.init(jax.random.key(seed), dtype=jnp.float32)
+    state = sim.init_state(params0, jax.random.key(seed + 1))
+    key = jax.random.key(seed + 2)
+
+    eval_loss = jax.jit(
+        lambda p: lm_loss(p, (jnp.asarray(xe), jnp.asarray(ye)))
+    )
+    init_loss = float(eval_loss(params0))
+
+    # one subscriber set per codec, one replica per staleness bound
+    sets = {c: ReplicaSet(params0, codec=c, bounds=tuple(bounds)) for c in codecs}
+
+    t0 = time.time()
+    for _ in range(rounds):
+        state, key = sim.run_rounds(state, key, 1)
+        live = node_mean(state.params)
+        for rs in sets.values():
+            rs.publish(live)
+    train_wall = time.time() - t0
+    live = node_mean(state.params)
+    live_loss = float(eval_loss(live))
+
+    # load-test workload: prompts drawn from the eval stream
+    workload = [
+        (xe[i % len(xe), :prompt_len].tolist(), new_tokens)
+        for i in range(requests)
+    ]
+    raw_kb = sets[codecs[0]].publisher.message_bytes(live) / 1e3
+
+    rows = []
+    for codec, rs in sets.items():
+        rs.assert_slo()
+        report = rs.slo_report()
+        link_kb = rs.link_bytes() / 1e3
+        for r, bound in enumerate(rs.bounds):
+            served = rs.params_for(r)
+            served_loss = float(eval_loss(served))
+            bit_identical = all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(served), jax.tree.leaves(live))
+            )
+            driver = RequestDriver(
+                model, slots=max(2, requests // 2),
+                max_len=prompt_len + new_tokens,
+            )
+            stats = driver.run(served, workload)
+            rows.append({
+                "bench": "serving",
+                "name": f"serving/{rs.publisher.tag}/bound{bound}",
+                "codec": rs.publisher.tag,
+                "codec_spec": codec,
+                "bound": bound,
+                "rounds": rounds,
+                "requests": requests,
+                "requests_per_sec": round(stats["requests_per_sec"], 2),
+                "tokens_per_sec": round(stats["tokens_per_sec"], 2),
+                "eval_loss_served": round(served_loss, 5),
+                "eval_loss_live": round(live_loss, 5),
+                "eval_loss_init": round(init_loss, 5),
+                "loss_gap": round(served_loss - live_loss, 6),
+                "bit_identical": bit_identical,
+                "max_age": report[r]["max_age"],
+                "slo_ok": report[r]["ok"],
+                "link_kbytes": round(float(link_kb[r]), 2),
+                "bytes_ratio_vs_raw": round(rounds * raw_kb / max(float(link_kb[r]), 1e-9), 2),
+                "train_wall_s": round(train_wall, 2),
+                "us_per_call": round(stats["elapsed_s"] / max(stats["steps"], 1) * 1e6, 1),
+            })
+
+    # the acceptance guarantees, asserted at the source
+    ident = [r for r in rows if r["codec"] == "raw" and r["bound"] == 1]
+    assert ident and ident[0]["bit_identical"], (
+        "identity-codec / bound-1 replica must serve bit-identical live params"
+    )
+    assert all(r["slo_ok"] for r in rows), "staleness SLO violated"
+    assert live_loss < init_loss, "training never improved the eval loss"
+    return rows
+
+
+def main(rounds: int = 16, **kw):
+    rows = run(rounds=rounds, **kw)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_serving.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced grid + rounds (CI serving-smoke job)")
+    p.add_argument("--rounds", type=int, default=None)
+    args = p.parse_args()
+    if args.smoke:
+        rows = main(rounds=args.rounds or 6, bounds=(1, 3), requests=6)
+    else:
+        rows = main(rounds=args.rounds or 16)
+    for r in rows:
+        print(f"{r['name']}: rps={r['requests_per_sec']} "
+              f"served={r['eval_loss_served']} live={r['eval_loss_live']} "
+              f"bit_identical={r['bit_identical']} slo_ok={r['slo_ok']} "
+              f"kbytes={r['link_kbytes']}")

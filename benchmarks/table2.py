@@ -11,9 +11,12 @@ import time
 METHODS = ["dlsgd", "slowmo_d", "pd_sgdm", "dse_sgd", "dse_mvr"]
 
 
-def run(steps: int = 200, seeds=(0,)):
+def run(steps: int = 200, seeds=(0,), channel=None):
+    """``channel`` threads the gossip-protocol axis (sync/choco/async specs,
+    same grammar as ``sweep.py --channels``) through the paper table."""
     from .common import run_method
 
+    chan_tag = channel or "sync"
     rows = []
     settings = [
         # (omega, tau, b)   — paper's axes: non-iid/iid x tau x b
@@ -28,12 +31,13 @@ def run(steps: int = 200, seeds=(0,)):
             accs, losses = [], []
             t0 = time.time()
             for s in seeds:
-                r = run_method(m, omega, tau, b, steps, seed=s)
+                r = run_method(m, omega, tau, b, steps, seed=s, channel=channel)
                 accs.append(r["test_acc"])
                 losses.append(r["train_loss"])
             rows.append({
                 "bench": "table2",
                 "method": m,
+                "channel": chan_tag,
                 "omega": omega,
                 "tau": tau,
                 "b": b,

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import Model
+from repro.serving import scan_prefill
 
 
 def main():
@@ -40,15 +41,15 @@ def main():
     )
 
     # prefill by replaying prompt tokens through the decode path (robust for
-    # every arch family: attention caches, SSM states, RWKV states alike)
+    # every arch family: attention caches, SSM states, RWKV states alike) —
+    # one jitted lax.scan dispatch instead of prompt_len device calls
     caches = model.init_cache(args.batch, max_len, dtype=jnp.float32)
+    prefill = jax.jit(
+        lambda p_, c, toks: scan_prefill(model, p_, c, toks, dtype=jnp.float32)
+    )
     t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, caches = decode(
-            params, caches, prompts[:, t : t + 1],
-            jnp.full((args.batch,), t, jnp.int32),
-        )
+    logits, caches = prefill(params, caches, prompts)
+    jax.block_until_ready(logits)
     prefill_s = time.time() - t0
 
     out_tokens = []

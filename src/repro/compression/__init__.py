@@ -41,6 +41,7 @@ from .channels import (
     ChannelSession,
     ChocoChannel,
     GossipChannel,
+    PerBufferChannel,
     SyncChannel,
     Transport,
     make_channel,
@@ -54,6 +55,7 @@ __all__ = [
     "ChannelState", "CompressionState",
     "COMPRESSORS", "register_compressor", "make_compressor",
     "GossipChannel", "SyncChannel", "ChocoChannel", "AsyncChannel",
+    "PerBufferChannel",
     "CHANNELS", "register_channel", "make_channel",
     "Transport", "ChannelSession",
     "attach_channel_state", "attach_compression",

@@ -304,7 +304,10 @@ def attach_channel_state(algorithm, state, key: Optional[jax.Array] = None):
     channel = algorithm.comm.resolved_channel()
     if channel is None:
         return state
-    wire = tuple(channel.init_wire(state.params) for _ in algorithm.comm.buffers)
+    wire = tuple(
+        channel.for_buffer(i).init_wire(state.params)
+        for i in range(len(algorithm.comm.buffers))
+    )
     return dataclasses.replace(
         state, comp=ChannelState(wire=wire, key=_as_typed_key(key))
     )
@@ -325,7 +328,10 @@ def abstract_channel_state(algorithm, state):
         return state
     sds = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)  # noqa: E731
     params = jax.tree.map(sds, state.params)
-    wire = tuple(channel.abstract_wire(params) for _ in algorithm.comm.buffers)
+    wire = tuple(
+        channel.for_buffer(i).abstract_wire(params)
+        for i in range(len(algorithm.comm.buffers))
+    )
     key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
     return dataclasses.replace(state, comp=ChannelState(wire=wire, key=key))
 

@@ -62,6 +62,7 @@ __all__ = [
     "SyncChannel",
     "ChocoChannel",
     "AsyncChannel",
+    "PerBufferChannel",
     "CHANNELS",
     "register_channel",
     "make_channel",
@@ -169,6 +170,11 @@ class GossipChannel:
             return self
         return dataclasses.replace(self, compression=compression)
 
+    def for_buffer(self, i: int) -> "GossipChannel":
+        """The channel driving the i-th ``CommSpec.buffers`` entry — self
+        for uniform channels; :class:`PerBufferChannel` dispatches."""
+        return self
+
     # -- wire-state layout (one tree per CommSpec.buffers entry) -----------
     def init_wire(self, params: PyTree) -> Optional[PyTree]:
         return None
@@ -218,6 +224,11 @@ class SyncChannel(GossipChannel):
 
     def gossip(self, tree, wire, key, ctx, transport):
         comp = self.compression
+        if comp is None or comp.is_identity:
+            # raw sync buffer inside a per-buffer mapping: the plain gossip
+            # path (uniform raw sync never reaches here — it short-circuits
+            # via is_passthrough before a session is built)
+            return transport.mix(tree, ctx), None
         res = wire["res"] if wire is not None else None
         payload, dec, new_res = comp.roundtrip(
             tree, res, key, scale=_ctx_scale(ctx)
@@ -417,6 +428,69 @@ class AsyncChannel(ChocoChannel):
         return out, wire_new
 
 
+@dataclasses.dataclass(frozen=True)
+class PerBufferChannel(GossipChannel):
+    """Per-buffer protocol overrides: the k-th ``CommSpec.buffers`` entry
+    gossips through its own channel (the k-th entry of ``channels``).
+
+    Built by ``CommSpec.__post_init__`` from a ``{buffer_name: spec}``
+    mapping — e.g. ``channel={"params": "choco"}`` runs CHOCO difference
+    gossip on the parameters while the small tracking buffer stays on the
+    exact sync path.  Wire state, sharding specs and session dispatch are
+    all per buffer via :meth:`for_buffer`; the aggregate methods raise so a
+    call site that forgot to dispatch fails loudly instead of attaching the
+    wrong wire layout.
+    """
+
+    channels: Tuple[GossipChannel, ...] = ()
+    name = "per_buffer"
+
+    def __post_init__(self):
+        if not self.channels:
+            raise ValueError("PerBufferChannel needs at least one sub-channel")
+        if any(isinstance(c, PerBufferChannel) for c in self.channels):
+            raise ValueError("per-buffer channel mappings cannot nest")
+
+    @property
+    def tag(self) -> str:
+        return "+".join(c.tag for c in self.channels)
+
+    @property
+    def is_passthrough(self) -> bool:
+        return all(c.is_passthrough for c in self.channels)
+
+    def bind(self, compression):
+        return dataclasses.replace(
+            self, channels=tuple(c.bind(compression) for c in self.channels)
+        )
+
+    def for_buffer(self, i: int) -> GossipChannel:
+        if not 0 <= i < len(self.channels):
+            raise ValueError(
+                f"buffer index {i} out of range for the {len(self.channels)}-"
+                "entry per-buffer channel mapping"
+            )
+        return self.channels[i]
+
+    def _no_aggregate(self):
+        raise ValueError(
+            "PerBufferChannel has no aggregate wire layout — dispatch "
+            "through for_buffer(i) per CommSpec.buffers entry"
+        )
+
+    def init_wire(self, params):
+        self._no_aggregate()
+
+    def abstract_wire(self, params):
+        self._no_aggregate()
+
+    def wire_spec(self, param_spec, node_spec):
+        self._no_aggregate()
+
+    def gossip(self, tree, wire, key, ctx, transport):
+        self._no_aggregate()
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
@@ -510,7 +584,7 @@ class ChannelSession:
             )
         self._calls += 1
         wire = self._wire[i] if i < len(self._wire) else None
-        mixed, new_wire = self._channel.gossip(
+        mixed, new_wire = self._channel.for_buffer(i).gossip(
             tree, wire, jax.random.fold_in(self._use_key, i), ctx,
             self._transport,
         )

@@ -83,11 +83,15 @@ class CommSpec:
               gossip against shared replica estimates; ``choco:0.8`` sets
               the consensus step γ), "async" (stale-mix against bounded-
               staleness snapshots with event-triggered sends; ``async:2``
-              sets the staleness bound), or a ready
-              ``repro.compression.GossipChannel`` instance.  The channel
-              encodes with the spec's ``compression`` codec (difference-
-              gossip channels unwrap the error-feedback default — the
-              replica is the memory).
+              sets the staleness bound), a ready
+              ``repro.compression.GossipChannel`` instance, or a
+              ``{buffer_name: spec}`` mapping for per-buffer overrides
+              (e.g. ``{"params": "choco"}`` — CHOCO on the parameters, the
+              exact sync path for the small tracking buffer; unmapped
+              buffers default to "sync").  The channel encodes with the
+              spec's ``compression`` codec (difference-gossip channels
+              unwrap the error-feedback default — the replica is the
+              memory).
     """
 
     cadence: str = "every_tau"
@@ -108,13 +112,25 @@ class CommSpec:
                 self, "compression", make_compressor(self.compression)
             )
         if self.channel is not None:
-            from ..compression.channels import make_channel  # lazy: no cycle
-
-            object.__setattr__(
-                self,
-                "channel",
-                make_channel(self.channel).bind(self.compression),
+            from ..compression.channels import (  # lazy: no cycle
+                PerBufferChannel,
+                make_channel,
             )
+
+            chan = self.channel
+            if isinstance(chan, dict):
+                unknown = sorted(set(chan) - set(self.buffers))
+                if unknown:
+                    raise ValueError(
+                        f"per-buffer channel mapping names unknown buffers "
+                        f"{unknown}; declared buffers: {self.buffers}"
+                    )
+                chan = PerBufferChannel(channels=tuple(
+                    make_channel(chan.get(b, "sync")) for b in self.buffers
+                ))
+            else:
+                chan = make_channel(chan)
+            object.__setattr__(self, "channel", chan.bind(self.compression))
 
     def round_len(self, tau: int) -> int:
         """Steps per communication round (1 for every-step methods)."""

@@ -299,6 +299,13 @@ class Simulator:
             self.alg, state, jax.random.fold_in(key, 0x636F)
         )
 
+    def run_rounds(self, state, key: jax.Array, n_rounds: int = 1):
+        """Advance ``n_rounds`` communication rounds on-device and return
+        ``(state, key)`` — the external hook point for callers interleaving
+        training with other work (the serving plane publishes parameter
+        snapshots between rounds: ``repro.serving.ReplicaSet``)."""
+        return self._run_rounds(state, key, n_rounds=int(n_rounds))
+
     # ------------------------------------------------------------------
     def run(
         self,

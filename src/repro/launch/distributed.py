@@ -411,7 +411,8 @@ def make_train_job(
             node_vec_spec = P(node_axes if node_axes else None)
             state_spec_fields[f.name] = ChannelState(
                 wire=tuple(
-                    chan.wire_spec(param_spec, node_vec_spec) for _ in v.wire
+                    chan.for_buffer(i).wire_spec(param_spec, node_vec_spec)
+                    for i in range(len(v.wire))
                 ),
                 key=P(),
             )

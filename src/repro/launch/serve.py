@@ -2,8 +2,10 @@
 
 Runs the real serving path (jitted decode_step against ring-buffer caches)
 on whatever devices exist, with simple static batching: requests are padded
-to the batch, prefilled token-by-token (arch-agnostic: works for attention,
-SSM and RWKV caches alike), then decoded until max-new-tokens.
+to the batch, prefilled in ONE device dispatch (a jitted ``lax.scan`` over
+the prompt tokens through decode_step — arch-agnostic: works for attention,
+SSM and RWKV caches alike, and bit-identical to the old per-token host
+loop), then decoded until max-new-tokens.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
       --requests 8 --prompt-len 32 --new-tokens 64
@@ -21,6 +23,7 @@ from repro.configs import get_config, get_reduced
 from repro.launch.distributed import make_serve_job
 from repro.launch.train import make_mesh_for_devices
 from repro.models import Model
+from repro.serving import scan_prefill
 
 
 def main(argv=None):
@@ -55,13 +58,11 @@ def main(argv=None):
         jax.random.key(args.seed + 1), (args.requests, args.prompt_len), 0, cfg.vocab_size
     )
 
+    prefill = jax.jit(
+        lambda p_, c, toks: scan_prefill(model, p_, c, toks, dtype=jnp.float32)
+    )
     t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, caches = decode(
-            params, caches, prompts[:, t : t + 1],
-            jnp.full((args.requests,), t, jnp.int32),
-        )
+    logits, caches = prefill(params, caches, prompts)
     jax.block_until_ready(logits)
     prefill_s = time.time() - t0
     print(f"[serve] prefill: {args.prompt_len} tokens x {args.requests} requests "

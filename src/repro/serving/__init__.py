@@ -1,0 +1,32 @@
+"""Decentralized serving plane: inference replicas as gossip subscribers.
+
+Instead of loading static checkpoints, serving replicas subscribe to the
+live training loop through the same codec + wire-state machinery the gossip
+channels use:
+
+  * :class:`SnapshotPublisher` / :class:`SnapshotState` — CHOCO-style
+    difference publishing of wire-quantized parameter snapshots
+    (``snapshot.py``);
+  * :class:`ReplicaSet` — the subscriber set: dequantized snapshots with a
+    per-replica staleness bound (the freshness SLO) and the serving metrics
+    streams (``replicas.py`` / ``metrics.py``);
+  * :func:`scan_prefill` / :class:`RequestDriver` — single-dispatch prefill
+    and continuous batching over ``Model.decode_step`` for load testing
+    (``driver.py``).
+
+See README "Serving plane" and ``examples/serve_while_training.py``.
+"""
+from .driver import RequestDriver, scan_prefill
+from .metrics import SERVING_STREAM_FIELDS, ServingMetrics
+from .replicas import ReplicaSet
+from .snapshot import SnapshotPublisher, SnapshotState
+
+__all__ = [
+    "SnapshotPublisher",
+    "SnapshotState",
+    "ReplicaSet",
+    "ServingMetrics",
+    "SERVING_STREAM_FIELDS",
+    "RequestDriver",
+    "scan_prefill",
+]

@@ -1,0 +1,204 @@
+"""Request driving: scan prefill + continuous batching over ``decode_step``.
+
+Two entry points:
+
+  * :func:`scan_prefill` — whole-prompt prefill as ONE device dispatch: a
+    ``lax.scan`` over the prompt tokens through ``Model.decode_step``.  The
+    scan body is the exact per-token decode graph the old host loop jitted,
+    so greedy outputs are bit-identical to token-by-token prefill — it just
+    stops paying ``prompt_len`` separate dispatches.  Arch-agnostic for the
+    same reason the host loop was (attention ring buffers, SSM and RWKV
+    states all advance through ``decode_step``).
+  * :class:`RequestDriver` — continuous batching over a fixed set of decode
+    slots: every device step advances ALL slots by one token (prompt tokens
+    are teacher-forced through the same decode path, so a slot mid-prefill
+    batches with slots mid-generation), finished requests free their slot,
+    and queued requests are admitted into freed slots with a cache-slot
+    reset.  This is the serving plane's load generator: point it at a
+    replica's snapshot params and read requests/sec.
+
+The driver is greedy-only (load testing wants determinism) and host-side
+except for the jitted fused decode+argmax step.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["scan_prefill", "RequestDriver"]
+
+
+def scan_prefill(model, params, caches, prompts, *, start_pos: int = 0,
+                 dtype=jnp.float32):
+    """Prefill ``prompts`` (B, T) in one ``lax.scan`` over decode steps.
+
+    Returns ``(logits, caches)`` — the logits of the LAST prompt token and
+    the fully-populated caches, exactly what ``prompt_len`` sequential
+    ``decode_step`` calls produce (same per-token graph, one dispatch).
+    """
+    b, t = prompts.shape
+    toks = jnp.swapaxes(prompts, 0, 1)[:, :, None]              # (T, B, 1)
+    pos = jnp.int32(start_pos) + jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], (t, b)
+    )
+
+    def step(c, tok, p):
+        return model.decode_step(params, c, tok, p, dtype=dtype)
+
+    logits_sds = jax.eval_shape(step, caches, toks[0], pos[0])[0]
+
+    def body(carry, xs):
+        c, _ = carry
+        tok, p = xs
+        logits, c = step(c, tok, p)
+        return (c, logits), None
+
+    init = (caches, jnp.zeros(logits_sds.shape, logits_sds.dtype))
+    (caches, logits), _ = jax.lax.scan(body, init, (toks, pos))
+    return logits, caches
+
+
+class RequestDriver:
+    """Continuous batching over ``Model.decode_step``.
+
+    model:     a ``repro.models.Model`` with a decode path (``head == "lm"``).
+    slots:     decode batch width — concurrent requests in flight.
+    max_len:   cache capacity (longest prompt + generation).
+    decode_fn: optional pre-lowered ``(params, caches, tokens, position) ->
+               (logits, caches)`` (e.g. a ``ServeJob.decode_fn``); defaults
+               to jitting the model's ``decode_step``.
+    """
+
+    def __init__(self, model, *, slots: int, max_len: int, dtype=jnp.float32,
+                 decode_fn=None):
+        if model.cfg.head != "lm":
+            raise ValueError(f"{model.cfg.name} has no decode path")
+        self.model = model
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.dtype = dtype
+        self._cache_template = model.init_cache(self.slots, self.max_len, dtype=dtype)
+
+        raw_decode = decode_fn or (
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, dtype=dtype)
+        )
+
+        def _step(params, caches, tokens, position):
+            logits, caches = raw_decode(params, caches, tokens, position)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), caches
+
+        self._step = jax.jit(_step)
+        # admitting a request into a freed slot restores that slot's cache
+        # lane to its init value (ring-buffer "pos" lanes init to -1, not 0)
+        self._reset_slot = jax.jit(
+            lambda caches, slot: jax.tree.map(
+                lambda c, t: c.at[:, slot].set(t[:, 0]), caches,
+                self._cache_template,
+            )
+        )
+        self.reset()
+
+    # ------------------------------------------------------------------
+    def reset(self):
+        self.caches = self._cache_template
+        self._active: List[Optional[dict]] = [None] * self.slots
+        self._queue: deque = deque()
+        self._next_id = 0
+        self.results: Dict[int, np.ndarray] = {}
+        self.steps = 0
+
+    def submit(self, prompt: Sequence[int], new_tokens: int) -> int:
+        """Queue one request; returns its id (results land in
+        ``self.results[id]`` once the request completes)."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token sequence")
+        if prompt.size + int(new_tokens) > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + new_tokens({new_tokens}) exceeds "
+                f"max_len={self.max_len}"
+            )
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append({
+            "id": rid, "prompt": prompt, "plen": int(prompt.size),
+            "new": int(new_tokens), "pos": 0, "last": 0, "out": [],
+        })
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + sum(r is not None for r in self._active)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        for s in range(self.slots):
+            if self._active[s] is None and self._queue:
+                req = self._queue.popleft()
+                self.caches = self._reset_slot(self.caches, jnp.int32(s))
+                self._active[s] = req
+
+    def step(self, params: PyTree) -> int:
+        """Advance every in-flight request one token (one device dispatch);
+        returns how many requests completed this step."""
+        self._admit()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        position = np.zeros((self.slots,), np.int32)
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            tokens[s, 0] = (
+                req["prompt"][req["pos"]] if req["pos"] < req["plen"] else req["last"]
+            )
+            position[s] = req["pos"]
+
+        sampled, self.caches = self._step(
+            params, self.caches, jnp.asarray(tokens), jnp.asarray(position)
+        )
+        sampled = np.asarray(sampled)
+        self.steps += 1
+
+        done = 0
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            emitted = req["pos"] >= req["plen"] - 1   # past the prompt: greedy output
+            req["pos"] += 1
+            if emitted:
+                req["last"] = int(sampled[s])
+                req["out"].append(req["last"])
+                if len(req["out"]) >= req["new"]:
+                    self.results[req["id"]] = np.asarray(req["out"], np.int32)
+                    self._active[s] = None
+                    done += 1
+        return done
+
+    # ------------------------------------------------------------------
+    def run(self, params: PyTree,
+            requests: Sequence[Tuple[Sequence[int], int]]) -> Dict[str, Any]:
+        """Drive a workload to completion: submit all ``(prompt, new_tokens)``
+        pairs, decode until every request finishes, return throughput stats."""
+        ids = [self.submit(p, n) for p, n in requests]
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        t0 = time.perf_counter()
+        completed = 0
+        while self.pending:
+            completed += self.step(params)
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        elapsed = time.perf_counter() - t0
+        tokens = int(sum(self.results[i].size for i in ids))
+        return {
+            "completed": completed,
+            "steps": self.steps,
+            "elapsed_s": elapsed,
+            "requests_per_sec": completed / max(elapsed, 1e-9),
+            "tokens_per_sec": tokens / max(elapsed, 1e-9),
+            "outputs": {i: self.results[i] for i in ids},
+        }

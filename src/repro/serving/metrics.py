@@ -1,0 +1,110 @@
+"""Serving-plane metrics streams.
+
+The training engines already emit ``staleness`` / ``send_rate`` streams from
+the async channel's wire state (``repro.scenarios.metrics``); the serving
+plane reuses those exact semantics over the replica-stacked snapshot state
+and adds the two request-facing streams the SLO story needs:
+
+  * ``staleness``        — mean per-replica snapshot age at each publish
+                           (same definition as the training stream, replica
+                           axis instead of node axis).
+  * ``snapshot_age``     — MAX per-replica age at each publish: the
+                           SLO-facing stream (the SLO holds iff this stays
+                           strictly below every replica's bound).
+  * ``send_rate``        — fraction of replicas refreshed per publish
+                           (bytes-for-freshness: bound b ⇒ rate ≈ 1/b).
+  * ``published_kbytes`` — analytic wire kbytes the publish moved.
+  * ``requests_per_sec`` — completed requests per wall-clock second,
+                           sampled per request-driver run.
+
+``ServingMetrics`` is a plain host-side recorder: the jitted publish/decode
+paths stay pure, the recorder consumes their info dicts.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["SERVING_STREAM_FIELDS", "ServingMetrics"]
+
+SERVING_STREAM_FIELDS = (
+    "staleness", "snapshot_age", "send_rate", "published_kbytes",
+    "requests_per_sec",
+)
+
+
+class ServingMetrics:
+    """Host-side per-publish / per-load-run stream recorder."""
+
+    def __init__(self, bounds):
+        self.bounds = tuple(int(b) for b in bounds)
+        self._publish_rows: List[Dict[str, float]] = []
+        self._ages: List[np.ndarray] = []          # (R,) per publish
+        self._request_rows: List[Dict[str, float]] = []
+
+    # -- publish side -------------------------------------------------------
+    def record_publish(self, info) -> None:
+        """Consume one :meth:`SnapshotPublisher.publish` info dict."""
+        age = np.asarray(info["age"])
+        sent = np.asarray(info["sent"])
+        self._ages.append(age)
+        self._publish_rows.append({
+            "staleness": float(age.mean()),
+            "snapshot_age": float(age.max()),
+            "send_rate": float(sent.mean()),
+            "published_kbytes": float(np.asarray(info["bytes"]).sum()) / 1e3,
+        })
+
+    # -- request side -------------------------------------------------------
+    def record_requests(self, completed: int, tokens: int, elapsed_s: float) -> None:
+        self._request_rows.append({
+            "requests_per_sec": completed / max(elapsed_s, 1e-9),
+            "tokens_per_sec": tokens / max(elapsed_s, 1e-9),
+            "completed": float(completed),
+            "elapsed_s": float(elapsed_s),
+        })
+
+    # -- views --------------------------------------------------------------
+    def streams(self) -> Dict[str, np.ndarray]:
+        """Dense per-publish streams (shape (P,) each) plus the per-run
+        ``requests_per_sec`` samples."""
+        out = {
+            f: np.asarray([r[f] for r in self._publish_rows], np.float64)
+            for f in ("staleness", "snapshot_age", "send_rate", "published_kbytes")
+        }
+        out["requests_per_sec"] = np.asarray(
+            [r["requests_per_sec"] for r in self._request_rows], np.float64
+        )
+        return out
+
+    def max_age(self) -> np.ndarray:
+        """Per-replica max observed age over all publishes (R,)."""
+        if not self._ages:
+            return np.zeros((len(self.bounds),), np.int64)
+        return np.stack(self._ages).max(axis=0)
+
+    def slo_report(self) -> List[Dict[str, float]]:
+        """Per-replica SLO verdict: age must stay STRICTLY below the bound."""
+        worst = self.max_age()
+        return [
+            {"replica": r, "bound": b, "max_age": int(worst[r]), "ok": bool(worst[r] < b)}
+            for r, b in enumerate(self.bounds)
+        ]
+
+    def slo_ok(self) -> bool:
+        return all(row["ok"] for row in self.slo_report())
+
+    def summary(self) -> Dict[str, float]:
+        s = self.streams()
+        def _m(x):
+            return float(np.mean(x)) if len(x) else float("nan")
+        return {
+            "publishes": len(self._publish_rows),
+            "staleness": _m(s["staleness"]),
+            "snapshot_age_max": float(s["snapshot_age"].max()) if len(s["snapshot_age"]) else float("nan"),
+            "send_rate": _m(s["send_rate"]),
+            "published_kbytes": float(s["published_kbytes"].sum()) if len(s["published_kbytes"]) else 0.0,
+            "requests_per_sec": _m(s["requests_per_sec"]),
+            "slo_ok": self.slo_ok(),
+        }

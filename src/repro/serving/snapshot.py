@@ -1,0 +1,237 @@
+"""Quantized parameter snapshots: the training → serving wire format.
+
+The serving plane treats an inference replica as *one more gossip
+subscriber*: instead of loading static checkpoints, replicas hold a
+dequantized snapshot of the live trained parameters that the training loop
+refreshes through the same codec + wire-state machinery the gossip channels
+use (``repro.compression``).
+
+  * :class:`SnapshotPublisher` — the encoder side, hooked in after each
+    communication round.  It keeps one replica estimate ``x̂_r`` per
+    subscriber (the CHOCO idiom: the replica IS the shared memory), encodes
+    the *difference* ``q(x − x̂_r)`` through the snapshot codec, and applies
+    the decoded difference to its copy of ``x̂_r`` — exactly what the
+    subscriber applies, so publisher and replica estimates never diverge.
+    Repeated publishes therefore ship differences, which shrink as training
+    converges; aggressive sparsifiers get CHOCO's decaying-signal benefit
+    for free.
+  * :class:`SnapshotState` — the replica-stacked wire state (leading axis
+    R = number of replicas, mirroring the node-stacked layout every codec
+    already operates on): the dequantized snapshots ``hat``, per-replica
+    staleness ``age`` and the last publish's ``sent`` mask — the same
+    ``{"hat", "age", "sent"}`` layout as the async channel's wire state, so
+    the ``staleness`` / ``send_rate`` metrics streams read it unchanged.
+
+Refresh policy per replica r (the async stale-mix event trigger; the drift
+term is opt-in — ``threshold=None`` makes refreshes purely bound-driven):
+
+    send_r = (age_r + 1 ≥ bound_r)  OR  ‖x − x̂_r‖² > θ² ‖x‖²
+
+Ages are bounded by construction — ``age_r ≤ bound_r − 1`` after every
+publish — which is what turns the staleness bound into a *freshness SLO*.
+``bound_r = 1`` forces a refresh every publish; with the identity codec the
+snapshot aliases the live parameters (no arithmetic enters the trace), so a
+bound-1 / identity replica serves **bit-identical** live params — the same
+structural guarantee as the channels' ``is_passthrough`` short-circuit.
+
+Everything here is pure jnp and jit/scan compatible; host-side bookkeeping
+(byte counters, SLO reports, metrics streams) lives in ``replicas.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..compression.base import Compressor, ErrorFeedback, make_compressor
+
+PyTree = Any
+
+__all__ = ["SnapshotState", "SnapshotPublisher"]
+
+
+@dataclasses.dataclass
+class SnapshotState:
+    """Replica-stacked snapshot wire state (leading axis R on every leaf of
+    ``hat``), carried host-side by :class:`~repro.serving.ReplicaSet` and
+    threaded through the jitted :meth:`SnapshotPublisher.publish`."""
+
+    hat: PyTree            # (R, ...) dequantized snapshots — what replicas serve
+    age: jnp.ndarray       # (R,) int32 publishes since last refresh
+    sent: jnp.ndarray      # (R,) bool last publish's refresh mask
+    seq: jnp.ndarray       # () int32 publish counter
+    key: jnp.ndarray       # scalar typed PRNG key driving stochastic codecs
+
+
+jax.tree_util.register_dataclass(
+    SnapshotState, data_fields=["hat", "age", "sent", "seq", "key"], meta_fields=[]
+)
+
+
+def _broadcast_replicas(params: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotPublisher:
+    """Declarative snapshot-publishing spec (frozen, jit-capturable).
+
+    codec:     snapshot wire codec — a ``repro.compression`` registry name
+               ("identity", "qsgd", "top_k:0.1", ...) or a ready
+               ``Compressor``.  Difference publishing replaces error
+               feedback (the replica is the memory), so an ``ErrorFeedback``
+               wrapper is unwrapped, mirroring ``ChocoChannel.bind``.
+               "identity"/None is the raw path: refreshed snapshots *alias*
+               the live parameters (bit-identical serving).
+    bounds:    per-replica staleness bounds (R = len(bounds)); ``bounds[r]``
+               is replica r's freshness SLO — at most ``bounds[r] − 1``
+               publishes may pass without a refresh.
+    threshold: relative-drift event trigger θ — a replica also refreshes
+               early when ``‖x − x̂_r‖² > θ²‖x‖²``.  ``None`` (default)
+               disables the trigger: refreshes are bound-driven only, so a
+               bound-b replica pays exactly 1/b of the bound-1 wire bytes.
+               Note θ = 0 means "refresh on ANY drift" (the async channel's
+               convention), not "trigger off".
+    """
+
+    codec: Any = None
+    bounds: Tuple[int, ...] = (1,)
+    threshold: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.bounds:
+            raise ValueError("SnapshotPublisher needs at least one replica bound")
+        bounds = tuple(int(b) for b in self.bounds)
+        if any(b < 1 for b in bounds):
+            raise ValueError(f"staleness bounds must be >= 1, got {self.bounds}")
+        object.__setattr__(self, "bounds", bounds)
+        if self.threshold is not None and float(self.threshold) < 0.0:
+            raise ValueError(f"threshold must be >= 0, got {self.threshold}")
+        codec = self.codec
+        if codec is not None and not isinstance(codec, Compressor):
+            codec = make_compressor(codec)
+        if isinstance(codec, ErrorFeedback):
+            # the replica estimate is the error memory — a residual on top
+            # would double-count the quantization error (ChocoChannel.bind)
+            codec = codec.inner
+        if codec is not None and codec.is_identity:
+            codec = None
+        object.__setattr__(self, "codec", codec)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def tag(self) -> str:
+        return "raw" if self.codec is None else self.codec.tag
+
+    # ------------------------------------------------------------------
+    def init(self, params: PyTree, key: Optional[jax.Array] = None) -> SnapshotState:
+        """Zero snapshots, ages poised so the FIRST publish refreshes every
+        replica (a replica must be populated before it serves anything)."""
+        r = self.n_replicas
+        bounds = jnp.asarray(self.bounds, jnp.int32)
+        if key is None:
+            key = jax.random.key(0)
+        return SnapshotState(
+            hat=_broadcast_replicas(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params), r
+            ),
+            age=bounds - 1,
+            sent=jnp.zeros((r,), jnp.bool_),
+            seq=jnp.int32(0),
+            key=key,
+        )
+
+    def publish(self, state: SnapshotState, params: PyTree):
+        """One training-round publish tick: ``(new_state, info)``.
+
+        ``info`` carries the per-replica ``sent`` mask, post-publish ``age``,
+        relative drift and the analytic wire ``bytes`` each replica's link
+        moved (0 for replicas that kept their stale snapshot).  Pure jnp —
+        safe to ``jax.jit`` with ``self`` closed over.
+        """
+        r = self.n_replicas
+        bounds = jnp.asarray(self.bounds, jnp.int32)
+        live = _broadcast_replicas(params, r)
+
+        diff = jax.tree.map(
+            lambda x, h: x.astype(jnp.float32) - h.astype(jnp.float32),
+            live, state.hat,
+        )
+        drift2 = sum(
+            jnp.sum(d.reshape(r, -1) ** 2, axis=1) for d in jax.tree.leaves(diff)
+        )
+        ref2 = sum(
+            jnp.sum(x.astype(jnp.float32).reshape(r, -1) ** 2, axis=1)
+            for x in jax.tree.leaves(live)
+        )
+        forced = (state.age + 1) >= bounds
+        if self.threshold is None:
+            send = forced
+        else:
+            thr = jnp.float32(self.threshold)
+            send = forced | (drift2 > thr * thr * (ref2 + 1e-12))
+
+        if self.codec is None:
+            # raw path: a refreshed snapshot is the live tree itself (no
+            # arithmetic — bound-1 replicas serve bit-identical live params)
+            hat_new = jax.tree.map(
+                lambda l, h: jnp.where(
+                    send.reshape((r,) + (1,) * (l.ndim - 1)), l, h
+                ),
+                live, state.hat,
+            )
+            key_new = state.key
+        else:
+            use_key, key_new = jax.random.split(state.key)
+            payload = self.codec.encode_tree(diff, use_key)
+            dec = self.codec.decode_tree(payload)
+            hat_new = jax.tree.map(
+                lambda h, d: (
+                    h.astype(jnp.float32)
+                    + jnp.where(
+                        send.reshape((r,) + (1,) * (d.ndim - 1)),
+                        d.astype(jnp.float32),
+                        0.0,
+                    )
+                ).astype(h.dtype),
+                state.hat, dec,
+            )
+
+        new_state = SnapshotState(
+            hat=hat_new,
+            age=jnp.where(send, 0, state.age + 1).astype(jnp.int32),
+            sent=send,
+            seq=state.seq + 1,
+            key=key_new,
+        )
+        per_replica_bytes = jnp.float32(self.message_bytes(params))
+        info = {
+            "sent": send,
+            "age": new_state.age,
+            "drift": jnp.sqrt(drift2 / (ref2 + 1e-12)),
+            "bytes": send.astype(jnp.float32) * per_replica_bytes,
+        }
+        return new_state, info
+
+    # ------------------------------------------------------------------
+    def message_bytes(self, params: PyTree) -> int:
+        """Analytic wire bytes of ONE snapshot message (per replica link):
+        the codec's payload model, or the raw tree size for the identity
+        path — the bandwidth axis of the serving bench."""
+        if self.codec is not None:
+            return self.codec.tree_bytes(params)
+        return sum(
+            int(jnp.dtype(l.dtype).itemsize) * int(jnp.size(l))
+            for l in jax.tree.leaves(params)
+        )
+
+    def replica_params(self, state: SnapshotState, i: int) -> PyTree:
+        """The dequantized snapshot replica ``i`` currently serves."""
+        return jax.tree.map(lambda h: h[i], state.hat)
