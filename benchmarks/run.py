@@ -30,17 +30,33 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
+    p.add_argument("--smoke", action="store_true",
+                   help="alias for --fast; CI smoke jobs use this spelling")
     p.add_argument("--channel", default=None,
                    help="gossip channel spec for table2/curves (sync, choco[:g], "
                         "async[:s] — same grammar as sweep.py --channels)")
+    p.add_argument("--profile", default=None, metavar="DIR",
+                   help="bracket the selected benchmarks in jax.profiler."
+                        "start_trace/stop_trace writing a trace to DIR")
     args = p.parse_args(argv)
+    args.fast = args.fast or args.smoke
     only = set(args.only.split(","))
 
     os.makedirs("benchmarks/results", exist_ok=True)
+    from repro.telemetry.spans import profile_trace
+
+    with profile_trace(args.profile):
+        all_rows = _run_selected(only, args)
+
+    with open("benchmarks/results/benchmarks.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+
+def _run_selected(only, args):
     all_rows = []
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if "table2" in only:
         from . import table2
@@ -87,11 +103,15 @@ def main(argv=None):
         rows = executor_bench.run(steps=128 if args.fast else 512)
         all_rows += rows
         _csv(rows)
+    if "telemetry" in only:
+        from . import telemetry_bench
+        rows = telemetry_bench.main(smoke=args.fast)
+        all_rows += rows
+        _csv(rows)
 
-    with open("benchmarks/results/benchmarks.json", "w") as f:
-        json.dump(all_rows, f, indent=1)
-    print(f"# {len(all_rows)} rows in {time.time()-t0:.0f}s -> benchmarks/results/benchmarks.json",
+    print(f"# {len(all_rows)} rows in {time.perf_counter()-t0:.0f}s -> benchmarks/results/benchmarks.json",
           file=sys.stderr)
+    return all_rows
 
 
 if __name__ == "__main__":

@@ -31,7 +31,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 CODECS = ("identity", "qsgd", "top_k:0.1")
 BOUNDS = (1, 2, 4)
@@ -104,13 +103,18 @@ def run(rounds: int = 16, tau: int = 2, seed: int = 0, *, bounds=BOUNDS,
     # one subscriber set per codec, one replica per staleness bound
     sets = {c: ReplicaSet(params0, codec=c, bounds=tuple(bounds)) for c in codecs}
 
-    t0 = time.time()
-    for _ in range(rounds):
-        state, key = sim.run_rounds(state, key, 1)
-        live = node_mean(state.params)
-        for rs in sets.values():
-            rs.publish(live)
-    train_wall = time.time() - t0
+    from .common import timed
+
+    def _train_loop():
+        nonlocal state, key
+        for _ in range(rounds):
+            state, key = sim.run_rounds(state, key, 1)
+            live = node_mean(state.params)
+            for rs in sets.values():
+                rs.publish(live)
+        return state.params
+
+    _, train_wall = timed(_train_loop)
     live = node_mean(state.params)
     live_loss = float(eval_loss(live))
 

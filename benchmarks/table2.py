@@ -6,15 +6,13 @@ is the RANKING and the trends, not absolute accuracies.
 """
 from __future__ import annotations
 
-import time
-
 METHODS = ["dlsgd", "slowmo_d", "pd_sgdm", "dse_sgd", "dse_mvr"]
 
 
 def run(steps: int = 200, seeds=(0,), channel=None):
     """``channel`` threads the gossip-protocol axis (sync/choco/async specs,
     same grammar as ``sweep.py --channels``) through the paper table."""
-    from .common import run_method
+    from .common import run_method, timed
 
     chan_tag = channel or "sync"
     rows = []
@@ -29,9 +27,11 @@ def run(steps: int = 200, seeds=(0,), channel=None):
     for omega, tau, b in settings:
         for m in METHODS:
             accs, losses = [], []
-            t0 = time.time()
+            wall = 0.0
             for s in seeds:
-                r = run_method(m, omega, tau, b, steps, seed=s, channel=channel)
+                r, dt = timed(run_method, m, omega, tau, b, steps,
+                              seed=s, channel=channel)
+                wall += dt
                 accs.append(r["test_acc"])
                 losses.append(r["train_loss"])
             rows.append({
@@ -43,6 +43,6 @@ def run(steps: int = 200, seeds=(0,), channel=None):
                 "b": b,
                 "test_acc": sum(accs) / len(accs),
                 "train_loss": sum(losses) / len(losses),
-                "us_per_call": (time.time() - t0) / max(steps, 1) * 1e6,
+                "us_per_call": wall / max(steps, 1) * 1e6,
             })
     return rows

@@ -1,0 +1,218 @@
+"""Telemetry bench: what does observability cost, and is "off" really free?
+
+Three variants of the SAME training workload (8-node ring, MLP, DSE-MVR over
+a CHOCO channel — the executor-bench shape scaled up so one round is tens of
+milliseconds of real compute):
+
+  * ``baseline``  — no telemetry hub attached: the scanned round executor,
+    exactly what every pre-telemetry caller runs;
+  * ``spans_off`` — a hub attached with ``spans=False``: scanned executor +
+    host-side link-byte counters (the cheap always-on tier);
+  * ``spans_on``  — ``spans=True``: the per-phase driver with
+    ``block_until_ready``-fenced local/gossip span timers.
+
+Each variant is timed (fenced, best-of-``repeats``) and REQUIRED to end in
+bit-identical parameters — the acceptance criterion that telemetry never
+perturbs training, measured rather than assumed.  The spans-on hub is then
+exported to ``benchmarks/results/telemetry_run.jsonl`` and the artifact is
+checked for per-round local/gossip/eval span durations, per-channel link-byte
+counters and the run-metadata stamp on every record.
+
+-> benchmarks/results/BENCH_telemetry.json   (span_overhead_pct asserted < 2
+   in full mode; smoke mode only sanity-bounds it)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+N_NODES = 8
+TAU = 4
+
+#: spans-on overhead ceiling (fraction of per-round wall time), full mode
+MAX_OVERHEAD_PCT = 2.0
+
+
+def _problem(smoke: bool):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import NodeData
+
+    dim, hidden, batch = (64, 64, 16) if smoke else (256, 256, 64)
+    per_node = 4 * batch
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(dim,)).astype(np.float32)
+    x = rng.normal(size=(N_NODES, per_node, dim)).astype(np.float32)
+    y = (x @ w_true + 0.1 * rng.normal(size=(N_NODES, per_node)).astype(np.float32))
+    data = NodeData(x=x, y=y.astype(np.float32))
+
+    def loss(params, batch_):
+        xb, yb = batch_
+        h = jnp.tanh(xb @ params["w1"])
+        pred = (h @ params["w2"]).squeeze(-1)
+        return jnp.mean((pred - yb) ** 2)
+
+    k1, k2 = jax.random.split(jax.random.key(0))
+    params = {
+        "w1": jax.random.normal(k1, (dim, hidden)) * (1.0 / np.sqrt(dim)),
+        "w2": jax.random.normal(k2, (hidden, 1)) * (1.0 / np.sqrt(hidden)),
+    }
+    return data, loss, params, batch
+
+
+def _run_variant(data, loss, params, batch, *, rounds, repeats, telemetry):
+    """Build a fresh Simulator, warm it up, and return
+    ``(final_params, best_wall_s)`` over ``repeats`` timed runs of
+    ``rounds`` rounds each (every repeat restarts from the same state)."""
+    import jax
+
+    from repro.core import Simulator, make_algorithm, ring
+
+    from .common import timed
+
+    alg = make_algorithm("dse_mvr", lr=0.05, alpha=0.1, tau=TAU, channel="choco")
+    sim = Simulator(alg, ring(N_NODES), loss, data, batch_size=batch,
+                    telemetry=telemetry)
+    state0 = sim.init_state(params, jax.random.key(1))
+    key0 = jax.random.key(2)
+
+    # warmup: compile the round path (the scanned executor specializes on
+    # the round count, so warm with the same ``rounds`` the timed runs use)
+    sim.run_rounds(state0, key0, rounds)
+
+    best = None
+    final = None
+    for _ in range(repeats):
+        (final, _), wall = timed(sim.run_rounds, state0, key0, rounds)
+        best = wall if best is None else min(best, wall)
+    return final, best
+
+
+def _assert_bit_identical(a, b, label):
+    import jax
+    import numpy as np
+
+    same = all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params))
+    )
+    assert same, f"telemetry variant {label!r} perturbed training"
+
+
+def _emit_artifact(data, loss, params, batch, *, rounds, path):
+    """One spans-on training run through ``Simulator.run`` (so eval spans
+    fire too), exported as the run-stamped JSONL artifact; returns the
+    parsed records after checking the acceptance shape."""
+    import jax
+
+    from repro.core import Simulator, make_algorithm, ring
+    from repro.telemetry import Telemetry
+
+    hub = Telemetry(config={"bench": "telemetry", "rounds": rounds}, spans=True)
+    alg = make_algorithm("dse_mvr", lr=0.05, alpha=0.1, tau=TAU, channel="choco")
+    sim = Simulator(alg, ring(N_NODES), loss, data, batch_size=batch,
+                    telemetry=hub)
+    steps = rounds * sim.round_len
+    sim.run(params, jax.random.key(1), num_steps=steps, eval_every=steps)
+    hub.export_jsonl(path)
+
+    recs = [json.loads(line) for line in open(path)]
+    assert all("run" in r for r in recs), "unstamped telemetry record"
+    meta = recs[0]["run"]
+    for k in ("git_sha", "jax_version", "device_kind", "config_hash"):
+        assert meta.get(k), f"run metadata missing {k!r}"
+    phases = {r["phase"] for r in recs if r.get("event") == "span"}
+    assert {"local", "gossip", "eval"} <= phases, f"missing span phases: {phases}"
+    links = [r for r in recs if r.get("stream") == "link_bytes"]
+    assert links and any(r["event"] == "total" and r["total"] > 0 for r in links), (
+        "no cumulative link-byte counters in the artifact"
+    )
+    return recs, hub
+
+
+def run(smoke: bool = False):
+    rounds = 6 if smoke else 24
+    repeats = 1 if smoke else 5
+    data, loss, params, batch = _problem(smoke)
+
+    from repro.telemetry import Telemetry
+
+    base_final, base_wall = _run_variant(
+        data, loss, params, batch, rounds=rounds, repeats=repeats,
+        telemetry=None,
+    )
+    off_final, off_wall = _run_variant(
+        data, loss, params, batch, rounds=rounds, repeats=repeats,
+        telemetry=Telemetry(config={"variant": "spans_off"}, spans=False),
+    )
+    on_final, on_wall = _run_variant(
+        data, loss, params, batch, rounds=rounds, repeats=repeats,
+        telemetry=Telemetry(config={"variant": "spans_on"}, spans=True),
+    )
+    _assert_bit_identical(base_final, off_final, "spans_off")
+    _assert_bit_identical(base_final, on_final, "spans_on")
+
+    artifact_path = "benchmarks/results/telemetry_run.jsonl"
+    os.makedirs("benchmarks/results", exist_ok=True)
+    _, hub = _emit_artifact(data, loss, params, batch, rounds=rounds,
+                            path=artifact_path)
+    span_stats = {
+        label: entry["summary"]
+        for label, entry in hub.collect()["span_seconds"]["series"].items()
+    }
+
+    def _pct(wall):
+        return (wall - base_wall) / base_wall * 100.0
+
+    rows = []
+    for name, wall in (("baseline", base_wall), ("spans_off", off_wall),
+                       ("spans_on", on_wall)):
+        rows.append({
+            "bench": "telemetry",
+            "name": f"telemetry/{name}",
+            "variant": name,
+            "rounds": rounds,
+            "repeats": repeats,
+            "smoke": smoke,
+            "wall_s": round(wall, 5),
+            "us_per_round": round(wall / rounds * 1e6, 1),
+            "overhead_pct": round(_pct(wall), 3),
+            "bit_identical": True,
+        })
+    rows[-1]["span_mean_s"] = {
+        k: round(v["mean"], 6) for k, v in span_stats.items()
+    }
+
+    overhead = _pct(on_wall)
+    if smoke:
+        # CI smoke containers jitter too much for a tight bound; just make
+        # sure spans aren't catastrophically expensive
+        assert overhead < 50.0, f"span overhead {overhead:.1f}% in smoke mode"
+    else:
+        assert overhead < MAX_OVERHEAD_PCT, (
+            f"span overhead {overhead:.2f}% exceeds {MAX_OVERHEAD_PCT}% of "
+            f"per-round wall time"
+        )
+    return rows
+
+
+def main(smoke: bool = False):
+    rows = run(smoke=smoke)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_telemetry.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced workload + lenient overhead bound (CI)")
+    args = p.parse_args()
+    for r in main(smoke=args.smoke):
+        extra = (f" span_mean={r['span_mean_s']}" if "span_mean_s" in r else "")
+        print(f"{r['name']}: wall={r['wall_s']}s "
+              f"overhead={r['overhead_pct']}%{extra}")

@@ -48,10 +48,12 @@ the static (ctx-less) executor.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .base import ChannelState, Compressor, ErrorFeedback
 
@@ -66,6 +68,7 @@ __all__ = [
     "CHANNELS",
     "register_channel",
     "make_channel",
+    "link_bytes_per_round",
     "Transport",
     "ChannelSession",
 ]
@@ -174,6 +177,24 @@ class GossipChannel:
         """The channel driving the i-th ``CommSpec.buffers`` entry — self
         for uniform channels; :class:`PerBufferChannel` dispatches."""
         return self
+
+    def message_bytes(self, tree: PyTree) -> int:
+        """Analytic wire bytes ONE node's send of this buffer costs.
+
+        ``tree`` is one node's message (node axis stripped; arrays or
+        ShapeDtypeStructs).  Raw leaf bytes with no active codec; the
+        codec's analytic payload bytes otherwise — difference-gossip
+        payloads are param-shaped, so codec bytes apply unchanged.  This is
+        the training-path analog of the serving publisher's
+        ``message_bytes`` and feeds the telemetry hub's per-channel
+        cumulative ``link_bytes`` counters."""
+        comp = self.compression
+        if comp is None or comp.is_identity:
+            return sum(
+                math.prod(l.shape) * np.dtype(l.dtype).itemsize
+                for l in jax.tree.leaves(tree)
+            )
+        return comp.tree_bytes(tree)
 
     # -- wire-state layout (one tree per CommSpec.buffers entry) -----------
     def init_wire(self, params: PyTree) -> Optional[PyTree]:
@@ -490,6 +511,38 @@ class PerBufferChannel(GossipChannel):
     def gossip(self, tree, wire, key, ctx, transport):
         self._no_aggregate()
 
+    def message_bytes(self, tree):
+        self._no_aggregate()
+
+
+def link_bytes_per_round(spec, params) -> Dict[str, float]:
+    """Analytic wire bytes ONE communication round moves, per buffer/channel.
+
+    Generalizes the serving plane's per-replica byte counting to the
+    training path: ``spec`` is the algorithm's ``CommSpec`` (duck-typed —
+    ``buffers`` + ``resolved_channel()``; this module never imports
+    ``repro.core``) and ``params`` the node-stacked parameter tree (leaves
+    lead with the node axis N; arrays or ShapeDtypeStructs).  Every declared
+    buffer is a param-sized message, so the result maps a
+    ``"<buffer>/<channel-tag>"`` label to ``N * message_bytes`` for that
+    buffer's channel.  Event-triggered (async) channels are counted per
+    *potential* send; scale by the measured send rate (the ``send_rate``
+    telemetry stream) for realized bytes.
+    """
+    leaves = jax.tree.leaves(params)
+    if not leaves:
+        return {}
+    n = leaves[0].shape[0]
+    per_node = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), params
+    )
+    chan = spec.resolved_channel()
+    out: Dict[str, float] = {}
+    for i, name in enumerate(spec.buffers):
+        c = chan.for_buffer(i) if chan is not None else SyncChannel()
+        out[f"{name}/{c.tag}"] = float(c.message_bytes(per_node)) * n
+    return out
+
 
 # --------------------------------------------------------------------------
 # registry
@@ -584,10 +637,14 @@ class ChannelSession:
             )
         self._calls += 1
         wire = self._wire[i] if i < len(self._wire) else None
-        mixed, new_wire = self._channel.for_buffer(i).gossip(
-            tree, wire, jax.random.fold_in(self._use_key, i), ctx,
-            self._transport,
-        )
+        chan = self._channel.for_buffer(i)
+        # named scope only attaches HLO metadata (profiler-visible send
+        # sites per buffer/protocol) — the traced computation is unchanged
+        with jax.named_scope(f"repro/send/{chan.tag}/b{i}"):
+            mixed, new_wire = chan.gossip(
+                tree, wire, jax.random.fold_in(self._use_key, i), ctx,
+                self._transport,
+            )
         self._new_wire.append(new_wire)
         return mixed
 

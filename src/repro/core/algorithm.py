@@ -438,21 +438,55 @@ def make_round_step(
         )
         return dataclasses.replace(new, comp=session.final_state())
 
+    # The round is factored into two named phases so (a) profiler traces
+    # show "repro/local_update" / "repro/gossip" scopes on device (named
+    # scopes attach HLO metadata only — numerics untouched), and (b) the
+    # Simulator's telemetry mode can dispatch the phases separately with
+    # fenced span timers (repro.telemetry) — the composed ``round_step`` is
+    # the same op sequence as before, and stays the only scanned entry point.
     if not scheduled:
 
-        def round_step(state, batches):
-            if round_len > 1:
-                micro = jax.tree.map(lambda x: x[: round_len - 1], batches)
+        def local_phase(state, micro):
+            with jax.named_scope("repro/local_update"):
 
                 def body(st, mb):
                     return algorithm.local_update(st, lambda p: grad_of_batch(p, mb)), ()
 
                 state, _ = lax.scan(body, state, micro)
-            last = jax.tree.map(lambda x: x[round_len - 1], batches)
-            gf = lambda p: comm_gb(p, last)
-            return _comm(state, gf)
+            return state
 
+        def comm_phase(state, last):
+            with jax.named_scope("repro/gossip"):
+                gf = lambda p: comm_gb(p, last)
+                return _comm(state, gf)
+
+        def round_step(state, batches):
+            if round_len > 1:
+                micro = jax.tree.map(lambda x: x[: round_len - 1], batches)
+                state = local_phase(state, micro)
+            last = jax.tree.map(lambda x: x[round_len - 1], batches)
+            return comm_phase(state, last)
+
+        round_step.phases = (local_phase, comm_phase)
         return round_step, round_len
+
+    def local_phase_sched(state, micro, masks):
+        with jax.named_scope("repro/local_update"):
+
+            def body(st, xs):
+                mb, mask = xs
+                new = algorithm.local_update(st, lambda p: grad_of_batch(p, mb))
+                return _select_nodes(mask, new, st), ()
+
+            # None is an empty pytree, so a missing mask scans transparently
+            state, _ = lax.scan(body, state, (micro, masks))
+        return state
+
+    def comm_phase_sched(state, last, ctx: RoundCtx):
+        with jax.named_scope("repro/gossip"):
+            gf = lambda p: comm_gb(p, last)
+            new = _comm(state, gf, ctx)
+        return _select_nodes(ctx.active if gate_active else None, new, state)
 
     def round_step_scheduled(state, batches, ctx: RoundCtx):
         if round_len > 1:
@@ -462,17 +496,9 @@ def make_round_step(
                 if gate_local and ctx.local_mask is not None
                 else None
             )
-
-            def body(st, xs):
-                mb, mask = xs
-                new = algorithm.local_update(st, lambda p: grad_of_batch(p, mb))
-                return _select_nodes(mask, new, st), ()
-
-            # None is an empty pytree, so a missing mask scans transparently
-            state, _ = lax.scan(body, state, (micro, masks))
+            state = local_phase_sched(state, micro, masks)
         last = jax.tree.map(lambda x: x[round_len - 1], batches)
-        gf = lambda p: comm_gb(p, last)
-        new = _comm(state, gf, ctx)
-        return _select_nodes(ctx.active if gate_active else None, new, state)
+        return comm_phase_sched(state, last, ctx)
 
+    round_step_scheduled.phases = (local_phase_sched, comm_phase_sched)
     return round_step_scheduled, round_len

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compression.base import attach_channel_state
+from ..telemetry.spans import span as _tel_span
 from .algorithm import RoundCtx, make_round_step
 from .mixing import dense_mix, scheduled_dense_mix
 from .topology import Topology
@@ -114,6 +115,7 @@ class Simulator:
         eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
         scenario=None,
         stream_metrics: bool = True,
+        telemetry=None,
     ):
         self.alg = algorithm
         self.topology = topology
@@ -123,6 +125,18 @@ class Simulator:
         self.eval_fn = eval_fn
         self.scenario = scenario
         self.stream_metrics = stream_metrics
+        # optional repro.telemetry.Telemetry hub: streams, link-byte counters
+        # and (when hub.spans) fenced per-phase round dispatch.  telemetry
+        # None leaves every code path below exactly as it was — the
+        # disabled-telemetry ≡ current-behavior guarantee is structural.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            from ..telemetry import register_training_streams  # lazy: no cycle
+
+            register_training_streams(telemetry)
+        self._link_per_round: Optional[Dict[str, float]] = None
+        self._span_drivers = None
+        self._rounds_done = 0  # external run_rounds() hook's span numbering
         n = data.n_nodes if topology is None else topology.n
         if topology is None and scenario is None:
             raise ValueError("need a topology, a scenario, or both")
@@ -271,6 +285,167 @@ class Simulator:
                 return state, key, ys
 
             self._run_scheduled = _run_scheduled
+            # kept for the telemetry span drivers (phase-split dispatch)
+            self._sched_step = sched_step
+            self._stream_fn = stream_fn
+        else:
+            self._sched_step = None
+            self._stream_fn = None
+
+    # ------------------------------------------------------------------
+    # telemetry plumbing (inert unless a hub is attached)
+    # ------------------------------------------------------------------
+    def _link_round_bytes(self, state) -> Dict[str, float]:
+        """Analytic per-round link bytes per buffer/channel (cached)."""
+        if self._link_per_round is None:
+            from ..compression.channels import link_bytes_per_round  # lazy
+
+            self._link_per_round = link_bytes_per_round(
+                self.alg.comm, state.params
+            )
+        return self._link_per_round
+
+    def _has_event_triggered_channel(self) -> bool:
+        """True when realized link bytes depend on a measured send mask
+        (an active async channel) rather than being statically known."""
+        chan = self.alg.comm.resolved_channel()
+        if chan is None:
+            return False
+        from ..compression.channels import AsyncChannel  # lazy
+
+        return any(
+            isinstance(chan.for_buffer(i), AsyncChannel)
+            and not chan.for_buffer(i).is_passthrough
+            for i in range(len(self.alg.comm.buffers))
+        )
+
+    def _send_factor(self, state) -> float:
+        """Measured fraction of nodes that sent this round (async channels;
+        1.0 when every declared send happens unconditionally)."""
+        if not self._has_event_triggered_channel():
+            return 1.0
+        if not hasattr(self, "_send_rate_jit"):
+            from ..scenarios.metrics import send_rate  # lazy: no cycle
+
+            self._send_rate_jit = jax.jit(send_rate)
+        rate = float(self._send_rate_jit(state))
+        return rate if np.isfinite(rate) else 1.0
+
+    def _record_stream_chunk(self, ys, start_round: int) -> None:
+        """Fold one scanned ys chunk (dict of (rounds, ...) arrays) into the
+        hub's per-round gauge streams."""
+        tel = self.telemetry
+        for name, arr in ys.items():
+            for j, v in enumerate(np.asarray(arr)):
+                tel.record(name, v, step=start_round + j)
+
+    def _build_span_drivers(self):
+        """Jitted per-phase round dispatchers for telemetry span timing.
+
+        Each driver reproduces the scanned executor's body EXACTLY — same
+        key-split order, same batch assignment, same phase functions
+        (``make_round_step``'s ``.phases``) — just dispatched per phase so a
+        host-side fenced timer around each dispatch measures real work.
+        """
+        if self._span_drivers is not None:
+            return self._span_drivers
+        rl = self.round_len
+
+        if self.scenario is None:
+            local_phase, comm_phase = self._round_step.phases
+
+            @jax.jit
+            def span_local(state, key):
+                per_step = []
+                for _ in range(rl - 1):
+                    key, sk = jax.random.split(key)
+                    per_step.append(self.data.sample(sk, self.batch_size))
+                micro = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+                return local_phase(state, micro), key
+
+            @jax.jit
+            def span_comm(state, key):
+                key, sk = jax.random.split(key)
+                last = self.data.sample(sk, self.batch_size)
+                return comm_phase(state, last), key
+
+            self._span_drivers = (span_local, span_comm, None)
+            return self._span_drivers
+
+        local_phase, comm_phase = self._sched_step.phases
+        gate_local = self.scenario.needs_local_gate
+
+        @jax.jit
+        def span_local_sched(state, key, lm, node_bs=None):
+            per_step = []
+            for _ in range(rl - 1):
+                key, sk = jax.random.split(key)
+                per_step.append(
+                    self.data.sample(sk, self.batch_size, node_bs)
+                )
+            micro = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+            masks = lm[: rl - 1] if gate_local and lm is not None else None
+            return local_phase(state, micro, masks), key
+
+        @jax.jit
+        def span_comm_sched(state, key, ctx: RoundCtx, node_bs=None):
+            key, sk = jax.random.split(key)
+            last = self.data.sample(sk, self.batch_size, node_bs)
+            return comm_phase(state, last, ctx), key
+
+        stream_jit = (
+            jax.jit(self._stream_fn) if self._stream_fn is not None else None
+        )
+        self._span_drivers = (span_local_sched, span_comm_sched, stream_jit)
+        return self._span_drivers
+
+    def _advance_spanned(self, state, key, start, stop, xs_all, node_bs,
+                         stream_chunks):
+        """Telemetry-spans round driver: same math as the scanned executors
+        (same splits, same phase functions), dispatched phase-by-phase with
+        fenced ``local`` / ``gossip`` span timers and per-round link-byte
+        counter accumulation."""
+        from ..telemetry import span  # lazy: no cycle
+
+        tel = self.telemetry
+        span_local, span_comm, stream_jit = self._build_span_drivers()
+        link = self._link_round_bytes(state)
+        rl = self.round_len
+        for r in range(start, stop):
+            if self.scenario is None:
+                if rl > 1:
+                    with span(tel, "local", step=r) as sp:
+                        state, key = span_local(state, key)
+                        sp.fence(state)
+                with span(tel, "gossip", step=r) as sp:
+                    state, key = span_comm(state, key)
+                    sp.fence(state)
+            else:
+                wt, at, lm, pt, cs, tg = (
+                    None if a is None else a[r] for a in xs_all
+                )
+                if rl > 1:
+                    with span(tel, "local", step=r) as sp:
+                        state, key = span_local(state, key, lm, node_bs)
+                        sp.fence(state)
+                ctx = RoundCtx(w=wt, active=at, local_mask=lm, pattern=pt,
+                               comp_scale=cs, trigger=tg)
+                with span(tel, "gossip", step=r) as sp:
+                    state, key = span_comm(state, key, ctx, node_bs)
+                    sp.fence(state)
+                if stream_jit is not None:
+                    with span(tel, "metrics", step=r) as sp:
+                        ys = stream_jit(state, ctx)
+                        sp.fence(ys)
+                    self._record_stream_chunk(
+                        jax.tree.map(lambda v: np.asarray(v)[None], ys), r
+                    )
+                    stream_chunks.append(
+                        jax.tree.map(lambda v: jnp.asarray(v)[None], ys)
+                    )
+            tel.record_link_bytes(link, rounds=1,
+                                  factor=self._send_factor(state), step=r)
+        return state, key
 
     # ------------------------------------------------------------------
     def _grad_at_mean(self, xbar: PyTree) -> PyTree:
@@ -303,8 +478,29 @@ class Simulator:
         """Advance ``n_rounds`` communication rounds on-device and return
         ``(state, key)`` — the external hook point for callers interleaving
         training with other work (the serving plane publishes parameter
-        snapshots between rounds: ``repro.serving.ReplicaSet``)."""
-        return self._run_rounds(state, key, n_rounds=int(n_rounds))
+        snapshots between rounds: ``repro.serving.ReplicaSet``).
+
+        With a telemetry hub attached, link-byte counters accumulate here
+        too; with spans enabled the rounds run through the fenced per-phase
+        driver (same math, separate dispatches — see ``_advance_spanned``).
+        """
+        tel = self.telemetry
+        n = int(n_rounds)
+        if tel is not None and tel.spans and self.scenario is None:
+            start = self._rounds_done
+            state, key = self._advance_spanned(
+                state, key, start, start + n, None, None, None
+            )
+            self._rounds_done = start + n
+            return state, key
+        state, key = self._run_rounds(state, key, n_rounds=n)
+        if tel is not None:
+            tel.record_link_bytes(
+                self._link_round_bytes(state), rounds=n,
+                factor=self._send_factor(state),
+            )
+            self._rounds_done += n
+        return state, key
 
     # ------------------------------------------------------------------
     def run(
@@ -331,6 +527,8 @@ class Simulator:
         history: List[Dict[str, float]] = []
         rl = self.round_len
         n_rounds, tail = divmod(num_steps, rl)
+        tel = self.telemetry
+        spans_on = tel is not None and tel.spans
 
         schedule = None
         node_bs = None
@@ -356,9 +554,15 @@ class Simulator:
             stream_chunks: List[Any] = []
 
         def record(steps_done):
-            m = self.evaluate(state)
+            with _tel_span(tel, "eval", step=steps_done):
+                # evaluate() returns host floats — already fenced by float()
+                m = self.evaluate(state)
             m["step"] = steps_done
             history.append(m)
+            if tel is not None:
+                for k, v in m.items():
+                    if k != "step":
+                        tel.gauge(f"eval/{k}", v, step=steps_done)
             if verbose:
                 print(
                     f"  step {steps_done:5d}  "
@@ -379,8 +583,20 @@ class Simulator:
             | ({n_rounds} if n_rounds and eval_every and not tail else set())
         )
         def advance(state, key, start, stop):
+            if spans_on:
+                return self._advance_spanned(
+                    state, key, start, stop,
+                    xs_all if self.scenario is not None else None,
+                    node_bs,
+                    stream_chunks if self.scenario is not None else None,
+                )
             if self.scenario is None:
                 state, key = self._run_rounds(state, key, n_rounds=stop - start)
+                if tel is not None:
+                    tel.record_link_bytes(
+                        self._link_round_bytes(state), rounds=stop - start,
+                        factor=self._send_factor(state), step=stop - 1,
+                    )
             else:
                 xs = tuple(
                     None if a is None else a[start:stop] for a in xs_all
@@ -388,6 +604,21 @@ class Simulator:
                 state, key, ys = self._run_scheduled(state, key, *xs, node_bs)
                 if ys:
                     stream_chunks.append(ys)
+                if tel is not None:
+                    factor = 1.0
+                    if ys:
+                        self._record_stream_chunk(
+                            jax.tree.map(np.asarray, ys), start
+                        )
+                        rate = np.asarray(ys.get("send_rate", np.nan))
+                        if np.isfinite(rate).any():
+                            factor = float(np.nanmean(rate))
+                    elif self._has_event_triggered_channel():
+                        factor = self._send_factor(state)
+                    tel.record_link_bytes(
+                        self._link_round_bytes(state), rounds=stop - start,
+                        factor=factor, step=stop - 1,
+                    )
             return state, key
 
         done = 0
@@ -398,11 +629,15 @@ class Simulator:
         if done < n_rounds:
             state, key = advance(state, key, done, n_rounds)
         if tail:
-            state, key = self._run_local_tail(
-                state, key, n_steps=tail, node_batch_sizes=node_bs
-            )
+            with _tel_span(tel, "local", step=n_rounds) as sp:
+                state, key = self._run_local_tail(
+                    state, key, n_steps=tail, node_batch_sizes=node_bs
+                )
+                sp.fence(state)
             if eval_every:
                 record(num_steps)
+        if tel is not None:
+            tel.record_kernel_launches()
         out = {"state": state, "history": history}
         if self.scenario is not None:
             streams: Dict[str, np.ndarray] = {}

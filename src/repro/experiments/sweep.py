@@ -89,6 +89,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--out", default="runs/sweep")
     p.add_argument("--bench-out", default=None,
                    help="also write a BENCH_*.json record here")
+    p.add_argument("--profile", default=None, metavar="DIR",
+                   help="bracket the whole sweep in jax.profiler.start_trace/"
+                        "stop_trace writing a TensorBoard-loadable trace to DIR")
     return p
 
 
@@ -241,7 +244,13 @@ def run_sharded_cell(args, alg_name: str, scenario, tau: int, omega,
 # --------------------------------------------------------------------------
 def run_sweep(args) -> List[Dict[str, Any]]:
     from ..scenarios import make_scenario
+    from ..telemetry.spans import profile_trace
 
+    with profile_trace(getattr(args, "profile", None)):
+        return _run_sweep_grid(args, make_scenario)
+
+
+def _run_sweep_grid(args, make_scenario) -> List[Dict[str, Any]]:
     algorithms = [a for a in args.algorithms.split(",") if a]
     scenario_names = [s for s in args.scenarios.split(",") if s]
     taus = [int(t) for t in args.taus.split(",") if t]

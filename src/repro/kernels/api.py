@@ -411,7 +411,10 @@ def tree_apply(name: str, *trees: PyTree, scalars: Sequence = (), like=None):
 
         bufs = tuple(cat(t) for t in range(op.n_inputs))
         _count(name, mode)
-        outs = _flat_fn(op, out_dts, block, mode)(scalars, bufs)
+        # named scope: one profiler-visible "repro/fused/<op>" region per
+        # dtype-bucket launch (HLO metadata only; numerics untouched)
+        with jax.named_scope(f"repro/fused/{name}"):
+            outs = _flat_fn(op, out_dts, block, mode)(scalars, bufs)
         off = 0
         for i, sz in zip(idxs, sizes):
             for j in range(op.n_outputs):
@@ -465,7 +468,8 @@ def call(name: str, *tensors, **static):
         op._cache[key] = f
         fn = f
     _count(name, mode)
-    return fn(*tensors)
+    with jax.named_scope(f"repro/fused/{name}"):
+        return fn(*tensors)
 
 
 # --------------------------------------------------- algorithm-layer helpers

@@ -59,6 +59,12 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     p.add_argument("--ckpt-every", type=int, default=0)
+    p.add_argument("--profile", default=None, metavar="DIR",
+                   help="bracket the training loop in jax.profiler.start_trace/"
+                        "stop_trace writing a TensorBoard-loadable trace to DIR")
+    p.add_argument("--telemetry-out", default=None, metavar="FILE",
+                   help="record fenced per-round spans, per-channel link-byte "
+                        "counters and loss gauges to a run-stamped JSONL file")
     args = p.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -102,17 +108,38 @@ def main(argv=None):
         }
 
     ckpt = CheckpointManager(os.path.join(args.out, "ckpt")) if args.out and args.ckpt_every else None
+
+    tel = None
+    link = None
+    if args.telemetry_out:
+        from repro.compression.channels import link_bytes_per_round
+        from repro.telemetry import Telemetry
+
+        tel = Telemetry(config=vars(args))
+        link = link_bytes_per_round(job.algorithm.comm, state.params)
+    from repro.telemetry.spans import profile_trace, span
+
     history = []
     t0 = time.time()
-    for r in range(args.steps):
-        state, metrics = step(state, round_batches())
-        loss = float(metrics["loss"])
-        history.append({"round": r + 1, "loss": loss, "t": round(time.time() - t0, 2)})
-        if (r + 1) % max(1, args.steps // 20) == 0 or r == 0:
-            print(f"[train] round {r+1:4d}/{args.steps}  loss={loss:.4f}  "
-                  f"({(time.time()-t0)/(r+1):.2f}s/round)")
-        if ckpt and (r + 1) % args.ckpt_every == 0:
-            ckpt.save(r + 1, jax.tree.map(np.asarray, state.params), {"loss": loss})
+    with profile_trace(args.profile):
+        for r in range(args.steps):
+            with span(tel, "round", step=r) as sp:
+                state, metrics = step(state, round_batches())
+                sp.fence((state, metrics))
+            loss = float(metrics["loss"])
+            if tel is not None:
+                tel.gauge("train_loss", loss, step=r + 1)
+                tel.record_link_bytes(link, step=r)
+            history.append({"round": r + 1, "loss": loss, "t": round(time.time() - t0, 2)})
+            if (r + 1) % max(1, args.steps // 20) == 0 or r == 0:
+                print(f"[train] round {r+1:4d}/{args.steps}  loss={loss:.4f}  "
+                      f"({(time.time()-t0)/(r+1):.2f}s/round)")
+            if ckpt and (r + 1) % args.ckpt_every == 0:
+                ckpt.save(r + 1, jax.tree.map(np.asarray, state.params), {"loss": loss})
+    if tel is not None:
+        tel.record_kernel_launches()
+        n_rec = tel.export_jsonl(args.telemetry_out)
+        print(f"[train] telemetry: {n_rec} records -> {args.telemetry_out}")
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         with open(os.path.join(args.out, "history.json"), "w") as f:

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from ..compression.base import _wire_entries, compression_error
 from ..core.simulate import node_mean
+from ..telemetry.registry import TRAINING_STREAM_FIELDS
 
 PyTree = Any
 
@@ -62,10 +63,10 @@ __all__ = [
     "make_stream_fn",
 ]
 
-STREAM_FIELDS = (
-    "consensus", "tracking_err", "spectral_gap", "active_nodes",
-    "compression_err", "replica_drift", "staleness", "send_rate",
-)
+# the stream REGISTRY lives in repro.telemetry (the one place stream names
+# are declared, shared with the hub's typed gauges); the pure-jnp functions
+# computing them stay here, scanned on device by the engines
+STREAM_FIELDS = TRAINING_STREAM_FIELDS
 
 
 def masked_consensus(tree: PyTree, active: Optional[jnp.ndarray]) -> jnp.ndarray:

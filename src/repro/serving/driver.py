@@ -77,13 +77,22 @@ class RequestDriver:
     """
 
     def __init__(self, model, *, slots: int, max_len: int, dtype=jnp.float32,
-                 decode_fn=None):
+                 decode_fn=None, telemetry=None, metrics=None):
         if model.cfg.head != "lm":
             raise ValueError(f"{model.cfg.name} has no decode path")
         self.model = model
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.dtype = dtype
+        # telemetry: optional repro.telemetry.Telemetry hub — fenced
+        # serve/admit + serve/decode spans per driver step.  metrics: an
+        # optional ServingMetrics recorder; completed load-test runs land in
+        # its requests_per_sec stream.  Both default off: the raw driver is
+        # the load generator and stays untouched.
+        self.metrics = metrics
+        self.telemetry = telemetry or (
+            metrics.telemetry if metrics is not None else None
+        )
         self._cache_template = model.init_cache(self.slots, self.max_len, dtype=dtype)
 
         raw_decode = decode_fn or (
@@ -148,7 +157,11 @@ class RequestDriver:
     def step(self, params: PyTree) -> int:
         """Advance every in-flight request one token (one device dispatch);
         returns how many requests completed this step."""
-        self._admit()
+        from ..telemetry.spans import span  # lazy: keep import cost off init
+
+        tel = self.telemetry
+        with span(tel, "serve/admit", step=self.steps):
+            self._admit()
         tokens = np.zeros((self.slots, 1), np.int32)
         position = np.zeros((self.slots,), np.int32)
         for s, req in enumerate(self._active):
@@ -159,10 +172,12 @@ class RequestDriver:
             )
             position[s] = req["pos"]
 
-        sampled, self.caches = self._step(
-            params, self.caches, jnp.asarray(tokens), jnp.asarray(position)
-        )
-        sampled = np.asarray(sampled)
+        with span(tel, "serve/decode", step=self.steps):
+            sampled, self.caches = self._step(
+                params, self.caches, jnp.asarray(tokens), jnp.asarray(position)
+            )
+            # np.asarray syncs on the sampled tokens, fencing the span
+            sampled = np.asarray(sampled)
         self.steps += 1
 
         done = 0
@@ -194,6 +209,8 @@ class RequestDriver:
         jax.block_until_ready(jax.tree.leaves(self.caches)[0])
         elapsed = time.perf_counter() - t0
         tokens = int(sum(self.results[i].size for i in ids))
+        if self.metrics is not None:
+            self.metrics.record_requests(completed, tokens, elapsed)
         return {
             "completed": completed,
             "steps": self.steps,

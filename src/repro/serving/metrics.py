@@ -1,4 +1,4 @@
-"""Serving-plane metrics streams.
+"""Serving-plane metrics streams, recorded through the telemetry hub.
 
 The training engines already emit ``staleness`` / ``send_rate`` streams from
 the async channel's wire state (``repro.scenarios.metrics``); the serving
@@ -17,72 +17,111 @@ and adds the two request-facing streams the SLO story needs:
   * ``requests_per_sec`` — completed requests per wall-clock second,
                            sampled per request-driver run.
 
-``ServingMetrics`` is a plain host-side recorder: the jitted publish/decode
-paths stay pure, the recorder consumes their info dicts.
+``ServingMetrics`` keeps its host-side recorder API (the jitted
+publish/decode paths stay pure and hand it info dicts), but since the
+unified telemetry subsystem it is a thin facade over a
+:class:`repro.telemetry.Telemetry` hub: every sample lands in registered
+``serving/*`` streams (gauges, a kbyte counter, a per-replica age vector),
+so serving reports through the same registry as training and sweeps, and
+:meth:`prometheus` renders the SLO / staleness / requests-per-sec gauges as
+a Prometheus text exposition stamped with run metadata.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..telemetry import SERVING_STREAM_FIELDS, StreamSpec, Telemetry
+
 __all__ = ["SERVING_STREAM_FIELDS", "ServingMetrics"]
 
-SERVING_STREAM_FIELDS = (
-    "staleness", "snapshot_age", "send_rate", "published_kbytes",
-    "requests_per_sec",
-)
+#: per-publish scalar gauges mirrored 1:1 into ``serving/<name>`` streams
+_PUBLISH_FIELDS = ("staleness", "snapshot_age", "send_rate")
 
 
 class ServingMetrics:
-    """Host-side per-publish / per-load-run stream recorder."""
+    """Per-publish / per-load-run stream recorder over a telemetry hub.
 
-    def __init__(self, bounds):
+    ``telemetry`` — attach an existing hub (so a co-trained Simulator and
+    its serving plane share one registry/exporter); by default each recorder
+    owns a private hub (spans off — serving timing is the request driver's
+    concern).
+    """
+
+    def __init__(self, bounds, telemetry: Optional[Telemetry] = None):
         self.bounds = tuple(int(b) for b in bounds)
-        self._publish_rows: List[Dict[str, float]] = []
-        self._ages: List[np.ndarray] = []          # (R,) per publish
-        self._request_rows: List[Dict[str, float]] = []
+        if telemetry is None:
+            telemetry = Telemetry(
+                config={"serving_bounds": self.bounds}, spans=False
+            )
+        self.telemetry = telemetry
+        for f in _PUBLISH_FIELDS:
+            telemetry.register_stream(StreamSpec(
+                f"serving/{f}", kind="gauge",
+                doc=f"serving-plane per-publish {f} (repro.serving.metrics)",
+            ))
+        telemetry.register_stream(StreamSpec(
+            "serving/published_kbytes", kind="counter", unit="kB",
+            doc="analytic wire kbytes published to the replica set",
+        ))
+        telemetry.register_stream(StreamSpec(
+            "serving/replica_age", kind="gauge", axis="replica",
+            doc="per-replica snapshot age at each publish",
+        ))
+        telemetry.register_stream(StreamSpec(
+            "serving/requests_per_sec", kind="gauge",
+            doc="completed requests per second, per load-test run",
+        ))
+        telemetry.register_stream(StreamSpec(
+            "serving/tokens_per_sec", kind="gauge",
+            doc="generated tokens per second, per load-test run",
+        ))
+        self._publishes = 0
+        self._runs = 0
 
     # -- publish side -------------------------------------------------------
     def record_publish(self, info) -> None:
         """Consume one :meth:`SnapshotPublisher.publish` info dict."""
+        tel = self.telemetry
         age = np.asarray(info["age"])
         sent = np.asarray(info["sent"])
-        self._ages.append(age)
-        self._publish_rows.append({
-            "staleness": float(age.mean()),
-            "snapshot_age": float(age.max()),
-            "send_rate": float(sent.mean()),
-            "published_kbytes": float(np.asarray(info["bytes"]).sum()) / 1e3,
-        })
+        p = self._publishes
+        tel.record("serving/staleness", float(age.mean()), step=p)
+        tel.record("serving/snapshot_age", float(age.max()), step=p)
+        tel.record("serving/send_rate", float(sent.mean()), step=p)
+        tel.record("serving/published_kbytes",
+                   float(np.asarray(info["bytes"]).sum()) / 1e3, step=p)
+        tel.record("serving/replica_age", age.astype(np.float64), step=p)
+        self._publishes += 1
 
     # -- request side -------------------------------------------------------
     def record_requests(self, completed: int, tokens: int, elapsed_s: float) -> None:
-        self._request_rows.append({
-            "requests_per_sec": completed / max(elapsed_s, 1e-9),
-            "tokens_per_sec": tokens / max(elapsed_s, 1e-9),
-            "completed": float(completed),
-            "elapsed_s": float(elapsed_s),
-        })
+        tel = self.telemetry
+        r = self._runs
+        tel.record("serving/requests_per_sec",
+                   completed / max(elapsed_s, 1e-9), step=r)
+        tel.record("serving/tokens_per_sec",
+                   tokens / max(elapsed_s, 1e-9), step=r)
+        self._runs += 1
 
     # -- views --------------------------------------------------------------
     def streams(self) -> Dict[str, np.ndarray]:
         """Dense per-publish streams (shape (P,) each) plus the per-run
         ``requests_per_sec`` samples."""
-        out = {
-            f: np.asarray([r[f] for r in self._publish_rows], np.float64)
-            for f in ("staleness", "snapshot_age", "send_rate", "published_kbytes")
-        }
-        out["requests_per_sec"] = np.asarray(
-            [r["requests_per_sec"] for r in self._request_rows], np.float64
-        )
+        tel = self.telemetry
+        out = {}
+        for f in _PUBLISH_FIELDS + ("published_kbytes", "requests_per_sec"):
+            _, vals = tel.series(f"serving/{f}")
+            out[f] = np.asarray(vals, np.float64)
         return out
 
     def max_age(self) -> np.ndarray:
         """Per-replica max observed age over all publishes (R,)."""
-        if not self._ages:
+        _, ages = self.telemetry.series("serving/replica_age")
+        if len(ages) == 0:
             return np.zeros((len(self.bounds),), np.int64)
-        return np.stack(self._ages).max(axis=0)
+        return np.asarray(ages).max(axis=0).astype(np.int64)
 
     def slo_report(self) -> List[Dict[str, float]]:
         """Per-replica SLO verdict: age must stay STRICTLY below the bound."""
@@ -100,7 +139,7 @@ class ServingMetrics:
         def _m(x):
             return float(np.mean(x)) if len(x) else float("nan")
         return {
-            "publishes": len(self._publish_rows),
+            "publishes": self._publishes,
             "staleness": _m(s["staleness"]),
             "snapshot_age_max": float(s["snapshot_age"].max()) if len(s["snapshot_age"]) else float("nan"),
             "send_rate": _m(s["send_rate"]),
@@ -108,3 +147,18 @@ class ServingMetrics:
             "requests_per_sec": _m(s["requests_per_sec"]),
             "slo_ok": self.slo_ok(),
         }
+
+    def prometheus(self, prefix: str = "repro") -> str:
+        """Prometheus text exposition of the serving gauges (latest values),
+        the cumulative publish-kbyte counter, per-replica SLO verdicts and
+        the run-metadata info stamp."""
+        tel = self.telemetry
+        tel.gauge("serving/slo_ok", 1.0 if self.slo_ok() else 0.0)
+        worst = self.max_age().astype(np.float64)
+        if "serving/max_age" not in tel.streams:
+            tel.register_stream(StreamSpec(
+                "serving/max_age", kind="gauge", axis="replica",
+                doc="per-replica max observed snapshot age (SLO: < bound)",
+            ))
+        tel.record("serving/max_age", worst)
+        return tel.prometheus(prefix)

@@ -54,12 +54,16 @@ class ReplicaSet:
         threshold: Optional[float] = None,
         publisher: Optional[SnapshotPublisher] = None,
         key: Optional[jax.Array] = None,
+        telemetry=None,
     ):
         self.publisher = publisher or SnapshotPublisher(
             codec=codec, bounds=bounds, threshold=threshold
         )
         self.state: SnapshotState = self.publisher.init(params, key=key)
-        self.metrics = ServingMetrics(self.publisher.bounds)
+        # telemetry: an optional shared repro.telemetry.Telemetry hub, so a
+        # co-trained Simulator and its replica set report through (and
+        # export from) the same registry
+        self.metrics = ServingMetrics(self.publisher.bounds, telemetry=telemetry)
         self._publish = jax.jit(self.publisher.publish)
         self._bytes = np.zeros((self.publisher.n_replicas,), np.float64)
 

@@ -1,0 +1,42 @@
+"""Unified telemetry: one registry, phase spans, run-stamped exporters.
+
+    from repro.telemetry import Telemetry, span, profile_trace
+
+    hub = Telemetry(config={"algorithm": "dse_mvr", "tau": 4})
+    sim = Simulator(alg, topo, loss, data, batch_size=8, telemetry=hub)
+    state, key = sim.run(state, key, n_rounds=32)
+    hub.export_jsonl("run.jsonl")          # spans + streams + link bytes
+    print(hub.prometheus())                # text exposition
+
+See ``registry.py`` (the hub + typed stream registry), ``spans.py``
+(fenced phase timers, ``--profile`` trace bracketing) and ``export.py``
+(JSONL sink, Prometheus text, run metadata).
+"""
+from .registry import (
+    SERVING_STREAM_FIELDS,
+    STREAM_AXES,
+    STREAM_KINDS,
+    TRAINING_STREAM_FIELDS,
+    StreamSpec,
+    Telemetry,
+    register_training_streams,
+)
+from .export import config_hash, prometheus_text, run_metadata, write_jsonl
+from .spans import fence, profile_trace, span
+
+__all__ = [
+    "Telemetry",
+    "StreamSpec",
+    "STREAM_KINDS",
+    "STREAM_AXES",
+    "TRAINING_STREAM_FIELDS",
+    "SERVING_STREAM_FIELDS",
+    "register_training_streams",
+    "run_metadata",
+    "config_hash",
+    "write_jsonl",
+    "prometheus_text",
+    "span",
+    "profile_trace",
+    "fence",
+]

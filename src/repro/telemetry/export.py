@@ -1,0 +1,150 @@
+"""Run-stamped exporters: JSONL event sink + Prometheus text exposition.
+
+Every exported record carries the hub's run metadata (git SHA, jax version,
+device kind, config hash) so any line of any artifact can be traced back to
+the exact code + config + hardware that produced it — the property the
+serving plane's SLO reports and the sweep grids were missing.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import subprocess
+from typing import Any, Dict, Optional
+
+__all__ = ["run_metadata", "config_hash", "write_jsonl", "prometheus_text"]
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def config_hash(config: Any) -> str:
+    """Stable short hash of any JSON-able config (non-JSON-able values fall
+    back to ``repr`` so dataclasses/argparse namespaces hash too)."""
+    blob = json.dumps(config, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def run_metadata(config: Any = None) -> Dict[str, str]:
+    """The stamp on every exported record: where (device), what (git SHA,
+    jax version) and with which knobs (config hash) this run happened."""
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "device_kind": f"{dev.platform}:{getattr(dev, 'device_kind', '?')}",
+        "config_hash": config_hash(config),
+    }
+
+
+def write_jsonl(hub, path: str) -> int:
+    """Dump a hub to a JSONL event stream and return the record count.
+
+    Line 1 is a ``meta`` record; then every raw event (phase spans, in
+    emission order) and every stream sample, each stamped with the run
+    metadata under ``"run"``.
+    """
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
+    n = 0
+    with open(path, "w") as f:
+        def emit(rec: Dict[str, Any]) -> None:
+            nonlocal n
+            rec["run"] = hub.meta
+            f.write(json.dumps(rec) + "\n")
+            n += 1
+
+        emit({"event": "meta", "streams": list(hub.streams)})
+        for ev in hub.events:
+            emit(dict(ev))
+        for name, entry in hub.collect().items():
+            spec = entry["spec"]
+            for label, series in entry["series"].items():
+                for step, value in zip(series["steps"], series["values"]):
+                    emit({
+                        "event": "sample", "stream": name,
+                        "kind": spec["kind"], "axis": spec["axis"],
+                        "label": label, "step": step, "value": value,
+                    })
+                if spec["kind"] == "counter":
+                    emit({
+                        "event": "total", "stream": name, "label": label,
+                        "total": series["total"],
+                    })
+    return n
+
+
+def _prom_name(name: str) -> str:
+    return re.sub(r"[^a-zA-Z0-9_]", "_", name)
+
+
+def prometheus_text(hub, prefix: str = "repro") -> str:
+    """Render the hub as Prometheus text exposition format v0.0.4.
+
+    gauges -> latest sample; counters -> ``_total``; histograms ->
+    ``_count``/``_sum``.  Per-node/replica vector samples are expanded into
+    an ``index`` label so per-replica staleness/age gauges stay addressable.
+    """
+    import numpy as np
+
+    lines = []
+    run_labels = ",".join(
+        f'{_prom_name(k)}="{v}"' for k, v in sorted(hub.meta.items())
+    )
+    lines.append(f"# HELP {prefix}_run_info run metadata stamp")
+    lines.append(f"# TYPE {prefix}_run_info gauge")
+    lines.append(f"{prefix}_run_info{{{run_labels}}} 1")
+
+    def fmt(metric: str, value: float, label: str = "", index=None) -> str:
+        parts = []
+        if label:
+            parts.append(f'label="{label}"')
+        if index is not None:
+            parts.append(f'index="{index}"')
+        body = "{" + ",".join(parts) + "}" if parts else ""
+        return f"{metric}{body} {float(value):g}"
+
+    for name, entry in hub.collect().items():
+        spec = entry["spec"]
+        if not entry["series"]:
+            continue
+        metric = f"{prefix}_{_prom_name(name)}"
+        kind = spec["kind"]
+        prom_type = {"gauge": "gauge", "counter": "counter",
+                     "histogram": "summary"}[kind]
+        suffix = "_total" if kind == "counter" else ""
+        if spec["doc"]:
+            lines.append(f"# HELP {metric}{suffix} {spec['doc']}")
+        lines.append(f"# TYPE {metric}{suffix} {prom_type}")
+        for label, series in entry["series"].items():
+            if kind == "counter":
+                lines.append(fmt(metric + "_total", series["total"], label))
+            elif kind == "histogram":
+                summ = series.get("summary", {"count": 0})
+                lines.append(fmt(metric + "_count", summ.get("count", 0), label))
+                lines.append(fmt(metric + "_sum", summ.get("sum", 0.0), label))
+            else:
+                last = series["values"][-1] if series["values"] else None
+                if last is None:
+                    continue
+                arr = np.asarray(last)
+                if arr.ndim == 0:
+                    lines.append(fmt(metric, float(arr), label))
+                else:
+                    for i, v in enumerate(arr.ravel()):
+                        lines.append(fmt(metric, float(v), label, index=i))
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,86 @@
+"""Phase spans: fenced host-side timers + device-trace annotations.
+
+JAX dispatch is asynchronous — an unfenced ``time.time()`` around a jitted
+call measures dispatch, not work.  A :func:`span` is the ONE honest timer:
+it opens a ``jax.profiler.TraceAnnotation`` (so the phase shows up in a
+profiler trace captured with :func:`profile_trace`), hands the caller a
+handle whose ``fence(tree)`` calls ``jax.block_until_ready`` on the phase's
+outputs, and records the fenced duration into the hub's ``span_seconds``
+histogram (labeled by phase) plus a first-class JSONL ``span`` event.
+
+Usage::
+
+    with span(hub, "gossip", step=r) as sp:
+        state, key = comm_phase(state, key)
+        sp.fence(state)
+
+With ``hub`` ``None`` (or spans disabled on the hub) the context manager is
+a complete no-op — no annotation, no fence, no timing — so un-instrumented
+code paths stay exactly as fast and exactly as traced as before.
+
+For annotations INSIDE jitted code (where host timers cannot reach) the
+engines use ``jax.named_scope`` directly at the trace sites (round executor
+phases, ``ChannelSession.mix`` sends, the bucketed kernel launcher); those
+only attach metadata to the emitted HLO and never change numerics.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Iterator, Optional
+
+import jax
+
+__all__ = ["span", "profile_trace", "fence"]
+
+
+def fence(tree) -> None:
+    """Block until every array in ``tree`` is ready (non-arrays ignored)."""
+    jax.block_until_ready(tree)
+
+
+class _SpanHandle:
+    """Handle yielded by :func:`span`; ``fence`` outputs before span close."""
+
+    __slots__ = ("active",)
+
+    def __init__(self, active: bool):
+        self.active = active
+
+    def fence(self, tree) -> None:
+        if self.active:
+            jax.block_until_ready(tree)
+
+
+_NULL_HANDLE = _SpanHandle(active=False)
+
+
+@contextlib.contextmanager
+def span(hub, phase: str, *, step: Optional[int] = None) -> Iterator[_SpanHandle]:
+    """Time one phase, fenced; no-op when ``hub`` is None or spans are off."""
+    if hub is None or not getattr(hub, "spans", False):
+        yield _NULL_HANDLE
+        return
+    with jax.profiler.TraceAnnotation(f"repro/{phase}"):
+        t0 = time.perf_counter()
+        yield _SpanHandle(active=True)
+        dt = time.perf_counter() - t0
+    hub.record("span_seconds", dt, step=step, label=phase)
+    hub.record_event(
+        {"event": "span", "phase": phase, "step": step, "seconds": dt}
+    )
+
+
+@contextlib.contextmanager
+def profile_trace(trace_dir: Optional[str]) -> Iterator[None]:
+    """Bracket a block in ``jax.profiler.start_trace``/``stop_trace`` when
+    ``trace_dir`` is set; plain passthrough when it is None/empty.  Backs the
+    ``--profile DIR`` flags on the train CLI, sweep and benchmark harness."""
+    if not trace_dir:
+        yield
+        return
+    jax.profiler.start_trace(trace_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

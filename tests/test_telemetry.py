@@ -1,0 +1,309 @@
+"""Unified telemetry subsystem tests.
+
+  * hub: typed stream registry roundtrip, conflict detection, counter
+    totals, strict record();
+  * exporters: JSONL run-metadata stamping on EVERY record, Prometheus text
+    exposition shape;
+  * spans: disabled hubs are exact no-ops; enabled Simulator runs emit
+    local/gossip/eval span durations and per-channel link-byte counters
+    while staying BIT-IDENTICAL to untelemetered runs (both the static and
+    the scheduled executor);
+  * serving: ``ServingMetrics`` over a shared hub keeps its recorder API
+    and renders the SLO gauges as Prometheus text;
+  * metrics edge cases: staleness / send_rate / replica_drift are NaN
+    without async/CHOCO wire state; masked_consensus of an all-inactive
+    round is 0;
+  * kernels: trace-time launch counters surface through the hub as the
+    ``kernel_launches`` counter stream — one launch per dtype bucket per
+    step.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Simulator, make_algorithm, ring, NodeData
+from repro.telemetry import (
+    StreamSpec,
+    Telemetry,
+    config_hash,
+    prometheus_text,
+    run_metadata,
+    write_jsonl,
+)
+from repro.telemetry.spans import span
+
+N, DIM = 4, 6
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    data = NodeData(
+        x=rng.normal(size=(N, 12, DIM)).astype(np.float32),
+        y=rng.normal(size=(N, 12)).astype(np.float32),
+    )
+
+    def loss(p, batch):
+        xb, yb = batch
+        return jnp.mean((xb @ p["w"] - yb) ** 2)
+
+    params = {"w": jnp.zeros((DIM,), jnp.float32)}
+    return data, loss, params
+
+
+def _bit_identical(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ---------------------------------------------------------------- registry
+def test_hub_register_record_collect_roundtrip():
+    hub = Telemetry(config={"a": 1}, spans=False)
+    hub.register_stream(StreamSpec("loss", kind="gauge", doc="train loss"))
+    hub.register_stream(StreamSpec("sent", kind="counter", unit="B"))
+    for s, v in enumerate([3.0, 2.0, 1.0]):
+        hub.record("loss", v, step=s)
+    hub.record("sent", 100.0, step=0)
+    hub.record("sent", 50.0, step=1)
+
+    steps, vals = hub.series("loss")
+    assert steps.tolist() == [0, 1, 2] and vals.tolist() == [3.0, 2.0, 1.0]
+    assert hub.total("sent") == 150.0
+    snap = hub.collect()
+    assert snap["loss"]["spec"]["kind"] == "gauge"
+    assert snap["sent"]["series"][""]["total"] == 150.0
+    # built-ins are always present
+    assert {"span_seconds", "link_bytes", "kernel_launches"} <= set(hub.streams)
+
+
+def test_hub_conflicting_registration_and_unknown_stream():
+    hub = Telemetry(spans=False)
+    hub.register_stream(StreamSpec("x", kind="gauge"))
+    hub.register_stream(StreamSpec("x", kind="gauge"))  # identical: idempotent
+    with pytest.raises(ValueError):
+        hub.register_stream(StreamSpec("x", kind="counter"))
+    with pytest.raises((KeyError, ValueError)):
+        hub.record("never_registered", 1.0)
+
+
+def test_stream_spec_validation():
+    with pytest.raises(ValueError):
+        StreamSpec("bad", kind="timer")
+    with pytest.raises(ValueError):
+        StreamSpec("bad", kind="gauge", axis="galaxy")
+
+
+# --------------------------------------------------------------- exporters
+def test_jsonl_export_stamps_every_record(tmp_path):
+    hub = Telemetry(config={"lr": 0.1}, spans=True)
+    hub.gauge("loss", 1.5, step=0)
+    with span(hub, "local", step=0):
+        pass
+    path = tmp_path / "run.jsonl"
+    n = write_jsonl(hub, str(path))
+    recs = [json.loads(line) for line in open(path)]
+    assert len(recs) == n and n > 0
+    for r in recs:
+        meta = r["run"]
+        for k in ("git_sha", "jax_version", "device_kind", "config_hash"):
+            assert meta[k]
+    assert meta["jax_version"] == jax.__version__
+    assert meta["config_hash"] == config_hash({"lr": 0.1})
+    kinds = {r["event"] for r in recs}
+    assert {"meta", "span", "sample"} <= kinds
+
+
+def test_run_metadata_and_config_hash_stability():
+    m = run_metadata({"b": 2, "a": 1})
+    assert m["config_hash"] == config_hash({"a": 1, "b": 2})  # order-free
+    assert config_hash({"a": 1}) != config_hash({"a": 2})
+    assert ":" in m["device_kind"]
+
+
+def test_prometheus_exposition_shape():
+    hub = Telemetry(config={}, spans=False)
+    hub.register_stream(StreamSpec("rps", kind="gauge", doc="req/s"))
+    hub.register_stream(StreamSpec("bytes", kind="counter"))
+    hub.record("rps", 12.5)
+    hub.record("bytes", 1024.0)
+    text = prometheus_text(hub, prefix="repro")
+    assert "repro_run_info{" in text and 'jax_version="' in text
+    assert "# TYPE repro_rps gauge" in text
+    assert "repro_rps 12.5" in text
+    assert "repro_bytes_total 1024" in text
+
+
+# ------------------------------------------------------------------- spans
+def test_span_noop_when_disabled():
+    with span(None, "local") as sp:
+        sp.fence(jnp.ones(3))            # must not blow up
+    hub = Telemetry(spans=False)
+    with span(hub, "local"):
+        pass
+    assert hub.labels("span_seconds") == ()
+    assert hub.events == []
+
+
+def test_simulator_spans_bit_identical_static():
+    data, loss, params = _problem()
+    alg = make_algorithm("dse_mvr", lr=0.05, alpha=0.1, tau=3, channel="choco")
+
+    out0 = Simulator(alg, ring(N), loss, data, batch_size=4).run(
+        params, jax.random.key(1), num_steps=12, eval_every=6
+    )
+    hub = Telemetry(config={"test": "static"}, spans=True)
+    out1 = Simulator(alg, ring(N), loss, data, batch_size=4, telemetry=hub).run(
+        params, jax.random.key(1), num_steps=12, eval_every=6
+    )
+    assert _bit_identical(out0["state"].params, out1["state"].params)
+    assert {"local", "gossip", "eval"} <= set(hub.labels("span_seconds"))
+    # per-channel cumulative link bytes: both CHOCO'd buffers, > 0
+    labels = hub.labels("link_bytes")
+    assert any(l.endswith("/choco") for l in labels)
+    assert all(hub.total("link_bytes", l) > 0 for l in labels)
+
+
+def test_simulator_spans_bit_identical_scheduled():
+    from repro.scenarios import make_scenario
+
+    data, loss, params = _problem()
+    alg = make_algorithm("dse_mvr", lr=0.05, alpha=0.1, tau=3)
+
+    def run(telemetry):
+        sim = Simulator(
+            alg, None, loss, data, batch_size=4,
+            scenario=make_scenario("dropout_ring", seed=0), telemetry=telemetry,
+        )
+        return sim.run(params, jax.random.key(2), num_steps=12, eval_every=6)
+
+    out0 = run(None)
+    hub = Telemetry(config={"test": "sched"}, spans=True)
+    out1 = run(hub)
+    assert _bit_identical(out0["state"].params, out1["state"].params)
+    # the scheduled spanned driver also streams the on-device metrics
+    for k in ("consensus", "spectral_gap", "active_nodes"):
+        np.testing.assert_allclose(
+            out1["streams"][k], out0["streams"][k], rtol=1e-6
+        )
+        assert len(hub.series(k)[1]) == len(out0["streams"][k])
+    assert {"local", "gossip"} <= set(hub.labels("span_seconds"))
+
+
+def test_telemetry_off_uses_scanned_path():
+    """spans=False must leave the engine on the scanned executor (no
+    per-round host loop): the hub records counters but no span samples."""
+    data, loss, params = _problem()
+    alg = make_algorithm("dse_mvr", lr=0.05, tau=2)
+    hub = Telemetry(spans=False)
+    Simulator(alg, ring(N), loss, data, batch_size=4, telemetry=hub).run(
+        params, jax.random.key(1), num_steps=8, eval_every=8
+    )
+    assert hub.labels("span_seconds") == ()
+    assert all(hub.total("link_bytes", l) > 0 for l in hub.labels("link_bytes"))
+
+
+# ----------------------------------------------------------------- serving
+def test_serving_metrics_share_hub_and_prometheus():
+    from repro.serving.metrics import ServingMetrics
+
+    hub = Telemetry(config={"serving": True}, spans=False)
+    sm = ServingMetrics(bounds=(1, 2), telemetry=hub)
+    for p in range(3):
+        sm.record_publish({
+            "age": np.array([0, p % 2]),
+            "sent": np.array([1.0, 1.0 if p % 2 == 0 else 0.0]),
+            "bytes": np.array([1000.0, 500.0]),
+        })
+    sm.record_requests(completed=4, tokens=64, elapsed_s=2.0)
+
+    s = sm.streams()
+    assert len(s["staleness"]) == 3
+    assert s["requests_per_sec"].tolist() == [2.0]
+    assert sm.slo_ok()
+    text = sm.prometheus()
+    assert "repro_serving_slo_ok 1" in text
+    assert "repro_serving_staleness" in text
+    assert "repro_serving_requests_per_sec 2" in text
+    assert "repro_run_info{" in text
+    # training + serving streams coexist in ONE registry
+    hub.gauge("train_loss", 0.5)
+    assert "serving/staleness" in hub.streams and "train_loss" in hub.streams
+
+
+# ------------------------------------------------------- metrics edge cases
+def test_streams_nan_without_channel_state():
+    from repro.scenarios.metrics import replica_drift, send_rate, staleness
+
+    data, loss, params = _problem()
+    alg = make_algorithm("dse_mvr", lr=0.05, tau=2)  # sync channel: no wire
+    sim = Simulator(alg, ring(N), loss, data, batch_size=4)
+    state = sim.init_state(params, jax.random.key(0))
+    assert np.isnan(float(staleness(state)))
+    assert np.isnan(float(send_rate(state)))
+    assert np.isnan(float(replica_drift(state, ("params",))))
+
+
+def test_masked_consensus_all_inactive_round():
+    from repro.scenarios.metrics import masked_consensus
+
+    tree = {"w": jnp.arange(12.0).reshape(N, 3)}
+    none_active = jnp.zeros((N,), jnp.float32)
+    assert float(masked_consensus(tree, none_active)) == 0.0
+    # sanity: with everyone active the same tree has spread
+    assert float(masked_consensus(tree, None)) > 0.0
+
+
+# ----------------------------------------------------------------- kernels
+def test_kernel_launch_counter_stream_one_per_dtype_bucket():
+    from repro.kernels import api
+
+    key = jax.random.key(0)
+    f32 = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (32,))
+           for i in range(3)}
+    mixed = {**f32, "bf": jnp.ones((17,), jnp.bfloat16)}
+    trees = [mixed, mixed, mixed]
+
+    hub = Telemetry(spans=False)
+    api.reset_counters()
+    with api.dispatch_mode("interpret"):
+        api.tree_apply("add_sub", *trees)             # step 1: 2 dtype buckets
+    delta = hub.record_kernel_launches(step=0)
+    assert delta == {"add_sub": 2}
+
+    with api.dispatch_mode("interpret"):
+        api.tree_apply("add_sub", *trees)             # step 2: 2 more
+    delta = hub.record_kernel_launches(step=1)
+    assert delta == {"add_sub": 2}
+    assert hub.total("kernel_launches", "add_sub") == 4.0
+    # a re-fold with no new launches records nothing
+    assert hub.record_kernel_launches(step=2) == {}
+
+
+def test_simulator_folds_kernel_launches():
+    from repro.kernels import api
+
+    data, loss, params = _problem()
+    alg = make_algorithm("dse_mvr", lr=0.05, tau=2, use_fused=True)
+    hub = Telemetry(spans=False)
+    api.reset_counters()
+    with api.dispatch_mode("interpret"):
+        Simulator(alg, ring(N), loss, data, batch_size=4, telemetry=hub).run(
+            params, jax.random.key(1), num_steps=4, eval_every=4
+        )
+    labels = hub.labels("kernel_launches")
+    assert labels and sum(hub.total("kernel_launches", l) for l in labels) > 0
+
+
+# -------------------------------------------------------------- benchmarks
+def test_timed_helper_fences():
+    from benchmarks.common import timed
+
+    out, dt = timed(lambda x: (x * 2).sum(), jnp.ones((64, 64)))
+    assert float(out) == 2 * 64 * 64 and dt >= 0.0
+    # non-array outputs pass through block_until_ready untouched
+    out, _ = timed(lambda: {"a": jnp.ones(3), "n": 7})
+    assert out["n"] == 7
