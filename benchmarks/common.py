@@ -124,3 +124,20 @@ def run_method(
         "consensus": final["consensus"],
         "wall_s": wall,
     }
+
+
+_RUN_STAMP = None
+
+
+def run_stamp() -> Dict[str, str]:
+    """Cached run-metadata stamp — the single source of truth every bench
+    writer puts under ``"run"`` in its committed BENCH_*.json.  Wraps
+    ``repro.telemetry.export.run_metadata`` (git SHA, jax version, device
+    kind, pid) and memoizes it so one ``benchmarks.run`` invocation stamps
+    every result file identically."""
+    global _RUN_STAMP
+    if _RUN_STAMP is None:
+        from repro.telemetry.export import run_metadata
+
+        _RUN_STAMP = run_metadata()
+    return _RUN_STAMP

@@ -1,0 +1,125 @@
+"""Elastic-runtime bench: rounds/sec and resync latency over real processes.
+
+Each cell of the grid ``n_processes x scenario`` launches the multi-host
+elastic runtime (``repro.runtime.launch``) — coordinator in this process,
+workers as real OS children — on a small ``mlp_blobs`` DSE-MVR run and
+measures:
+
+  * ``rounds_per_sec`` / ``round_s_mean`` — steady-state throughput of the
+    coordinator round protocol (contrib -> gather -> done over TCP);
+  * ``resync_s`` — wall seconds from RESYNC send to resync_ok for every
+    rejoin (checkpoint bundle + ChannelState restore on the fresh worker);
+  * ``bit_identical`` — the elastic trajectory replayed through the
+    single-process ``Simulator`` with the OBSERVED membership trace
+    (``RecordedFaults`` via ``simulate_reference``) must match the final
+    wire leaves bit-for-bit, faults and all.
+
+Scenarios:
+
+  * ``no_fault``       — fixed membership, every node active every round;
+  * ``dropout_rejoin`` — a worker is SIGKILLed mid-run and a replacement
+    process rejoins two rounds later (with one process the kill and rejoin
+    land on the same round boundary: restart-the-world resync);
+  * ``straggler``      — one worker really sleeps inside a round; the round
+    time shows it, the numerics don't move (rounds are synchronous).
+
+-> benchmarks/results/BENCH_elastic.json  (rows under "rows", stamped with
+   benchmarks.common.run_stamp() under "run")
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PROCS = (1, 2, 4)
+SCENARIOS = ("no_fault", "dropout_rejoin", "straggler")
+SLEEP_S = 0.2
+
+
+def _config(rounds: int):
+    from repro.runtime import RuntimeConfig
+
+    return RuntimeConfig(
+        problem="mlp_blobs", algorithm="dse_mvr", n_nodes=4,
+        n_rounds=rounds, batch_size=4, seed=0,
+    )
+
+
+def _plan(scenario: str, n_procs: int, rounds: int):
+    from repro.runtime.chaos import ChaosEvent
+
+    if scenario == "no_fault":
+        return ()
+    if scenario == "straggler":
+        return (ChaosEvent(round=1, action="sleep", worker=0, seconds=SLEEP_S),)
+    victim = n_procs - 1
+    rejoin_at = 1 if n_procs == 1 else min(3, rounds - 1)
+    return (ChaosEvent(round=1, action="kill", worker=victim),
+            ChaosEvent(round=rejoin_at, action="rejoin", worker=victim))
+
+
+def run(rounds: int = 6, procs=PROCS, scenarios=SCENARIOS):
+    import numpy as np
+
+    from repro.runtime import launch, simulate_reference
+    from repro.runtime.replay import leaves_equal
+
+    cfg = _config(rounds)
+    rows = []
+    for n_procs in procs:
+        for scenario in scenarios:
+            res = launch(cfg, n_procs, plan=_plan(scenario, n_procs, rounds))
+            ref = simulate_reference(cfg, res.active_log)
+            ok, bad = leaves_equal(res.final_leaves, ref["wire_leaves"])
+            assert ok, (
+                f"elastic/{n_procs}p/{scenario}: {bad} leaves diverged from "
+                "the RecordedFaults replay"
+            )
+            if scenario == "dropout_rejoin":
+                assert res.resync_seconds, "rejoin ran but no resync recorded"
+            row = {
+                "bench": "elastic",
+                "name": f"elastic/{n_procs}p/{scenario}",
+                "scenario": scenario,
+                "n_processes": n_procs,
+                "n_nodes": cfg.n_nodes,
+                "rounds": rounds,
+                "rounds_per_sec": round(res.rounds_per_sec, 3),
+                "round_s_mean": round(float(np.mean(res.round_seconds)), 4),
+                "wall_s": round(res.wall_s, 3),
+                "n_resyncs": len(res.resync_seconds),
+                "resync_s": [round(s, 4) for s in res.resync_seconds],
+                "final_epoch": res.epochs[-1],
+                "dark_node_rounds": int((~res.active_log).sum()),
+                "bit_identical": bool(ok),
+            }
+            if scenario == "straggler":
+                row["straggler_round_s"] = round(res.round_seconds[1], 4)
+                assert res.round_seconds[1] >= SLEEP_S, (
+                    "straggler sleep did not show up in the round time"
+                )
+            rows.append(row)
+            print(f"[elastic] {row['name']}: {row['rounds_per_sec']} rounds/s "
+                  f"resyncs={row['n_resyncs']} epoch={row['final_epoch']} "
+                  f"bit_identical={row['bit_identical']}")
+    return rows
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import run_stamp
+
+    rows = run(rounds=4 if smoke else 6, procs=(1, 2) if smoke else PROCS)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/BENCH_elastic.json", "w") as f:
+        json.dump({"run": run_stamp(), "rows": rows}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced grid + rounds (CI runtime-smoke job)")
+    args = p.parse_args()
+    for r in main(smoke=args.smoke):
+        print(f"{r['name']},{r['rounds_per_sec']},resync_s={r['resync_s']}")

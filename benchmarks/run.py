@@ -30,7 +30,7 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry,elastic")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
     p.add_argument("--smoke", action="store_true",
                    help="alias for --fast; CI smoke jobs use this spelling")
@@ -106,6 +106,11 @@ def _run_selected(only, args):
     if "telemetry" in only:
         from . import telemetry_bench
         rows = telemetry_bench.main(smoke=args.fast)
+        all_rows += rows
+        _csv(rows)
+    if "elastic" in only:
+        from . import elastic_bench
+        rows = elastic_bench.main(smoke=args.fast)
         all_rows += rows
         _csv(rows)
 

@@ -1,4 +1,8 @@
 """Pytree checkpointing (msgpack + raw numpy buffers, no external deps)."""
 from .checkpoint import save_checkpoint, load_checkpoint, latest_step, CheckpointManager
+from .resync import ResyncStore, save_resync_bundle, load_resync_bundle
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager",
+    "ResyncStore", "save_resync_bundle", "load_resync_bundle",
+]

@@ -6,6 +6,17 @@ per iteration, checkpointing, metrics logging.
 
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
       --steps 100 --tau 4 --algorithm dse_mvr --out /tmp/run1
+
+Elastic multi-process mode (``repro.runtime``): ``--num-processes N`` runs
+the SAME decentralized rounds across N real OS processes with coordinator-
+driven membership (kill a worker and it drops out of W_t; restart it and it
+resyncs through the checkpoint bundle):
+
+  PYTHONPATH=src python -m repro.launch.train --num-processes 4 \
+      --problem lm --steps 20 --tau 4 --algorithm dse_mvr
+
+``--coordinator HOST:PORT --process-id I`` instead runs ONE worker role
+joining an external coordinator (the multi-host path: one command per box).
 """
 from __future__ import annotations
 
@@ -34,6 +45,48 @@ def make_mesh_for_devices():
     data = max(1, n // 2)
     model = n // data
     return make_test_mesh((data, model), ("data", "model"))
+
+
+def _main_elastic(args):
+    """--num-processes path: coordinator here, workers as real processes."""
+    from repro.runtime import RuntimeConfig, launch
+
+    cfg = RuntimeConfig(
+        problem=args.problem,
+        algorithm=args.algorithm,
+        hyper=(
+            ("lr", args.lr), ("tau", args.tau), ("alpha", args.alpha),
+            ("compression", args.compression), ("channel", args.channel),
+        ),
+        n_nodes=args.n_nodes,
+        n_rounds=args.steps,
+        batch_size=args.global_batch // max(args.n_nodes, 1) or 1,
+        seed=args.seed,
+        host_devices=args.host_devices,
+        jax_distributed=args.jax_distributed,
+    )
+    print(f"[train] elastic runtime: {args.num_processes} processes x "
+          f"{cfg.host_devices} devices, {cfg.n_nodes} nodes, "
+          f"{cfg.n_rounds} rounds ({cfg.problem}/{cfg.algorithm})")
+    res = launch(cfg, args.num_processes, stream_path=args.telemetry_out)
+    print(f"[train] done: {res.rounds_per_sec:.2f} rounds/s, "
+          f"final epoch {res.epochs[-1]}, wall {res.wall_s:.1f}s "
+          f"(logs: {res.run_dir})")
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        summary = {
+            "config": cfg.to_config(),
+            "n_processes": args.num_processes,
+            "rounds_per_sec": res.rounds_per_sec,
+            "epochs": res.epochs,
+            "round_seconds": res.round_seconds,
+            "resync_seconds": res.resync_seconds,
+            "active_log": res.active_log.astype(int).tolist(),
+            "wall_s": res.wall_s,
+        }
+        with open(os.path.join(args.out, "elastic_summary.json"), "w") as f:
+            json.dump(summary, f, indent=1)
+    return res
 
 
 def main(argv=None):
@@ -65,7 +118,33 @@ def main(argv=None):
     p.add_argument("--telemetry-out", default=None, metavar="FILE",
                    help="record fenced per-round spans, per-channel link-byte "
                         "counters and loss gauges to a run-stamped JSONL file")
+    # elastic multi-process runtime (repro.runtime)
+    p.add_argument("--num-processes", type=int, default=0, metavar="N",
+                   help="run the rounds across N real worker processes via "
+                        "the elastic runtime (coordinator in this process)")
+    p.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                   help="join an external elastic coordinator as one worker "
+                        "role (requires --process-id)")
+    p.add_argument("--process-id", type=int, default=0,
+                   help="this worker's id under --coordinator")
+    p.add_argument("--problem", default="lm",
+                   help="elastic-mode problem registry name "
+                        "(repro.runtime.problems: mlp_blobs, pseudo_mnist, lm)")
+    p.add_argument("--n-nodes", type=int, default=8,
+                   help="elastic-mode logical node count (>= --num-processes)")
+    p.add_argument("--host-devices", type=int, default=1,
+                   help="per-process XLA host-device fan-out in elastic mode")
+    p.add_argument("--jax-distributed", action="store_true",
+                   help="elastic mode: jax.distributed.initialize the group "
+                        "(fixed membership — no kill/rejoin chaos)")
     args = p.parse_args(argv)
+
+    if args.coordinator:
+        from repro.runtime.worker import run_worker
+
+        return run_worker(args.coordinator, args.process_id)
+    if args.num_processes:
+        return _main_elastic(args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_mesh_for_devices()

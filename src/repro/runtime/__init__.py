@@ -1,0 +1,45 @@
+"""Multi-host elastic runtime: the round executor across real OS processes.
+
+Everything before this package simulated the fleet inside one process: node
+dropout was a mask, a straggler was a smaller ``local_mask``, "distributed"
+meant one process sharding a mesh.  This package runs the SAME round executor
+(``repro.core.make_round_step``) as a coordinator + worker process group over
+a TCP control channel, with ``jax.distributed`` opt-in for real global device
+meshes, and maps the scenario engine's fault models onto *actual* membership:
+
+  * a **dropped node** is a worker that stops heartbeating — the coordinator
+    bumps the membership epoch and rewrites W_t with the existing
+    doubly-stochastic renormalization (``repro.scenarios.faults.
+    renormalize_dropout``), exactly what the simulated ``Dropout`` fault does;
+  * a **straggler** is a worker with injected real sleep — round-time
+    telemetry shows it, the numerics don't change (rounds are synchronous);
+  * a **rejoin** resyncs through the existing checkpoint + ``ChannelState``
+    machinery (``repro.checkpoint.save_resync_bundle``) and the restored
+    worker continues **bit-identically**.
+
+The observed membership replays through either engine via the
+``recorded`` fault model (``repro.scenarios.faults.RecordedFaults``) — the
+elastic run and a single-process ``Simulator`` run of the same fault schedule
+produce bit-identical trajectories (asserted in ``tests/test_runtime.py``).
+
+Entry points:
+
+  * :func:`repro.runtime.launch.launch` — spawn coordinator + N local worker
+    processes (``launch/train.py --num-processes`` reuses it);
+  * ``python -m repro.runtime.worker --coordinator HOST:PORT --worker-id I``
+    — one worker role attaching to a remote coordinator (multi-host);
+  * :class:`repro.runtime.chaos.ChaosController` — kill / pause / resume /
+    restart child workers under test control.
+"""
+from .config import RuntimeConfig, owned_nodes
+from .launch import ElasticResult, launch
+from .replay import replay_scenario, simulate_reference
+
+__all__ = [
+    "RuntimeConfig",
+    "owned_nodes",
+    "launch",
+    "ElasticResult",
+    "replay_scenario",
+    "simulate_reference",
+]

@@ -1,0 +1,82 @@
+"""Runtime configuration: the ONE config object both roles build from.
+
+The coordinator materializes schedules and the workers build engines from the
+same ``RuntimeConfig`` — a worker never receives arrays it could derive, it
+receives this config in the WELCOME message and derives them (data, model
+init, base topology) deterministically from the seeds inside.  That is what
+makes the bit-identity guarantee auditable: the only run state ever shipped
+over the wire is state the receiving process could not recompute (gathered
+rows, the canonical resync bundle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["RuntimeConfig", "owned_nodes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Everything a worker needs to rebuild the run from scratch.
+
+    problem:    name in ``repro.runtime.problems.PROBLEMS`` (dataset + model
+                + loss, all derived from ``seed``).
+    algorithm:  name in ``repro.core.ALGORITHMS``.
+    hyper:      kwargs for ``repro.core.make_algorithm`` (lr, tau, alpha,
+                channel, compression, ...).  Must be picklable.
+    topology:   base topology-schedule name (``repro.scenarios``); the
+                coordinator layers LIVE membership onto it per round — the
+                base scenario itself is fault-free so the schedule rng
+                consumption matches a simulated replay exactly.
+    n_nodes:    logical nodes, partitioned contiguously over workers
+                (:func:`owned_nodes`); n_workers == n_nodes gives one node
+                per process.
+    host_devices: per-worker ``--xla_force_host_platform_device_count`` (CPU
+                fan-out so CI exercises multi-device workers on one box).
+    jax_distributed: opt-in ``jax.distributed.initialize`` per worker
+                (global device mesh across the group — the transport ROADMAP
+                item 2 builds on).  Incompatible with kill/restart chaos:
+                the jax process group is fixed at initialize time.
+    """
+
+    problem: str = "mlp_blobs"
+    algorithm: str = "dse_mvr"
+    hyper: Tuple[Tuple[str, Any], ...] = (("lr", 0.05), ("tau", 4), ("alpha", 0.1))
+    topology: str = "static_ring"
+    n_nodes: int = 8
+    n_rounds: int = 8
+    batch_size: int = 8
+    seed: int = 0
+    heartbeat_interval_s: float = 0.25
+    heartbeat_timeout_s: float = 3.0
+    host_devices: int = 1
+    jax_distributed: bool = False
+    jax_coordinator_port: int = 0   # 0 = coordinator picks a free port
+
+    @property
+    def hyperparams(self) -> Dict[str, Any]:
+        return dict(self.hyper)
+
+    def with_(self, **overrides) -> "RuntimeConfig":
+        if "hyper" in overrides and isinstance(overrides["hyper"], dict):
+            overrides["hyper"] = tuple(sorted(overrides["hyper"].items()))
+        return dataclasses.replace(self, **overrides)
+
+    def to_config(self) -> Dict[str, Any]:
+        """JSON-able description (telemetry run stamps, bench artifacts)."""
+        return dataclasses.asdict(self)
+
+
+def owned_nodes(n_nodes: int, n_workers: int, worker_id: int) -> np.ndarray:
+    """Contiguous node block owned by ``worker_id`` (deterministic, total).
+
+    Every node has exactly one owner; owners hold the node's data shard and
+    are authoritative for its state rows in every gather."""
+    if not 0 < n_workers <= n_nodes:
+        raise ValueError(f"need 1 <= n_workers ({n_workers}) <= n_nodes ({n_nodes})")
+    if not 0 <= worker_id < n_workers:
+        raise ValueError(f"worker_id {worker_id} out of range for {n_workers} workers")
+    return np.array_split(np.arange(n_nodes), n_workers)[worker_id]

@@ -1,0 +1,213 @@
+"""Per-worker execution engine: the one round executor, split at the gather.
+
+A worker advances the SAME scheduled round executor the simulator scans
+(``repro.core.make_round_step`` with ``scheduled=True``), dispatched in the
+two phases the Simulator's span drivers already prove bit-identical to the
+scanned path (``Simulator._build_span_drivers``): the local phase (τ-1 local
+updates) runs on the worker's own state, then the round's cross-node gather
+assembles the full post-local state from every owner before the comm phase
+mixes it.
+
+Bit-identity strategy (the whole point of this module):
+
+  * every worker runs the FULL N-row vmapped program — same shapes, same
+    jitted computation, same key-split order as the simulator — with the
+    data rows it does not own zeroed (``problems.localize``).  Row-local
+    computations (vmapped grads, local updates) therefore produce bitwise
+    the simulator's values on owned rows and finite garbage elsewhere;
+  * the per-round GATHER overwrites every node-stacked state row with its
+    owner's true row (dead nodes: the coordinator's frozen canonical row)
+    before the comm phase, so mixing — the only cross-row computation —
+    reads exactly the simulator's inputs;
+  * the renormalized W_t zeroes inactive columns and ``_select_nodes``
+    discards inactive rows, so neither frozen rows nor the garbage
+    ``reset_grad_fn`` rows of non-owned data can leak into an active row.
+
+Scalar leaves (the step counter, the channel codec key) advance identically
+on every worker and are never gathered.  Wire encoding of leaves goes
+through the checkpoint machinery's ``_to_array`` / ``_like_leaf`` (typed
+PRNG keys ride as raw key data), and the node-stacked-leaf mask is computed
+HERE, from the jax tree leaves — a scalar typed key's wire array has shape
+(2,), which row-shape sniffing on the wire side would misclassify.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import _like_leaf, _to_array
+from ..compression.base import attach_channel_state
+from ..core import RoundCtx, make_algorithm, make_round_step
+from ..core.mixing import scheduled_dense_mix
+from .config import RuntimeConfig, owned_nodes
+from .problems import localize, make_problem
+
+__all__ = ["WorkerEngine", "wire_leaves", "restore_wire_leaves"]
+
+
+def wire_leaves(tree: Any) -> List[np.ndarray]:
+    """Flatten a pytree to host numpy arrays (typed keys -> key data)."""
+    return [np.asarray(_to_array(l)) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def restore_wire_leaves(template: Any, arrays: Sequence[np.ndarray]) -> Any:
+    """Rebuild a pytree of ``template``'s structure from wire arrays."""
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(arrays) != len(t_leaves):
+        raise ValueError(
+            f"wire state has {len(arrays)} leaves, template has {len(t_leaves)}"
+        )
+    leaves = [
+        _like_leaf(jnp.asarray(a), t) for a, t in zip(arrays, t_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class WorkerEngine:
+    """Builds the problem + algorithm from a :class:`RuntimeConfig` and
+    exposes the three jitted round drivers plus the wire/gather helpers."""
+
+    def __init__(self, config: RuntimeConfig, worker_id: int, n_workers: int):
+        self.config = config
+        self.worker_id = int(worker_id)
+        self.n_workers = int(n_workers)
+        self.owned = owned_nodes(config.n_nodes, n_workers, worker_id)
+        problem = make_problem(config.problem, config.n_nodes, config.seed)
+        self.loss_fn = problem.loss_fn
+        self.init_params = problem.init_params
+        # the full-N data tensor with non-owned rows zeroed: sampling draws
+        # its bits over the full (N, batch) shape => bit-identical indices
+        self.data = localize(problem.data, self.owned)
+        self.batch_size = int(config.batch_size)
+        self.n_nodes = int(config.n_nodes)
+
+        self.alg = make_algorithm(config.algorithm, **config.hyperparams)
+        grad_one = jax.grad(self.loss_fn)
+        self._vgrad = jax.vmap(grad_one)
+        full = (jnp.asarray(self.data.x), jnp.asarray(self.data.y))
+        self._full_grad_fn = lambda p: self._vgrad(p, full)
+
+        # membership can always change under the elastic runtime, so both
+        # gates are on — matching a replay scenario built on RecordedFaults
+        # (gates_local = gates_active = True), which keeps the executors
+        # bit-identical pairwise
+        sched_step, self.round_len = make_round_step(
+            self.alg,
+            scheduled_dense_mix(),
+            grad_of_batch=lambda p, b: self._vgrad(p, b),
+            full_grad_fn=self._full_grad_fn,
+            scheduled=True,
+            gate_local=True,
+            gate_active=True,
+        )
+        local_phase, comm_phase = sched_step.phases
+        rl = self.round_len
+
+        @jax.jit
+        def local_driver(state, key, lm):
+            # mirrors Simulator._build_span_drivers.span_local_sched exactly:
+            # rl-1 (split, full-shape sample) pairs, then the masked scan
+            per_step = []
+            for _ in range(rl - 1):
+                key, sk = jax.random.split(key)
+                per_step.append(self.data.sample(sk, self.batch_size))
+            micro = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+            masks = lm[: rl - 1]
+            return local_phase(state, micro, masks), key
+
+        @jax.jit
+        def sample_comm(key):
+            # the round's last split — span_comm_sched's (split, sample);
+            # the batch mixed downstream is the ASSEMBLED one, this worker
+            # contributes its owned rows of it
+            key, sk = jax.random.split(key)
+            last = self.data.sample(sk, self.batch_size)
+            return key, last
+
+        @jax.jit
+        def comm_driver(state, last, ctx):
+            return comm_phase(state, last, ctx)
+
+        self._local_driver = local_driver
+        self._sample_comm = sample_comm
+        self._comm_driver = comm_driver
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> Tuple[Any, jax.Array]:
+        """(state_0, run_key): broadcast x_0, algorithm init, channel state.
+
+        Mirrors ``Simulator.init_state`` + the benchmark key convention
+        (params from key(seed), run from key(seed+1)) so the single-process
+        replay reproduces it verbatim."""
+        params = self.init_params(jax.random.key(self.config.seed))
+        run_key = jax.random.key(self.config.seed + 1)
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (self.n_nodes,) + p.shape), params
+        )
+        state = self.alg.init(stacked, self._full_grad_fn)
+        state = attach_channel_state(
+            self.alg, state, jax.random.fold_in(run_key, 0x636F)
+        )
+        return state, run_key
+
+    # ------------------------------------------------------------------
+    def stacked_mask(self, state: Any) -> List[bool]:
+        """Which state leaves carry a leading node axis — decided on the JAX
+        tree leaves (``_select_nodes``'s own rule), never on wire shapes."""
+        return [
+            bool(l.ndim > 0 and l.shape[0] == self.n_nodes)
+            for l in jax.tree_util.tree_leaves(state)
+        ]
+
+    def owned_rows(self, state: Any) -> List[np.ndarray]:
+        """Wire arrays of this worker's owned rows of every stacked leaf."""
+        mask = self.stacked_mask(state)
+        rows = np.asarray(self.owned)
+        return [
+            np.asarray(_to_array(l))[rows]
+            for l, m in zip(jax.tree_util.tree_leaves(state), mask)
+            if m
+        ]
+
+    def set_stacked(self, state: Any, arrays: Sequence[np.ndarray]) -> Any:
+        """Replace every node-stacked leaf with a gathered full array."""
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        mask = self.stacked_mask(state)
+        it = iter(arrays)
+        out = []
+        for leaf, m in zip(leaves, mask):
+            out.append(_like_leaf(jnp.asarray(next(it)), leaf) if m else leaf)
+        rest = sum(1 for _ in it)
+        if rest:
+            raise ValueError(f"{rest} gathered arrays beyond the stacked leaves")
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    def run_local(self, state: Any, key: jax.Array, local_mask: np.ndarray):
+        """(post_local_state, key) after the τ-1 masked local updates."""
+        if self.round_len == 1:
+            return state, key
+        return self._local_driver(state, key, jnp.asarray(local_mask))
+
+    def sample_comm_batch(self, key: jax.Array):
+        """(key', last_batch): the round-closing split + full-shape sample."""
+        return self._sample_comm(key)
+
+    def run_comm(self, state: Any, last_batch, schedule_row) -> Any:
+        """Close the round on the ASSEMBLED state/batch with this round's
+        live-membership context."""
+        w, active, lm, pattern, comp_scale, trigger = schedule_row
+        ctx = RoundCtx(
+            w=jnp.asarray(w),
+            active=jnp.asarray(active),
+            local_mask=jnp.asarray(lm),
+            pattern=jnp.asarray(pattern),
+            comp_scale=None if comp_scale is None else jnp.asarray(comp_scale),
+            trigger=None if trigger is None else jnp.asarray(trigger),
+        )
+        last = jax.tree.map(jnp.asarray, last_batch)
+        return self._comm_driver(state, last, ctx)

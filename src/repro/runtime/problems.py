@@ -1,0 +1,138 @@
+"""Problem registry for the elastic runtime: dataset + model + loss by name.
+
+A problem is everything the run computes ON — fully derived from the config's
+seed so every worker (and the single-process replay in
+``repro.runtime.replay``) rebuilds byte-identical arrays independently:
+
+    Problem(loss_fn, data: NodeData, init_params)
+
+``data`` always carries ALL N nodes' shards.  A worker then ZEROES the rows
+it does not own (:func:`localize`): sampling stays bit-identical to the
+simulator (``NodeData.sample`` draws its random bits over the full (N, batch)
+shape) and every jitted driver keeps the full-N vmapped program, while the
+worker genuinely cannot produce another node's gradients — its non-owned
+rows compute finite garbage that the per-round gather overwrites with the
+owners' true rows before any cross-node mixing reads them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.simulate import NodeData
+from ..data import iid_partition, make_classification, make_pseudo_mnist, partition_to_node_data
+
+__all__ = ["Problem", "PROBLEMS", "make_problem", "localize"]
+
+
+@dataclasses.dataclass
+class Problem:
+    loss_fn: Callable[[Any, Any], jnp.ndarray]
+    data: NodeData
+    init_params: Callable[[jax.Array], Any]
+
+
+def _mlp(d: int, hidden: int, classes: int):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (d, hidden)) * (1.0 / np.sqrt(d)),
+            "b1": jnp.zeros(hidden),
+            "w2": jax.random.normal(k2, (hidden, classes)) * (1.0 / np.sqrt(hidden)),
+            "b2": jnp.zeros(classes),
+        }
+
+    def loss(params, batch):
+        x, y = batch
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+    return init, loss
+
+
+def _partitioned(x: np.ndarray, y: np.ndarray, n_nodes: int, seed: int) -> NodeData:
+    return partition_to_node_data(x, y, iid_partition(len(x), n_nodes, seed=seed))
+
+
+PROBLEMS: Dict[str, Callable[..., Problem]] = {}
+
+
+def register_problem(name: str):
+    def deco(fn):
+        PROBLEMS[name] = fn
+        return fn
+
+    return deco
+
+
+@register_problem("mlp_blobs")
+def _mlp_blobs(n_nodes: int, seed: int, n_features: int = 16, n_classes: int = 4,
+               samples_per_node: int = 64, hidden: int = 32) -> Problem:
+    """Gaussian-blob classification + 2-layer MLP: the fast CI problem."""
+    x, y = make_classification(
+        n_nodes * samples_per_node, n_features, n_classes, seed=seed
+    )
+    init, loss = _mlp(n_features, hidden, n_classes)
+    return Problem(loss, _partitioned(x, y, n_nodes, seed), init)
+
+
+@register_problem("pseudo_mnist")
+def _pseudo_mnist(n_nodes: int, seed: int, samples_per_node: int = 128,
+                  side: int = 14, hidden: int = 64) -> Problem:
+    """The paper-protocol problem (benchmarks/common.py) at runtime scale."""
+    x, y = make_pseudo_mnist(n_nodes * samples_per_node, side=side, seed=seed)
+    init, loss = _mlp(side * side, hidden, 10)
+    return Problem(loss, _partitioned(x, y, n_nodes, seed), init)
+
+
+@register_problem("lm")
+def _lm(n_nodes: int, seed: int, arch: str = "dense_moe", seq_len: int = 32,
+        samples_per_node: int = 16) -> Problem:
+    """Reduced-architecture LM on synthetic tokens (generality check: the
+    runtime drives whole transformer pytrees through the same row gather)."""
+    from ..configs import get_reduced
+    from ..data import make_lm_tokens
+    from ..models.transformer import Model
+
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    n_seq = n_nodes * samples_per_node
+    toks = make_lm_tokens(n_seq * (seq_len + 1), cfg.vocab_size, seed=seed)
+    toks = toks[: n_seq * (seq_len + 1)].reshape(n_seq, seq_len + 1)
+    x, y = toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+    def loss(params, batch):
+        bx, by = batch
+        return model.loss(params, {"tokens": bx, "targets": by}, dtype=jnp.float32)
+
+    return Problem(loss, _partitioned(x, y, n_nodes, seed),
+                   lambda key: model.init(key, dtype=jnp.float32))
+
+
+def make_problem(name: str, n_nodes: int, seed: int, **kwargs) -> Problem:
+    try:
+        builder = PROBLEMS[name]
+    except KeyError:
+        raise ValueError(f"unknown problem {name!r}; known: {sorted(PROBLEMS)}")
+    return builder(n_nodes, seed, **kwargs)
+
+
+def localize(data: NodeData, owned: np.ndarray) -> NodeData:
+    """Zero the data rows a worker does not own (same shapes, same sampling
+    bits — see module docstring).  Zero features/labels are valid model
+    inputs, so non-owned gradient rows stay finite."""
+    mask = np.zeros(data.n_nodes, dtype=bool)
+    mask[np.asarray(owned)] = True
+
+    def gate(a):
+        out = np.zeros_like(a)
+        out[mask] = a[mask]
+        return out
+
+    return NodeData(x=gate(data.x), y=gate(data.y), n_dropped=data.n_dropped)

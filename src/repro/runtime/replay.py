@@ -1,0 +1,97 @@
+"""Replay: the fault bridge from live membership back into the simulator.
+
+``simulate_reference(config, active_log)`` reruns an elastic run's exact
+fault schedule through the single-process scheduled engine and returns the
+final state's wire leaves — the acceptance check is that they are BITWISE
+equal to the multi-process run's canonical leaves.
+
+Why this holds: the live coordinator derives each round's W_t / active /
+local_mask by applying ``renormalize_dropout`` to the same fault-free base
+schedule a :class:`~repro.scenarios.RecordedFaults` replay rewrites (same
+f64 renormalize, f32 store, same rng consumption since the recorded model
+draws nothing), the workers run the same scheduled executor with the same
+gates and the same per-round key-split count, and the gather protocol
+reconstructs exactly the full-state inputs the simulator's scan sees.
+
+The replay ALWAYS goes through RecordedFaults — even for a fault-free run
+(all-true log): the gated executor is not bitwise the ungated one (a traced
+always-true select still changes XLA fusion), so like must be compared with
+like.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..scenarios import RecordedFaults, Scenario
+from .config import RuntimeConfig
+
+__all__ = ["replay_scenario", "simulate_reference"]
+
+
+def replay_scenario(config: RuntimeConfig, active_log: np.ndarray) -> Scenario:
+    """The scenario whose materialization reproduces the live schedules."""
+    return Scenario(
+        name="elastic_replay",
+        topology=config.topology,
+        faults=(RecordedFaults(active_log=tuple(map(tuple, np.asarray(active_log, dtype=bool)))),),
+        seed=config.seed,
+    )
+
+
+def simulate_reference(
+    config: RuntimeConfig, active_log: np.ndarray
+) -> Dict[str, Any]:
+    """Single-process run of the recorded fault schedule.
+
+    Returns the simulator's result dict with ``"wire_leaves"`` (host numpy
+    wire encoding of the final state, comparable leaf-by-leaf against
+    :class:`~repro.runtime.launch.ElasticResult.final_leaves`) and
+    ``"key"`` added."""
+    import jax
+
+    from ..core import Simulator, make_algorithm
+    from .engine import wire_leaves
+    from .problems import make_problem
+
+    problem = make_problem(config.problem, config.n_nodes, config.seed)
+    alg = make_algorithm(config.algorithm, **config.hyperparams)
+    sim = Simulator(
+        alg,
+        None,
+        problem.loss_fn,
+        problem.data,
+        config.batch_size,
+        scenario=replay_scenario(config, active_log),
+        stream_metrics=False,
+    )
+    params = problem.init_params(jax.random.key(config.seed))
+    run_key = jax.random.key(config.seed + 1)
+    out = sim.run(
+        params, run_key,
+        num_steps=config.n_rounds * sim.round_len,
+        eval_every=0,
+    )
+    out["wire_leaves"] = wire_leaves(out["state"])
+    return out
+
+
+def leaves_equal(
+    a, b, *, verbose: bool = False
+) -> Tuple[bool, int]:
+    """Bitwise leaf-by-leaf comparison; returns (all_equal, first_bad_idx)."""
+    a = [np.asarray(x) for x in a]
+    b = [np.asarray(x) for x in b]
+    if len(a) != len(b):
+        return False, -1
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x.shape != y.shape or x.dtype != y.dtype or not np.array_equal(
+            x, y, equal_nan=True
+        ):
+            if verbose:  # pragma: no cover - debug aid
+                print(f"leaf {i}: shape {x.shape}/{y.shape} "
+                      f"dtype {x.dtype}/{y.dtype} "
+                      f"maxdiff {np.abs(x.astype(np.float64) - y.astype(np.float64)).max() if x.shape == y.shape else 'n/a'}")
+            return False, i
+    return True, -1

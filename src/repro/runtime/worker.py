@@ -1,0 +1,209 @@
+"""Worker role: one OS process advancing its shard of the elastic run.
+
+Protocol (all over the coordinator's control channel; every round-scoped
+message echoes the coordinator's membership epoch so stale echoes after a
+mid-round re-issue are droppable):
+
+    -> hello            announce (worker id, rejoin flag)
+    <- welcome          RuntimeConfig + group size + starting round/epoch
+    -> ready            stacked-leaf mask (+ init state leaves from worker 0)
+    <- resync           canonical state + key (rejoin / in-place recovery)
+    -> resync_ok
+    <- round            W_t, active, local_mask + optional straggler sleep
+    -> contrib          owned post-local state rows + owned last-batch rows
+    <- gather           assembled full post-local state + full last batch
+    -> done             full post-comm leaves + key + drained telemetry
+    <- shutdown
+
+The round protocol is RE-ENTRANT: a worker only commits round r's post-comm
+state when it sees ROUND r+1, so when a death mid-round makes the
+coordinator re-issue ROUND r under a new epoch, every surviving worker
+recomputes r from its committed start-of-round state — deterministically,
+because the whole round is a pure function of (state, key, schedule row).
+
+Run as ``python -m repro.runtime.worker --coordinator HOST:PORT
+--worker-id I`` (``repro.runtime.launch`` spawns exactly this, with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` per process).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from .config import RuntimeConfig
+from .protocol import MessageSocket, connect_with_retry
+
+__all__ = ["run_worker", "main"]
+
+
+def _heartbeat_loop(conn: MessageSocket, worker_id: int, interval_s: float,
+                    stop: threading.Event) -> None:
+    while not stop.is_set():
+        try:
+            conn.send({"type": "heartbeat", "worker": worker_id, "t": time.time()})
+        except OSError:
+            return
+        stop.wait(interval_s)
+
+
+def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
+    # jax import deferred past argparse so --help stays instant
+    import jax
+    import jax.numpy as jnp
+
+    from ..telemetry import (
+        RecordCursor, Telemetry, register_runtime_streams, run_metadata,
+    )
+    from .engine import WorkerEngine, restore_wire_leaves, wire_leaves
+
+    conn = connect_with_retry(coordinator)
+    conn.send({"type": "hello", "worker": int(worker_id), "rejoin": bool(rejoin)})
+    welcome = conn.recv()
+    if not welcome or welcome.get("type") != "welcome":
+        raise RuntimeError(f"expected welcome, got {welcome and welcome.get('type')}")
+    cfg: RuntimeConfig = welcome["config"]
+    n_workers = int(welcome["n_workers"])
+    if cfg.jax_distributed and welcome.get("jax_coordinator"):
+        jax.distributed.initialize(
+            coordinator_address=welcome["jax_coordinator"],
+            num_processes=n_workers,
+            process_id=int(worker_id),
+        )
+
+    engine = WorkerEngine(cfg, worker_id, n_workers)
+    hub = Telemetry(
+        config=cfg.to_config(), spans=False,
+        meta=run_metadata(cfg.to_config(), process=f"worker:{worker_id}"),
+    )
+    register_runtime_streams(hub)
+    cursor = RecordCursor(hub)
+
+    stop = threading.Event()
+    threading.Thread(
+        target=_heartbeat_loop, args=(conn, worker_id, cfg.heartbeat_interval_s, stop),
+        daemon=True, name="worker-heartbeat",
+    ).start()
+
+    state, key = engine.init_state()
+    committed = (state, key)
+    committed_round = int(welcome["round"])
+    epoch = int(welcome["epoch"])
+
+    ready = {
+        "type": "ready", "worker": worker_id,
+        "stacked_mask": engine.stacked_mask(state),
+    }
+    if welcome.get("need_init"):
+        ready["leaves"] = wire_leaves(state)
+        ready["key"] = wire_leaves(key)[0]
+    conn.send(ready)
+
+    pending = None          # (state, key) awaiting commit
+    pending_round = -1      # the round whose arrival commits it
+    pushed: Optional[dict] = None
+    try:
+        while True:
+            msg = pushed if pushed is not None else conn.recv()
+            pushed = None
+            if msg is None:
+                return 1
+            mtype = msg.get("type")
+            if mtype == "shutdown":
+                return 0
+            if mtype == "resync":
+                # adopt the canonical state wholesale (rejoin or in-place
+                # recovery after a stall) — template comes from our own
+                # engine, only the leaf VALUES cross the wire
+                committed = (
+                    restore_wire_leaves(committed[0], msg["leaves"]),
+                    jax.random.wrap_key_data(jnp.asarray(msg["key"])),
+                )
+                committed_round = int(msg["round"])
+                epoch = int(msg["epoch"])
+                pending = None
+                conn.send({"type": "resync_ok", "worker": worker_id,
+                           "round": committed_round})
+                continue
+            if mtype != "round":
+                continue
+            r, epoch = int(msg["round"]), int(msg["epoch"])
+            if pending is not None and r == pending_round:
+                committed = pending
+                committed_round = r
+            pending = None
+            if r != committed_round:
+                # a round we cannot serve from local state: the coordinator
+                # resyncs stragglers explicitly, so just wait
+                continue
+
+            sleep_s = float(msg.get("sleep") or 0.0)
+            t0 = time.perf_counter()
+            if sleep_s:
+                time.sleep(sleep_s)  # the REAL straggler
+            st, k = committed
+            post_local, k = engine.run_local(st, k, np.asarray(msg["local_mask"]))
+            k, last = engine.sample_comm_batch(k)
+            owned = np.asarray(engine.owned)
+            state_rows = engine.owned_rows(post_local)  # np.asarray fences device work
+            batch_rows = tuple(np.asarray(b)[owned] for b in last)
+            contrib_s = time.perf_counter() - t0
+            hub.record("contrib_seconds", contrib_s, step=r)
+            conn.send({
+                "type": "contrib", "worker": worker_id, "round": r, "epoch": epoch,
+                "state_rows": state_rows, "batch_rows": batch_rows,
+                "seconds": contrib_s,
+            })
+
+            while True:  # await the gather (or a re-issue / resync / shutdown)
+                m2 = conn.recv()
+                if m2 is None:
+                    return 1
+                t2 = m2.get("type")
+                if (t2 == "gather" and int(m2["round"]) == r
+                        and int(m2["epoch"]) == epoch):
+                    assembled = engine.set_stacked(post_local, m2["state"])
+                    post_comm = engine.run_comm(
+                        assembled, m2["batch"],
+                        (msg["w"], msg["active"], msg["local_mask"],
+                         msg["pattern"], msg.get("comp_scale"), msg.get("trigger")),
+                    )
+                    jax.block_until_ready(post_comm)
+                    pending = (post_comm, k)
+                    pending_round = r + 1
+                    conn.send({
+                        "type": "done", "worker": worker_id, "round": r,
+                        "epoch": epoch,
+                        "leaves": wire_leaves(post_comm),
+                        "key": wire_leaves(k)[0],
+                        "seconds": time.perf_counter() - t0,
+                        "records": cursor.drain(),
+                    })
+                    break
+                if t2 in ("round", "resync", "shutdown"):
+                    pushed = m2  # handle at the top of the outer loop
+                    break
+                # anything else (a stale gather from an older epoch): drop
+    finally:
+        stop.set()
+        conn.close()
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(
+        description="elastic-runtime worker role (see repro.runtime.launch)"
+    )
+    parser.add_argument("--coordinator", required=True, metavar="HOST:PORT")
+    parser.add_argument("--worker-id", type=int, required=True)
+    parser.add_argument("--rejoin", action="store_true",
+                        help="announce as a rejoining worker (state resync)")
+    args = parser.parse_args(argv)
+    sys.exit(run_worker(args.coordinator, args.worker_id, rejoin=args.rejoin))
+
+
+if __name__ == "__main__":
+    main()

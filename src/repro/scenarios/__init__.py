@@ -35,6 +35,7 @@ from .faults import (
     Dropout,
     FaultModel,
     LinkDrop,
+    RecordedFaults,
     Stragglers,
     make_fault,
     renormalize_dropout,
@@ -59,7 +60,8 @@ __all__ = [
     "ExponentialSchedule", "PeriodicSwitch", "TOPOLOGY_SCHEDULES",
     "make_topology_schedule", "torus_dims",
     "RoundSchedule", "make_round_schedule",
-    "FaultModel", "Stragglers", "Dropout", "LinkDrop", "FAULT_MODELS",
+    "FaultModel", "Stragglers", "Dropout", "LinkDrop", "RecordedFaults",
+    "FAULT_MODELS",
     "make_fault", "renormalize_dropout", "renormalize_link_drop",
     "ClientJitter", "uniform_profile",
     "STREAM_FIELDS", "make_stream_fn", "masked_consensus", "tracking_error",

@@ -30,6 +30,7 @@ __all__ = [
     "Stragglers",
     "Dropout",
     "LinkDrop",
+    "RecordedFaults",
     "FAULT_MODELS",
     "make_fault",
     "renormalize_dropout",
@@ -147,10 +148,60 @@ class LinkDrop(FaultModel):
             ).astype(np.float32)
 
 
+@dataclasses.dataclass(frozen=True)
+class RecordedFaults(FaultModel):
+    """Replay a RECORDED per-round liveness log — the live-membership
+    backend's bridge back into the scheduled engines.
+
+    The elastic runtime (``repro.runtime``) observes actual membership (a
+    worker that died, stalled or rejoined) and logs the per-round active
+    mask it trained under; replaying that log through this model drives the
+    simulator through bit-identical schedules: the renormalization sequence
+    below is exactly :class:`Dropout.apply` with the recorded mask in place
+    of the sampled one, and no scenario rng is consumed — so a fault-free
+    base scenario plus this model materializes the same W_t/mask arrays the
+    coordinator issued live.
+
+    ``active_log`` is (n_rounds, n_nodes), stored as nested tuples so the
+    spec stays frozen/hashable/serializable like every other fault model.
+    """
+
+    active_log: tuple = ()
+    name: str = "recorded"
+    mutates_w = True
+    gates_local = True
+    gates_active = True
+
+    def __post_init__(self):
+        log = np.asarray(self.active_log, dtype=bool)
+        if log.ndim != 2:
+            raise ValueError(
+                f"active_log must be (n_rounds, n_nodes); got shape {log.shape}"
+            )
+        object.__setattr__(
+            self, "active_log", tuple(tuple(bool(v) for v in row) for row in log)
+        )
+
+    def apply(self, schedule, rng: np.random.Generator) -> None:
+        log = np.asarray(self.active_log, dtype=bool)
+        n_rounds, n = schedule.w.shape[0], schedule.w.shape[1]
+        if log.shape != (n_rounds, n):
+            raise ValueError(
+                f"active_log has shape {log.shape}, schedule needs {(n_rounds, n)}"
+            )
+        for r in range(n_rounds):
+            schedule.active[r] &= log[r]
+            schedule.local_mask[r] &= schedule.active[r][None, :]
+            schedule.w[r] = renormalize_dropout(
+                schedule.w[r].astype(np.float64), schedule.active[r]
+            ).astype(np.float32)
+
+
 FAULT_MODELS: Dict[str, Type[FaultModel]] = {
     "stragglers": Stragglers,
     "dropout": Dropout,
     "link_drop": LinkDrop,
+    "recorded": RecordedFaults,
 }
 
 

@@ -44,6 +44,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..compression.base import Compressor, ErrorFeedback, make_compressor
 
@@ -156,6 +157,27 @@ class SnapshotPublisher:
         moved (0 for replicas that kept their stale snapshot).  Pure jnp —
         safe to ``jax.jit`` with ``self`` closed over.
         """
+        new_state, info, _packed = self.publish_packed(state, params)
+        return new_state, info
+
+    def publish_packed(self, state: SnapshotState, params: PyTree):
+        """Publish AND hand back the wire message: ``(new_state, info,
+        packed)``.
+
+        ``packed`` is the exact message a remote subscriber needs to advance
+        its own copy of the snapshot state (:meth:`apply_packed`): the send
+        mask, the fresh codec key and the ENCODED payload — for a lossy codec
+        the quantized difference (int8 levels / top-k values+indices), not
+        the parameters.  With device-resident sharded params the whole
+        encode runs device-side and only ``packed`` crosses to the host, so
+        the training->serving host transfer scales with the codec's wire
+        bytes instead of the parameter count.
+
+        ``new_state`` is byte-equal to :meth:`publish`'s (it IS the same
+        computation: the publisher advances its estimate by applying its own
+        message through the one shared :meth:`apply_packed` path, the CHOCO
+        publisher==subscriber invariant made structural).
+        """
         r = self.n_replicas
         bounds = jnp.asarray(self.bounds, jnp.int32)
         live = _broadcast_replicas(params, r)
@@ -179,19 +201,44 @@ class SnapshotPublisher:
             send = forced | (drift2 > thr * thr * (ref2 + 1e-12))
 
         if self.codec is None:
-            # raw path: a refreshed snapshot is the live tree itself (no
-            # arithmetic — bound-1 replicas serve bit-identical live params)
-            hat_new = jax.tree.map(
-                lambda l, h: jnp.where(
-                    send.reshape((r,) + (1,) * (l.ndim - 1)), l, h
-                ),
-                live, state.hat,
-            )
+            # raw path: the payload is the live tree itself (no arithmetic —
+            # bound-1 replicas serve bit-identical live params)
+            payload = live
             key_new = state.key
         else:
             use_key, key_new = jax.random.split(state.key)
             payload = self.codec.encode_tree(diff, use_key)
-            dec = self.codec.decode_tree(payload)
+
+        packed = {"sent": send, "payload": payload, "key": key_new}
+        new_state = self.apply_packed(state, packed)
+        per_replica_bytes = jnp.float32(self.message_bytes(params))
+        info = {
+            "sent": send,
+            "age": new_state.age,
+            "drift": jnp.sqrt(drift2 / (ref2 + 1e-12)),
+            "bytes": send.astype(jnp.float32) * per_replica_bytes,
+        }
+        return new_state, info, packed
+
+    def apply_packed(self, state: SnapshotState, packed) -> SnapshotState:
+        """Advance a snapshot state by one published message.
+
+        This is the SUBSCRIBER side of the wire — a remote replica holding
+        its own :class:`SnapshotState` copy applies the publisher's packed
+        messages in sequence and stays byte-equal with the publisher's
+        estimate, because the publisher itself advances through this exact
+        function."""
+        r = self.n_replicas
+        send = packed["sent"]
+        if self.codec is None:
+            hat_new = jax.tree.map(
+                lambda l, h: jnp.where(
+                    send.reshape((r,) + (1,) * (l.ndim - 1)), l, h
+                ),
+                packed["payload"], state.hat,
+            )
+        else:
+            dec = self.codec.decode_tree(packed["payload"])
             hat_new = jax.tree.map(
                 lambda h, d: (
                     h.astype(jnp.float32)
@@ -203,22 +250,22 @@ class SnapshotPublisher:
                 ).astype(h.dtype),
                 state.hat, dec,
             )
-
-        new_state = SnapshotState(
+        return SnapshotState(
             hat=hat_new,
             age=jnp.where(send, 0, state.age + 1).astype(jnp.int32),
             sent=send,
             seq=state.seq + 1,
-            key=key_new,
+            key=packed["key"],
         )
-        per_replica_bytes = jnp.float32(self.message_bytes(params))
-        info = {
-            "sent": send,
-            "age": new_state.age,
-            "drift": jnp.sqrt(drift2 / (ref2 + 1e-12)),
-            "bytes": send.astype(jnp.float32) * per_replica_bytes,
-        }
-        return new_state, info
+
+    def packed_bytes(self, packed) -> int:
+        """ACTUAL bytes of one packed message's arrays (what `device_get`
+        moves) — compare with the analytic :meth:`message_bytes` model and
+        the raw parameter size."""
+        return sum(
+            int(np.asarray(l).nbytes)
+            for l in jax.tree.leaves((packed["sent"], packed["payload"]))
+        )
 
     # ------------------------------------------------------------------
     def message_bytes(self, params: PyTree) -> int:

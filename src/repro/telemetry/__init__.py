@@ -13,15 +13,24 @@ See ``registry.py`` (the hub + typed stream registry), ``spans.py``
 (JSONL sink, Prometheus text, run metadata).
 """
 from .registry import (
+    RUNTIME_STREAM_FIELDS,
     SERVING_STREAM_FIELDS,
     STREAM_AXES,
     STREAM_KINDS,
     TRAINING_STREAM_FIELDS,
     StreamSpec,
     Telemetry,
+    register_runtime_streams,
     register_training_streams,
 )
-from .export import config_hash, prometheus_text, run_metadata, write_jsonl
+from .export import (
+    JsonlWriter,
+    RecordCursor,
+    config_hash,
+    prometheus_text,
+    run_metadata,
+    write_jsonl,
+)
 from .spans import fence, profile_trace, span
 
 __all__ = [
@@ -31,11 +40,15 @@ __all__ = [
     "STREAM_AXES",
     "TRAINING_STREAM_FIELDS",
     "SERVING_STREAM_FIELDS",
+    "RUNTIME_STREAM_FIELDS",
     "register_training_streams",
+    "register_runtime_streams",
     "run_metadata",
     "config_hash",
     "write_jsonl",
     "prometheus_text",
+    "RecordCursor",
+    "JsonlWriter",
     "span",
     "profile_trace",
     "fence",

@@ -14,20 +14,31 @@ import re
 import subprocess
 from typing import Any, Dict, Optional
 
-__all__ = ["run_metadata", "config_hash", "write_jsonl", "prometheus_text"]
+__all__ = [
+    "run_metadata", "config_hash", "write_jsonl", "prometheus_text",
+    "RecordCursor", "JsonlWriter",
+]
+
+_GIT_SHA: Optional[str] = None
 
 
 def _git_sha() -> str:
-    try:
-        out = subprocess.run(
-            ["git", "rev-parse", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)),
-            capture_output=True, text=True, timeout=5,
-        )
-        sha = out.stdout.strip()
-        return sha if out.returncode == 0 and sha else "unknown"
-    except (OSError, subprocess.SubprocessError):
-        return "unknown"
+    """Memoized: one subprocess per process, not one per hub — benchmarks
+    build many hubs and the runtime stamps every worker's records
+    (``benchmarks/common.run_stamp`` is the same cached value)."""
+    global _GIT_SHA
+    if _GIT_SHA is None:
+        try:
+            out = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=5,
+            )
+            sha = out.stdout.strip()
+            _GIT_SHA = sha if out.returncode == 0 and sha else "unknown"
+        except (OSError, subprocess.SubprocessError):
+            _GIT_SHA = "unknown"
+    return _GIT_SHA
 
 
 def config_hash(config: Any) -> str:
@@ -37,18 +48,24 @@ def config_hash(config: Any) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
-def run_metadata(config: Any = None) -> Dict[str, str]:
-    """The stamp on every exported record: where (device), what (git SHA,
-    jax version) and with which knobs (config hash) this run happened."""
+def run_metadata(config: Any = None, process: Optional[str] = None) -> Dict[str, str]:
+    """The stamp on every exported record: where (device + pid), what (git
+    SHA, jax version) and with which knobs (config hash) this run happened.
+    ``process`` names the role in a multi-process run (``"coordinator"``,
+    ``"worker:3"``) so records merged into one stream stay attributable."""
     import jax
 
     dev = jax.devices()[0]
-    return {
+    meta = {
         "git_sha": _git_sha(),
         "jax_version": jax.__version__,
         "device_kind": f"{dev.platform}:{getattr(dev, 'device_kind', '?')}",
         "config_hash": config_hash(config),
+        "pid": str(os.getpid()),
     }
+    if process is not None:
+        meta["process"] = str(process)
+    return meta
 
 
 def write_jsonl(hub, path: str) -> int:
@@ -86,6 +103,71 @@ def write_jsonl(hub, path: str) -> int:
                         "total": series["total"],
                     })
     return n
+
+
+class RecordCursor:
+    """Incremental drain of a hub: each :meth:`drain` returns the records —
+    events and stream samples, in the same shapes :func:`write_jsonl` emits,
+    each stamped with the hub's run metadata — that arrived since the last
+    drain.  The elastic runtime's workers drain once per round and ship the
+    chunk over the control channel; the coordinator's :class:`JsonlWriter`
+    appends the chunks to ONE merged stream file."""
+
+    def __init__(self, hub):
+        self.hub = hub
+        self._event_pos = 0
+        self._series_pos: Dict[Any, int] = {}
+
+    def drain(self) -> list:
+        out = []
+
+        def stamp(rec: Dict[str, Any]) -> Dict[str, Any]:
+            rec["run"] = self.hub.meta
+            return rec
+
+        events = self.hub.events
+        for ev in events[self._event_pos:]:
+            out.append(stamp(dict(ev)))
+        self._event_pos = len(events)
+        for name in self.hub.streams:
+            spec = self.hub.spec(name)
+            for label in self.hub.labels(name):
+                steps, vals = self.hub.series(name, label)
+                start = self._series_pos.get((name, label), 0)
+                for step, value in zip(steps[start:], vals[start:]):
+                    v = value.tolist() if hasattr(value, "tolist") else value
+                    out.append(stamp({
+                        "event": "sample", "stream": name,
+                        "kind": spec.kind, "axis": spec.axis,
+                        "label": label, "step": int(step), "value": v,
+                    }))
+                self._series_pos[(name, label)] = len(steps)
+        return out
+
+
+class JsonlWriter:
+    """Append-only JSONL sink for PRE-STAMPED records (each record carries
+    its origin's ``"run"`` metadata — the coordinator merges many processes'
+    cursors into one file).  Line 1 is a ``meta`` record stamped with the
+    OWNING hub's metadata, mirroring :func:`write_jsonl`'s layout."""
+
+    def __init__(self, path: str, meta: Dict[str, Any]):
+        dirname = os.path.dirname(os.path.abspath(path))
+        os.makedirs(dirname, exist_ok=True)
+        self.path = path
+        self.count = 0
+        self._f = open(path, "w")
+        self.append([{"event": "meta", "run": dict(meta)}])
+
+    def append(self, records) -> int:
+        for rec in records:
+            self._f.write(json.dumps(rec) + "\n")
+            self.count += 1
+        self._f.flush()
+        return self.count
+
+    def close(self) -> None:
+        self._f.close()
 
 
 def _prom_name(name: str) -> str:

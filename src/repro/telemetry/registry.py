@@ -40,6 +40,7 @@ __all__ = [
     "Telemetry",
     "TRAINING_STREAM_FIELDS",
     "SERVING_STREAM_FIELDS",
+    "RUNTIME_STREAM_FIELDS",
 ]
 
 STREAM_KINDS = ("gauge", "counter", "histogram")
@@ -59,6 +60,14 @@ TRAINING_STREAM_FIELDS = (
 SERVING_STREAM_FIELDS = (
     "staleness", "snapshot_age", "send_rate", "published_kbytes",
     "requests_per_sec",
+)
+
+#: the elastic runtime's membership / liveness / resync streams
+#: (``repro.runtime``): coordinator-side membership and round timing, plus
+#: the per-worker contribution times streamed over the control channel.
+RUNTIME_STREAM_FIELDS = (
+    "membership_epoch", "active_workers", "heartbeat_age",
+    "round_seconds", "contrib_seconds", "resync_seconds",
 )
 
 
@@ -306,3 +315,21 @@ def register_training_streams(hub: Telemetry) -> None:
     _register_fields(hub, TRAINING_STREAM_FIELDS,
                      "per-round on-device training stream "
                      "(repro.scenarios.metrics)")
+
+
+def register_runtime_streams(hub: Telemetry) -> None:
+    """Register the elastic runtime's membership/liveness/resync streams."""
+    doc = "elastic-runtime membership/liveness stream (repro.runtime)"
+    hub.register_stream(StreamSpec("membership_epoch", kind="gauge", doc=doc))
+    hub.register_stream(StreamSpec("active_workers", kind="gauge", doc=doc))
+    hub.register_stream(StreamSpec("heartbeat_age", kind="gauge", unit="s",
+                                   doc=doc + "; label = worker"))
+    hub.register_stream(StreamSpec("round_seconds", kind="histogram", unit="s",
+                                   doc="wall time of one elastic round "
+                                       "(issue -> all DONEs)"))
+    hub.register_stream(StreamSpec("contrib_seconds", kind="histogram", unit="s",
+                                   doc="worker-side ROUND -> CONTRIB wall time "
+                                       "(includes injected straggler sleep)"))
+    hub.register_stream(StreamSpec("resync_seconds", kind="histogram", unit="s",
+                                   doc="rejoin resync latency (checkpoint "
+                                       "bundle -> RESYNC_OK)"))

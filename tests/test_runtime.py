@@ -1,0 +1,289 @@
+"""Elastic multi-host runtime acceptance tests.
+
+Covers the new_subsystem criteria:
+
+  * unit layer (no process spawning): RecordedFaults replays a Dropout
+    trace bitwise and consumes no scenario rng; contiguous total node
+    ownership; wire-leaf round-trips (typed PRNG keys included); the
+    length-prefixed message protocol; chaos plan validation;
+  * process layer (skip-marked when spawning is unavailable): real 2- and
+    4-process groups over sockets — membership epochs bump on every
+    kill/suspend/rejoin, a dropped worker's nodes get the renormalized
+    doubly-stochastic W_t, a straggler's injected sleep lands in the
+    round-time telemetry stream, rejoin resyncs through the on-disk
+    checkpoint bundle, and the post-run state is BIT-IDENTICAL to a
+    single-process simulated run of the same recorded fault schedule
+    (``repro.runtime.replay.simulate_reference``);
+  * the coordinator-side telemetry stream file: every worker's records and
+    the coordinator's runtime streams in one run-stamped JSONL.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime.chaos import ChaosController, ChaosEvent, by_round
+from repro.runtime.config import RuntimeConfig, owned_nodes
+from repro.runtime.protocol import MessageSocket
+from repro.runtime.replay import leaves_equal, replay_scenario
+from repro.scenarios import Dropout, RecordedFaults, Scenario
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _can_spawn() -> bool:
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", "print('ok')"],
+            capture_output=True, timeout=60,
+        )
+        return out.returncode == 0
+    except Exception:
+        return False
+
+
+needs_spawn = pytest.mark.skipif(
+    not _can_spawn(), reason="subprocess spawning unavailable"
+)
+
+SMALL = RuntimeConfig(n_nodes=4, n_rounds=4, batch_size=4)
+
+
+# ----------------------------------------------------------------- unit layer
+def test_owned_nodes_contiguous_total():
+    for n_nodes, n_workers in ((8, 4), (8, 3), (5, 5), (7, 2)):
+        blocks = [owned_nodes(n_nodes, n_workers, w) for w in range(n_workers)]
+        flat = np.concatenate(blocks)
+        np.testing.assert_array_equal(flat, np.arange(n_nodes))
+    with pytest.raises(ValueError):
+        owned_nodes(4, 5, 0)
+    with pytest.raises(ValueError):
+        owned_nodes(4, 2, 2)
+
+
+def test_runtime_config_hyper_roundtrip():
+    cfg = SMALL.with_(hyper={"tau": 2, "lr": 0.1, "alpha": 0.3})
+    assert cfg.hyperparams == {"tau": 2, "lr": 0.1, "alpha": 0.3}
+    assert isinstance(cfg.hyper, tuple)          # stays hashable/picklable
+    assert cfg.to_config()["n_nodes"] == 4
+
+
+def test_recorded_faults_replays_dropout_trace_bitwise():
+    """The fault bridge: record a Dropout run's active masks, replay them
+    through RecordedFaults on a fresh fault-free materialization — W_t,
+    active and local_mask all come back bitwise, with NO rng consumed."""
+    n, rounds, rl = 6, 8, 3
+    dropped = Scenario(
+        name="d", topology="static_ring", faults=(Dropout(p=0.4),), seed=3
+    ).materialize(n, rounds, rl)
+    replay = Scenario(
+        name="r", topology="static_ring",
+        faults=(RecordedFaults(active_log=tuple(map(tuple, dropped.active))),),
+        seed=3,
+    ).materialize(n, rounds, rl)
+    np.testing.assert_array_equal(replay.active, dropped.active)
+    np.testing.assert_array_equal(replay.local_mask, dropped.local_mask)
+    np.testing.assert_array_equal(replay.w, dropped.w)
+    # renormalization invariants on a faulted round: doubly stochastic, the
+    # inactive block is identity, inactive rows/cols carry no mass
+    for r in range(rounds):
+        w, act = replay.w[r].astype(np.float64), replay.active[r]
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+        for i in np.flatnonzero(~act):
+            assert w[i, i] == 1.0
+            assert np.all(w[i, np.arange(n) != i] == 0.0)
+            assert np.all(w[np.arange(n) != i, i] == 0.0)
+
+
+def test_recorded_faults_validation():
+    with pytest.raises(ValueError):
+        RecordedFaults(active_log=(True, False))          # not 2-D
+    rf = RecordedFaults(active_log=((True,), (False,)))
+    sched = Scenario(name="x", topology="static_ring").materialize(4, 2, 2)
+    with pytest.raises(ValueError):
+        rf.apply(sched, np.random.default_rng(0))         # shape mismatch
+
+
+def test_wire_leaves_roundtrip_typed_key():
+    jax = pytest.importorskip("jax")
+    from repro.runtime.engine import restore_wire_leaves, wire_leaves
+
+    tree = {
+        "w": jax.numpy.arange(6.0).reshape(2, 3),
+        "k": jax.random.key(5),
+        "n": jax.numpy.int32(7),
+    }
+    wires = wire_leaves(tree)
+    assert all(isinstance(a, np.ndarray) for a in wires)
+    back = restore_wire_leaves(tree, wires)
+    assert jax.numpy.issubdtype(back["k"].dtype, jax.dtypes.prng_key)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(back["k"])),
+        np.asarray(jax.random.key_data(tree["k"])),
+    )
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    with pytest.raises(ValueError):
+        restore_wire_leaves(tree, wires[:-1])
+
+
+def test_message_protocol_roundtrip():
+    a, b = socket.socketpair()
+    ca, cb = MessageSocket(a), MessageSocket(b)
+    payload = {"type": "contrib", "rows": np.arange(12).reshape(3, 4),
+               "nested": {"x": [1, 2, 3]}}
+    ca.send(payload)
+    got = cb.recv()
+    assert got["type"] == "contrib"
+    np.testing.assert_array_equal(got["rows"], payload["rows"])
+    ca.close()
+    assert cb.recv() is None      # clean EOF
+    cb.close()
+
+
+def test_chaos_plan_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent(round=0, action="explode", worker=0)
+    plan = (ChaosEvent(round=2, action="kill", worker=1),
+            ChaosEvent(round=2, action="sleep", worker=0, seconds=0.5),
+            ChaosEvent(round=4, action="rejoin", worker=1))
+    grouped = by_round(plan)
+    assert sorted(grouped) == [2, 4] and len(grouped[2]) == 2
+
+
+def test_jax_distributed_rejects_kill_chaos():
+    from repro.runtime import launch
+
+    with pytest.raises(ValueError):
+        launch(SMALL.with_(jax_distributed=True), 2,
+               plan=(ChaosEvent(round=1, action="kill", worker=1),))
+
+
+@needs_spawn
+def test_chaos_controller_kill_and_respawn():
+    ctl = ChaosController(
+        lambda wid: subprocess.Popen(
+            [sys.executable, "-c", "import time; time.sleep(60)"]
+        )
+    )
+    try:
+        ctl.spawn(0)
+        assert ctl.is_running(0)
+        with pytest.raises(RuntimeError):
+            ctl.spawn(0)          # already running
+        ctl.kill(0)
+        assert not ctl.is_running(0)
+        ctl.spawn(0)              # respawn after death is fine
+        assert ctl.is_running(0)
+    finally:
+        ctl.shutdown()
+
+
+# -------------------------------------------------------------- process layer
+@needs_spawn
+def test_elastic_2proc_no_fault_bit_identical(tmp_path):
+    """Fault-free 2-process group: stable membership, and the distributed
+    run is bitwise the simulated one (replayed through an all-true recorded
+    log — gated executors compare with gated executors).  Also checks the
+    coordinator-side telemetry stream file."""
+    from repro.runtime import launch, simulate_reference
+
+    stream = str(tmp_path / "telemetry.jsonl")
+    res = launch(SMALL, 2, stream_path=stream)
+    assert res.epochs == [0] * SMALL.n_rounds
+    assert res.active_log.all()
+    assert res.resync_seconds == []
+
+    ref = simulate_reference(SMALL, res.active_log)
+    ok, bad = leaves_equal(res.final_leaves, ref["wire_leaves"], verbose=True)
+    assert ok, f"first differing leaf: {bad}"
+
+    with open(stream) as f:
+        lines = [json.loads(l) for l in f]
+    assert lines[0]["event"] == "meta"
+    procs = {l["run"]["process"] for l in lines if "run" in l}
+    assert {"coordinator", "worker:0", "worker:1"} <= procs
+    streams = {l.get("stream") for l in lines}
+    assert {"membership_epoch", "active_workers", "round_seconds",
+            "contrib_seconds"} <= streams
+    # every line is stamped with the same run metadata keys
+    assert all("pid" in l["run"] for l in lines if "run" in l)
+
+
+@needs_spawn
+def test_elastic_kill_rejoin_bit_identical():
+    """Worker 1 is SIGKILLed before round 1 and respawned before round 3:
+    its nodes drop out (renormalized W_t), the rejoin resyncs through the
+    on-disk bundle, membership epochs bump at both transitions, and the
+    post-rejoin trajectory is bitwise the simulated replay of the recorded
+    schedule — resync through checkpoint + ChannelState loses nothing."""
+    from repro.core import make_algorithm
+    from repro.runtime import launch, simulate_reference
+
+    cfg = SMALL.with_(n_rounds=5)
+    plan = (ChaosEvent(round=1, action="kill", worker=1),
+            ChaosEvent(round=3, action="rejoin", worker=1))
+    res = launch(cfg, 2, plan=plan)
+
+    expected = np.ones((5, 4), dtype=bool)
+    expected[1:3, 2:] = False                 # worker 1 owns nodes 2..3
+    np.testing.assert_array_equal(res.active_log, expected)
+    assert res.epochs[0] == 0
+    assert res.epochs[-1] > res.epochs[1]     # kill and rejoin both bumped
+    assert np.all(np.diff(res.epochs) >= 0)
+    assert len(res.resync_seconds) == 1       # the rejoin resync
+
+    # the replayed schedule carries the renormalized doubly-stochastic W_t
+    alg = make_algorithm(cfg.algorithm, **cfg.hyperparams)
+    rl = alg.comm.round_len(getattr(alg, "tau", 1))
+    sched = replay_scenario(cfg, res.active_log).materialize(
+        cfg.n_nodes, cfg.n_rounds, rl
+    )
+    w = sched.w[1].astype(np.float64)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+    assert w[2, 2] == 1.0 and w[3, 3] == 1.0
+    assert np.all(w[2, :2] == 0.0) and np.all(w[:2, 3] == 0.0)
+
+    ref = simulate_reference(cfg, res.active_log)
+    ok, bad = leaves_equal(res.final_leaves, ref["wire_leaves"], verbose=True)
+    assert ok, f"first differing leaf: {bad}"
+
+
+@needs_spawn
+def test_elastic_4proc_acceptance(tmp_path):
+    """The headline acceptance run: 4 processes, 8 nodes, a mid-run
+    dropout + rejoin plus a REAL straggler sleep — completes, records the
+    straggler in the per-worker round-time stream, and the final state is
+    bitwise the single-process simulation of the same fault schedule."""
+    from repro.runtime import launch, simulate_reference
+
+    cfg = RuntimeConfig(n_nodes=8, n_rounds=6, batch_size=4)
+    sleep_s = 0.4
+    plan = (ChaosEvent(round=2, action="kill", worker=2),
+            ChaosEvent(round=3, action="sleep", worker=0, seconds=sleep_s),
+            ChaosEvent(round=4, action="rejoin", worker=2))
+    stream = str(tmp_path / "telemetry.jsonl")
+    res = launch(cfg, 4, plan=plan, stream_path=stream)
+
+    expected = np.ones((6, 8), dtype=bool)
+    expected[2:4, 4:6] = False                # worker 2 owns nodes 4..5
+    np.testing.assert_array_equal(res.active_log, expected)
+    assert res.epochs[-1] >= 2                # kill + rejoin epochs
+
+    # the injected straggler sleep is visible in worker 0's round time and
+    # in nobody else's
+    r3 = [(rec["run"]["process"], rec["value"])
+          for rec in res.worker_records
+          if rec.get("stream") == "contrib_seconds" and rec.get("step") == 3]
+    times = dict(r3)
+    assert times["worker:0"] >= sleep_s
+    assert all(v < sleep_s for p, v in times.items() if p != "worker:0")
+
+    ref = simulate_reference(cfg, res.active_log)
+    ok, bad = leaves_equal(res.final_leaves, ref["wire_leaves"], verbose=True)
+    assert ok, f"first differing leaf: {bad}"

@@ -194,6 +194,66 @@ def test_difference_publishing_contracts(codec):
     assert pub.message_bytes(live) < raw
 
 
+@pytest.mark.parametrize("codec", [None, "qsgd", "top_k:0.25"])
+def test_publish_packed_byte_equal_and_subscriber_replay(codec):
+    """Two halves of the packed-wire guarantee:
+
+    1. publish IS publish_packed minus the message (same shared apply
+       path): states and info agree bitwise when advanced side by side;
+    2. a remote SUBSCRIBER replaying only the packed messages through its
+       own jitted ``apply_packed`` stays byte-equal with the publisher's
+       estimate — publisher and replica never diverge — and lossy packed
+       messages move fewer actual bytes than the raw parameter tree.
+
+    (1) is checked on the eager path: two *independently jitted* programs
+    are not comparable bitwise here — an ulp of fusion drift before the
+    stochastic quantizer's floor jumps a whole level, the same caveat as
+    the gated/ungated round executors."""
+    pub = SnapshotPublisher(codec=codec, bounds=(1, 3))
+    pk_state = pub.init(_tree(0), key=jax.random.key(7))
+    sub_state = pub.init(_tree(0), key=jax.random.key(7))
+    publish_packed = jax.jit(pub.publish_packed)
+    apply_packed = jax.jit(pub.apply_packed)
+
+    raw_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(_tree(0)))
+    for s in range(6):
+        live = _tree(s, scale=0.5 + s)
+        pk_state, pk_info, packed = publish_packed(pk_state, live)
+        sub_state = apply_packed(sub_state, packed)
+        # (2) publisher estimate == subscriber estimate, every publish
+        for a, b in zip(jax.tree.leaves(pk_state.hat),
+                        jax.tree.leaves(sub_state.hat)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(pk_state.age),
+                                      np.asarray(sub_state.age))
+        if codec is not None:
+            # the message that crosses the host boundary is the QUANTIZED
+            # payload — per replica link, smaller than shipping the raw tree
+            assert pub.packed_bytes(packed) < pub.n_replicas * raw_bytes, codec
+
+    # (1) eager side-by-side: publish and publish_packed advance one shared
+    # state identically (bitwise), info included
+    a_state = pub.init(_tree(0), key=jax.random.key(9))
+    b_state = pub.init(_tree(0), key=jax.random.key(9))
+    for s in range(4):
+        live = _tree(10 + s, scale=1.0 + s)
+        a_state, a_info = pub.publish(a_state, live)
+        b_state, b_info, _ = pub.publish_packed(b_state, live)
+        for a, b in zip(jax.tree.leaves((a_state.hat, a_state.age,
+                                         a_state.sent, a_state.seq)),
+                        jax.tree.leaves((b_state.hat, b_state.age,
+                                         b_state.sent, b_state.seq))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(a_state.key)),
+            np.asarray(jax.random.key_data(b_state.key)),
+        )
+        for k in a_info:
+            np.testing.assert_array_equal(
+                np.asarray(a_info[k]), np.asarray(b_info[k])
+            )
+
+
 # ------------------------------------------------------- ReplicaSet (simulator)
 def test_replicaset_simulator_roundtrip():
     """Simulator-engine round-trip: train, publish the node mean each round;
@@ -451,6 +511,30 @@ def test_serving_snapshot_sharded_engine():
                 den = sum(float(jnp.sum(b ** 2)) for b in jax.tree.leaves(live))
                 assert (num / max(den, 1e-12)) ** 0.5 < 0.35, name
             print(name, "SHARDED SNAPSHOT OK", rs.ages())
+
+        # packed publish straight from the sharded engine's RESIDENT params:
+        # diff+quantize run device-side under jit; the host transfer is the
+        # packed payload (int8 levels + scales), NOT the parameter tree —
+        # and the state it produces is byte-equal to the plain publish
+        from repro.serving import SnapshotPublisher
+        pub = SnapshotPublisher(codec="qsgd", bounds=(1, 2))
+        s_ref = pub.init(mean(st.params), key=jax.random.key(3))
+        s_pk = pub.init(mean(st.params), key=jax.random.key(3))
+        ppacked = jax.jit(pub.publish_packed)
+        pplain = jax.jit(pub.publish)
+        for r in range(3):
+            st, _ = step(st, bat(j.round_len, jax.random.key(10 + r)))
+            live = mean(st.params)
+            s_ref, _ = pplain(s_ref, live)
+            s_pk, _, packed = ppacked(s_pk, live)
+            host_msg = jax.device_get(packed)       # the actual host transfer
+        for a, b in zip(jax.tree.leaves((s_ref.hat, s_ref.age, s_ref.sent)),
+                        jax.tree.leaves((s_pk.hat, s_pk.age, s_pk.sent))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        raw = sum(np.asarray(l).nbytes for l in jax.tree.leaves(mean(st.params)))
+        moved = pub.packed_bytes(host_msg)
+        assert moved < pub.n_replicas * raw, (moved, raw)
+        print("PACKED SHARDED OK", moved, "<", pub.n_replicas * raw)
 
         # per-buffer channel mapping on the sharded engine: mixed wire specs
         jp = make_train_job(cfg, mesh, algorithm="dse_mvr", tau=3, lr=1e-2,
