@@ -30,7 +30,11 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry,elastic")
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry,elastic",
+                   help="comma-separated bench selection; add 'sentinel' to "
+                        "diff fresh results against the committed BENCH_*.json "
+                        "baselines (benchmarks/sentinel.py; non-zero exit on "
+                        "regression)")
     p.add_argument("--fast", action="store_true", help="short runs (CI smoke)")
     p.add_argument("--smoke", action="store_true",
                    help="alias for --fast; CI smoke jobs use this spelling")
@@ -111,6 +115,13 @@ def _run_selected(only, args):
     if "elastic" in only:
         from . import elastic_bench
         rows = elastic_bench.main(smoke=args.fast)
+        all_rows += rows
+        _csv(rows)
+    if "sentinel" in only:
+        # LAST: diffs whatever the selected benches just wrote against the
+        # committed baselines; raises SystemExit(1) on regression
+        from . import sentinel
+        rows = sentinel.run()
         all_rows += rows
         _csv(rows)
 

@@ -1,0 +1,273 @@
+"""Benchmark regression sentinel: fresh results vs committed baselines.
+
+The committed ``benchmarks/results/BENCH_*.json`` files are the repo's
+performance/quality contract; this module diffs a fresh bench run against
+them with PER-METRIC tolerance bands and exits non-zero on regression, so
+CI catches "the gossip channel got 3x slower" or "tracking error doubled"
+without anyone eyeballing JSON diffs.
+
+Metric classes (see ``METRIC_BANDS``):
+
+  * **timing** (``us_per_call``, ``wall_s``, ...) — ratio band; generous
+    (CI machines are noisy, shared and heterogeneous), catches order-of-
+    magnitude cliffs, not 10% drift;
+  * **quality** (losses, tracking/consensus errors, byte ratios) — tight
+    relative band, one-sided: only DEGRADATION (per the metric's direction)
+    fails; improvements pass and just get reported;
+  * **invariant** (``bit_identical``, ``launches_per_tree``, derived cost
+    models, row presence) — exact: any change fails.
+
+Rows are matched across runs by a per-file identity key (``name`` or the
+grid coordinates).  Baseline rows missing from the fresh run fail (a bench
+silently dropping coverage IS a regression); fresh rows without a baseline
+pass with a note (new coverage).
+
+Baselines are read from ``git show HEAD:<path>`` so the sentinel still works
+after the fresh run overwrote the results directory in place; outside a git
+checkout it falls back to a ``--baseline-dir``.
+
+CLI (registered in ``benchmarks/run.py`` as ``--only sentinel``):
+
+  PYTHONPATH=src python -m benchmarks.sentinel [--files BENCH_x.json,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join("benchmarks", "results")
+
+#: metric -> (class, direction).  direction "down" = smaller is better,
+#: "up" = bigger is better; invariants have no direction.
+METRIC_BANDS: Dict[str, Tuple[str, str]] = {
+    # timing — ratio-banded, higher is worse
+    "us_per_call": ("timing", "down"),
+    "us_per_step": ("timing", "down"),
+    "us_per_round": ("timing", "down"),
+    "wall_s": ("timing", "down"),
+    "resync_ms": ("timing", "down"),
+    "seconds_per_round": ("timing", "down"),
+    # throughput — ratio-banded, lower is worse
+    "rounds_per_sec": ("timing", "up"),
+    "requests_per_sec": ("timing", "up"),
+    "speedup_vs_python_dispatch": ("timing", "up"),
+    # quality — tight relative band, one-sided by direction
+    "final_train_loss": ("quality", "down"),
+    "final_tracking_err": ("quality", "down"),
+    "final_consensus": ("quality", "down"),
+    "mean_tracking_err": ("quality", "down"),
+    "mean_compression_err": ("quality", "down"),
+    "eval_loss_served": ("quality", "down"),
+    "overhead_pct": ("quality", "down"),
+    "bytes_ratio": ("quality", "up"),
+    "bytes_ratio_vs_raw": ("quality", "up"),
+    # invariants — exact match required
+    "bit_identical": ("invariant", ""),
+    "launches_per_tree": ("invariant", ""),
+    "n_leaves": ("invariant", ""),
+    "n_elems": ("invariant", ""),
+    "derived_gb_moved": ("invariant", ""),
+    "derived_gflops": ("invariant", ""),
+    "derived_tpu_us_at_hbm_bw": ("invariant", ""),
+}
+
+#: class -> allowed degradation as a multiplicative factor on the worse side
+TOLERANCE = {
+    "timing": 3.0,     # CI wall-clock noise routinely hits 2x; 3x = a cliff
+    "quality": 1.15,   # convergence metrics are seeded + deterministic-ish
+}
+
+#: fields identifying a row within each file (first present key wins per
+#: field; joined into the row key)
+ROW_KEYS = ("name", "bench", "method", "engine", "variant", "codec",
+            "channel", "compression", "bound", "omega", "procs", "scenario",
+            "n_procs", "fault")
+
+
+def _row_key(row: Dict[str, Any]) -> str:
+    return "|".join(
+        f"{k}={row[k]}" for k in ROW_KEYS
+        if k in row and not isinstance(row[k], (dict, list))
+    )
+
+
+def _rows_of(doc: Any) -> List[Dict[str, Any]]:
+    """BENCH files are either a bare row list or {"run": ..., "rows": [...]}."""
+    if isinstance(doc, dict):
+        return list(doc.get("rows", []))
+    return list(doc)
+
+
+def load_baseline(fname: str, baseline_dir: Optional[str] = None) -> Optional[Any]:
+    """The committed version of ``benchmarks/results/<fname>`` — from git
+    HEAD when available (survives the fresh run overwriting the worktree),
+    else from ``baseline_dir``."""
+    rel = f"{RESULTS_DIR}/{fname}".replace(os.sep, "/")
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=30,
+        )
+        if out.returncode == 0 and out.stdout:
+            return json.loads(out.stdout)
+    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
+        pass
+    if baseline_dir:
+        path = os.path.join(baseline_dir, fname)
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    return None
+
+
+def _compare_metric(key: str, metric: str, base: Any, fresh: Any) -> Optional[str]:
+    """A failure message, or None if within band."""
+    cls, direction = METRIC_BANDS[metric]
+    if base is None:
+        # the metric legitimately doesn't apply to this row (e.g. tracking
+        # error for non-tracking algorithms) — nothing to regress from,
+        # unless the fresh run suddenly reports a value (schema drift)
+        return None if fresh is None else (
+            f"{key}: {metric} appeared ({fresh!r}) where baseline has null")
+    if fresh is None:
+        return f"{key}: {metric} vanished (baseline {base!r} -> null)"
+    if cls == "invariant":
+        if base != fresh:
+            return (f"{key}: invariant {metric} changed "
+                    f"{base!r} -> {fresh!r}")
+        return None
+    try:
+        b, f = float(base), float(fresh)
+    except (TypeError, ValueError):
+        return f"{key}: {metric} not comparable ({base!r} -> {fresh!r})"
+    tol = TOLERANCE[cls]
+    # one-sided: only the degrading direction can fail
+    if direction == "down":  # smaller is better; worse = bigger
+        # quality bands are relative to |baseline| (with an absolute floor
+        # so near-zero baselines don't become zero-tolerance)
+        limit = b + (tol - 1.0) * max(abs(b), 1e-9) if cls == "quality" \
+            else b * tol
+        if f > limit:
+            return (f"{key}: {metric} regressed {b:g} -> {f:g} "
+                    f"(band {tol}x, smaller-is-better)")
+    else:                    # bigger is better; worse = smaller
+        if f < b / tol:
+            return (f"{key}: {metric} regressed {b:g} -> {f:g} "
+                    f"(band {tol}x, bigger-is-better)")
+    return None
+
+
+def compare_rows(fname: str, base_rows: List[dict], fresh_rows: List[dict],
+                 ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) from diffing one file's row sets."""
+    failures: List[str] = []
+    notes: List[str] = []
+    fresh_by_key = {_row_key(r): r for r in fresh_rows}
+    for brow in base_rows:
+        key = f"{fname}::{_row_key(brow)}"
+        frow = fresh_by_key.pop(_row_key(brow), None)
+        if frow is None:
+            failures.append(f"{key}: row missing from fresh run "
+                            "(coverage regression)")
+            continue
+        for metric, bval in brow.items():
+            if metric not in METRIC_BANDS:
+                continue
+            if metric not in frow:
+                failures.append(f"{key}: metric {metric} missing from fresh row")
+                continue
+            msg = _compare_metric(key, metric, bval, frow[metric])
+            if msg:
+                failures.append(msg)
+    for key in fresh_by_key:
+        notes.append(f"{fname}::{key}: new row (no baseline) — passes")
+    return failures, notes
+
+
+def run(files: Optional[Iterable[str]] = None,
+        results_dir: str = RESULTS_DIR,
+        baseline_dir: Optional[str] = None) -> List[dict]:
+    """Sentinel over every requested (or every committed-and-present) BENCH
+    file; returns summary rows (one per file) and raises SystemExit(1) on
+    any regression."""
+    if files is None:
+        files = sorted(
+            f for f in os.listdir(results_dir)
+            if f.startswith("BENCH_") and f.endswith(".json")
+            and not f.endswith("_timing.json")  # volatile side-files
+        )
+    all_failures: List[str] = []
+    rows: List[dict] = []
+    for fname in files:
+        fresh_path = os.path.join(results_dir, fname)
+        if not os.path.exists(fresh_path):
+            print(f"[sentinel] {fname}: no fresh result, skipping")
+            continue
+        baseline = load_baseline(fname, baseline_dir)
+        if baseline is None:
+            print(f"[sentinel] {fname}: no committed baseline, skipping")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        fresh_rows = _rows_of(fresh)
+        # benches that split volatile timings into a side-file (e.g.
+        # BENCH_kernels_timing.json) get them merged back for comparison:
+        # the stable file stays diff-clean, but a baseline that carries
+        # timing fields still gets its tolerance bands checked
+        timing_path = os.path.join(
+            results_dir, fname[: -len(".json")] + "_timing.json"
+        )
+        if os.path.exists(timing_path):
+            with open(timing_path) as f:
+                timing_by_key = {_row_key(r): r for r in _rows_of(json.load(f))}
+            fresh_rows = [
+                {**timing_by_key.get(_row_key(r), {}), **r}
+                for r in fresh_rows
+            ]
+        failures, notes = compare_rows(
+            fname, _rows_of(baseline), fresh_rows
+        )
+        for n in notes:
+            print(f"[sentinel] note: {n}")
+        for msg in failures:
+            print(f"[sentinel] FAIL: {msg}", file=sys.stderr)
+        status = "fail" if failures else "ok"
+        print(f"[sentinel] {fname}: {status} "
+              f"({len(_rows_of(baseline))} baseline rows, "
+              f"{len(failures)} regressions)")
+        rows.append({
+            "bench": "sentinel", "name": fname, "status": status,
+            "baseline_rows": len(_rows_of(baseline)),
+            "regressions": len(failures),
+        })
+        all_failures += failures
+    if all_failures:
+        raise SystemExit(
+            f"sentinel: {len(all_failures)} regression(s) vs committed "
+            "baselines (see FAIL lines above)"
+        )
+    return rows
+
+
+def main(argv=None) -> List[dict]:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--files", default=None,
+                   help="comma-separated BENCH_*.json names "
+                        "(default: every committed baseline present)")
+    p.add_argument("--results-dir", default=RESULTS_DIR)
+    p.add_argument("--baseline-dir", default=None,
+                   help="fallback baseline directory when git HEAD is "
+                        "unavailable")
+    args = p.parse_args(argv)
+    files = args.files.split(",") if args.files else None
+    return run(files, results_dir=args.results_dir,
+               baseline_dir=args.baseline_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -68,10 +68,21 @@ def _main_elastic(args):
     print(f"[train] elastic runtime: {args.num_processes} processes x "
           f"{cfg.host_devices} devices, {cfg.n_nodes} nodes, "
           f"{cfg.n_rounds} rounds ({cfg.problem}/{cfg.algorithm})")
-    res = launch(cfg, args.num_processes, stream_path=args.telemetry_out)
+    res = launch(cfg, args.num_processes, stream_path=args.telemetry_out,
+                 trace_path=args.trace_out, http_port=args.http_port)
     print(f"[train] done: {res.rounds_per_sec:.2f} rounds/s, "
           f"final epoch {res.epochs[-1]}, wall {res.wall_s:.1f}s "
           f"(logs: {res.run_dir})")
+    if res.trace_path:
+        print(f"[train] trace: {res.trace_path} "
+              f"(load in Perfetto / chrome://tracing)")
+    if res.diagnostics:
+        d = res.diagnostics
+        anomalies = ", ".join(
+            f"{a['kind']}@r{a['step']}" for a in d["anomalies"]
+        ) or "none"
+        print(f"[train] diagnostics: verdict={d['verdict']} "
+              f"anomalies=[{anomalies}]")
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         summary = {
@@ -83,6 +94,7 @@ def _main_elastic(args):
             "resync_seconds": res.resync_seconds,
             "active_log": res.active_log.astype(int).tolist(),
             "wall_s": res.wall_s,
+            "diagnostics": res.diagnostics,
         }
         with open(os.path.join(args.out, "elastic_summary.json"), "w") as f:
             json.dump(summary, f, indent=1)
@@ -118,6 +130,14 @@ def main(argv=None):
     p.add_argument("--telemetry-out", default=None, metavar="FILE",
                    help="record fenced per-round spans, per-channel link-byte "
                         "counters and loss gauges to a run-stamped JSONL file")
+    p.add_argument("--trace-out", default=None, metavar="FILE",
+                   help="elastic mode: stitch every process's spans into one "
+                        "Chrome trace-event / Perfetto JSON file (per-round "
+                        "trace ids across coordinator + workers)")
+    p.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                   help="elastic mode: serve the live fleet-health plane "
+                        "(/metrics /healthz /trace /diagnostics) from the "
+                        "coordinator on PORT (0 = ephemeral)")
     # elastic multi-process runtime (repro.runtime)
     p.add_argument("--num-processes", type=int, default=0, metavar="N",
                    help="run the rounds across N real worker processes via "

@@ -30,6 +30,7 @@ their committed start-of-round state.
 from __future__ import annotations
 
 import tempfile
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -39,11 +40,14 @@ from ..checkpoint import ResyncStore
 from ..core import make_algorithm
 from ..scenarios import Scenario, renormalize_dropout
 from ..telemetry import (
-    JsonlWriter, Telemetry, register_runtime_streams, run_metadata,
+    DiagnosticsMonitor, JsonlWriter, RecordCursor, Telemetry, TraceRecorder,
+    new_run_id, register_runtime_streams, round_trace_id, run_metadata,
+    trace_events, write_chrome_trace,
 )
 from .chaos import ChaosController, ChaosEvent, by_round
 from .config import RuntimeConfig, owned_nodes
 from .group import ProcessGroup
+from .protocol import attach_trace
 
 __all__ = ["Coordinator", "CoordinatorResult", "base_scenario"]
 
@@ -70,6 +74,8 @@ class CoordinatorResult:
         self.round_seconds: List[float] = []
         self.worker_records: List[dict] = []
         self.wall_s: float = 0.0
+        self.trace_path: Optional[str] = None
+        self.diagnostics: Optional[Dict[str, Any]] = None
 
 
 class Coordinator:
@@ -83,6 +89,7 @@ class Coordinator:
         stream_path: Optional[str] = None,
         resync_dir: Optional[str] = None,
         jax_coordinator: Optional[str] = None,
+        trace_path: Optional[str] = None,
     ):
         self.cfg = config
         self.n_workers = int(n_workers)
@@ -90,6 +97,7 @@ class Coordinator:
         self.controller = controller
         self.actions = by_round(plan)
         self.jax_coordinator = jax_coordinator
+        self.trace_path = trace_path
 
         self.hub = Telemetry(
             config=config.to_config(), spans=False,
@@ -99,6 +107,21 @@ class Coordinator:
         self.writer = (
             JsonlWriter(stream_path, self.hub.meta) if stream_path else None
         )
+        # causal tracing + convergence watching + the /healthz snapshot:
+        # the run id prefixes every round's trace id; the coordinator's own
+        # spans/instants drain through a PERSISTENT cursor (so the trace
+        # file and the JSONL stream each see every record exactly once) and
+        # every drained record — ours and the workers' — is retained in
+        # ``_records`` for stitching.  ``obs_lock`` guards all of it against
+        # the FleetServer's probe threads.
+        self.run_id = new_run_id()
+        self.tracer = TraceRecorder(self.hub)
+        self.diag = DiagnosticsMonitor(self.hub)
+        self.obs_lock = threading.RLock()
+        self._cursor = RecordCursor(self.hub)
+        self._records: List[dict] = []
+        self._cur_trace: Optional[str] = None
+        self._round_now = 0
         self.store = ResyncStore(
             resync_dir or tempfile.mkdtemp(prefix="repro-resync-")
         )
@@ -120,6 +143,15 @@ class Coordinator:
         self._sleep_map: Dict[int, float] = {}
 
     # -- event plumbing -------------------------------------------------
+    def _epoch_instant(self, reason: str, wid: int) -> None:
+        """Mark a membership-epoch transition on the coordinator's trace
+        track (and feed the fault context to the diagnostics monitor)."""
+        with self.obs_lock:
+            self.tracer.instant(
+                "epoch_bump", trace=self._cur_trace, step=self._round_now,
+                worker=wid, reason=reason, to_epoch=self.group.epoch,
+            )
+
     def _handle_background(self, evt) -> None:
         """hello -> queue for the next boundary; eof -> membership rewrite."""
         kind = evt[0]
@@ -127,6 +159,7 @@ class Coordinator:
             self._pending_joins.append(evt[1:])
         elif kind == "eof":
             self.group.mark_dead(evt[1])
+            self._epoch_instant("eof", evt[1])
         # stray msgs between rounds are stale echoes: drop
 
     def _wait_msg(self, wid: int, want: str, timeout_s: float) -> dict:
@@ -139,6 +172,7 @@ class Coordinator:
                 return evt[2]
             if evt[0] == "eof" and evt[1] == wid:
                 self.group.mark_dead(wid)
+                self._epoch_instant("eof", wid)
                 raise RuntimeError(f"worker {wid} died awaiting {want!r}")
             self._handle_background(evt)
         raise TimeoutError(f"worker {wid}: no {want!r} within {timeout_s:.0f}s")
@@ -176,17 +210,21 @@ class Coordinator:
 
     def _resync(self, wid: int, round_: int) -> None:
         """Serve the canonical bundle FROM DISK and wait for the ack."""
+        trace = round_trace_id(self.run_id, round_)
         t0 = time.perf_counter()
-        leaves, key_data, loaded_round, _meta = self.store.load()
-        if loaded_round != round_:
-            raise RuntimeError(
-                f"resync bundle is for round {loaded_round}, need {round_}"
-            )
-        self.group.send(wid, {
-            "type": "resync", "leaves": leaves, "key": key_data,
-            "round": round_, "epoch": self.group.epoch,
-        })
-        self._wait_msg(wid, "resync_ok", _JOIN_TIMEOUT_S)
+        with self.tracer.span("resync", trace=trace, step=round_,
+                              epoch=self.group.epoch) as info:
+            info["worker"] = wid
+            leaves, key_data, loaded_round, _meta = self.store.load()
+            if loaded_round != round_:
+                raise RuntimeError(
+                    f"resync bundle is for round {loaded_round}, need {round_}"
+                )
+            self.group.send(wid, attach_trace({
+                "type": "resync", "leaves": leaves, "key": key_data,
+                "round": round_, "epoch": self.group.epoch,
+            }, trace))
+            self._wait_msg(wid, "resync_ok", _JOIN_TIMEOUT_S)
         dt = time.perf_counter() - t0
         self.result.resync_seconds.append(dt)
         self.hub.record("resync_seconds", dt, step=round_)
@@ -197,12 +235,14 @@ class Coordinator:
         for wid in self.group.recovered():
             self._resync(wid, round_)
             self.group.unsuspend(wid)
+            self._epoch_instant("recovered", wid)
         while self._pending_joins:
             wid, _rejoin, conn = self._pending_joins.pop(0)
             self._welcome(wid, conn, round_, need_init=False)
             self._wait_msg(wid, "ready", _JOIN_TIMEOUT_S)
             self._resync(wid, round_)
             self.group.bump_epoch()
+            self._epoch_instant("rejoin", wid)
 
     def _apply_chaos(self, round_: int) -> None:
         for ev in self.actions.get(round_, ()):
@@ -273,6 +313,7 @@ class Coordinator:
                 if stale:
                     for wid in stale:
                         self.group.mark_suspended(wid)
+                        self._epoch_instant("heartbeat_stale", wid)
                     return None
                 continue
             kind = evt[0]
@@ -282,6 +323,7 @@ class Coordinator:
             if kind == "eof":
                 wid = evt[1]
                 self.group.mark_dead(wid)
+                self._epoch_instant("eof", wid)
                 if wid in waiting or wid in got:
                     return None
                 continue
@@ -324,6 +366,16 @@ class Coordinator:
         return mask
 
     def _try_round(self, r: int) -> bool:
+        with self.tracer.span("round", trace=self._cur_trace, step=r,
+                              epoch=self.group.epoch) as span_info:
+            ok = self._try_round_inner(r)
+            if not ok:
+                # the attempt is abandoned (membership changed mid-round);
+                # the SAME trace id will carry the re-issued attempt
+                span_info["abandoned"] = True
+        return ok
+
+    def _try_round_inner(self, r: int) -> bool:
         live = self.group.live()
         if not live:
             raise RuntimeError(f"round {r}: no live workers")
@@ -338,7 +390,7 @@ class Coordinator:
         lm_r = self.schedule.local_mask[r] & active[None, :]
         ep = self.group.epoch
         for wid in live:
-            self.group.send(wid, {
+            self.group.send(wid, attach_trace({
                 "type": "round", "round": r, "epoch": ep,
                 "w": w_r, "active": active, "local_mask": lm_r,
                 "pattern": int(self.schedule.pattern[r]),
@@ -351,16 +403,16 @@ class Coordinator:
                     else self.schedule.trigger[r]
                 ),
                 "sleep": self._sleep_map.get(wid, 0.0),
-            })
+            }, self._cur_trace))
         contribs = self._collect("contrib", r, ep, live)
         if contribs is None:
             return False
         state_full, batch_full = self._assemble(live, contribs)
         for wid in live:
-            self.group.send(wid, {
+            self.group.send(wid, attach_trace({
                 "type": "gather", "round": r, "epoch": ep,
                 "state": state_full, "batch": batch_full,
-            })
+            }, self._cur_trace))
         dones = self._collect("done", r, ep, live)
         if dones is None:
             return False
@@ -386,9 +438,78 @@ class Coordinator:
         for wid in sorted(dones):
             recs = dones[wid].get("records") or []
             self.result.worker_records.extend(recs)
+            with self.obs_lock:
+                self._records.extend(recs)
             if self.writer is not None:
                 self.writer.append(recs)
         return True
+
+    def _consensus_error(self, active: np.ndarray) -> Optional[float]:
+        """Host-side ``||X - X̄||²`` over the canonical stacked leaves,
+        restricted to active nodes — the coordinator's own view of the
+        paper's consensus quantity, cheap enough to compute every round
+        (the leaves are already on the host for the resync bundle)."""
+        if self.canonical is None or not active.any():
+            return None
+        total = 0.0
+        for leaf, stacked in zip(self.canonical, self.stacked_mask):
+            if not stacked:
+                continue
+            rows = np.asarray(leaf, dtype=np.float64)[active]
+            total += float(((rows - rows.mean(axis=0)) ** 2).sum())
+        return total
+
+    # -- live observability (FleetServer probe callbacks; all take the
+    # obs_lock so the HTTP threads never race the run loop) --------------
+    def health(self) -> Dict[str, Any]:
+        """The ``/healthz`` payload: membership + round progress."""
+        with self.obs_lock:
+            snap = self.group.health()
+            snap.update({
+                "run_id": self.run_id,
+                "round": self._round_now,
+                "n_rounds": self.cfg.n_rounds,
+                "n_workers": self.n_workers,
+            })
+            snap["ok"] = not snap["dead"] and not snap["suspended"]
+            return snap
+
+    def metrics_text(self) -> str:
+        """The ``/metrics`` payload: the coordinator hub's Prometheus
+        exposition (round/resync timing, membership, anomalies, spans)."""
+        with self.obs_lock:
+            return self.hub.prometheus()
+
+    def recent_trace(self, limit: int = 2000) -> List[dict]:
+        """The ``/trace`` payload: the last ``limit`` drained records,
+        stitched into Chrome trace events."""
+        with self.obs_lock:
+            return trace_events(self._records[-limit:])
+
+    def diagnose(self) -> Dict[str, Any]:
+        with self.obs_lock:
+            return self.diag.diagnose()
+
+    def _observe_round(self, r: int, dt: float) -> None:
+        """Post-round bookkeeping: runtime streams, the diagnostics feed
+        (host-side consensus over the canonical leaves + membership), and
+        the per-round drain of the coordinator's own records."""
+        with self.obs_lock:
+            self.hub.record("round_seconds", dt, step=r)
+            self.hub.record("membership_epoch", self.group.epoch, step=r)
+            self.hub.record("active_workers", len(self.group.live()), step=r)
+            for wid, age in self.group.heartbeat_ages().items():
+                self.hub.record("heartbeat_age", age, step=r,
+                                label=f"worker:{wid}")
+            self.diag.observe(
+                r, epoch=self.group.epoch,
+                consensus=self._consensus_error(self.result.active_log[r]),
+            )
+            chunk = self._cursor.drain()
+            self._records.extend(chunk)
+            if self.writer is not None:
+                self.writer.append(chunk)
+            self._round_now = r + 1
 
     # -- entry ----------------------------------------------------------
     def run(self) -> CoordinatorResult:
@@ -398,6 +519,7 @@ class Coordinator:
         )
         self._startup()
         for r in range(self.cfg.n_rounds):
+            self._cur_trace = round_trace_id(self.run_id, r)
             self._apply_chaos(r)
             self._process_joins(r)
             t_round = time.perf_counter()
@@ -407,21 +529,23 @@ class Coordinator:
             dt = time.perf_counter() - t_round
             self.result.round_seconds.append(dt)
             self.result.epochs.append(self.group.epoch)
-            self.hub.record("round_seconds", dt, step=r)
-            self.hub.record("membership_epoch", self.group.epoch, step=r)
-            self.hub.record("active_workers", len(self.group.live()), step=r)
-            for wid, age in self.group.heartbeat_ages().items():
-                self.hub.record("heartbeat_age", age, step=r,
-                                label=f"worker:{wid}")
+            self._observe_round(r, dt)
             self.store.save(r + 1, self.canonical, self.canonical_key,
                             {"epoch": self.group.epoch})
         for wid in self.group.live():
             self.group.send(wid, {"type": "shutdown"})
-        if self.writer is not None:
-            from ..telemetry import RecordCursor
-
-            self.writer.append(RecordCursor(self.hub).drain())
-            self.writer.close()
+        with self.obs_lock:
+            chunk = self._cursor.drain()
+            self._records.extend(chunk)
+            if self.writer is not None:
+                self.writer.append(chunk)
+                self.writer.close()
+            self.result.diagnostics = self.diag.diagnose()
+            if self.trace_path is not None:
+                # _records already holds the workers' drained records (they
+                # were folded in per-DONE), so this is the whole fleet
+                write_chrome_trace(self.trace_path, self._records)
+                self.result.trace_path = self.trace_path
         self.result.final_leaves = self.canonical
         self.result.final_key = self.canonical_key
         self.result.wall_s = time.perf_counter() - t_start

@@ -46,6 +46,7 @@ class ProcessGroup:
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self.events: "queue.Queue[Tuple[str, ...]]" = queue.Queue()
         self.handles: Dict[int, WorkerHandle] = {}
+        self.dead: set = set()  # EOF'd workers not (yet) reconnected
         self.epoch = 0
         self._lock = threading.Lock()
         self._closed = False
@@ -83,6 +84,7 @@ class ProcessGroup:
         handle = WorkerHandle(worker_id, conn, last_seen=time.monotonic())
         with self._lock:
             self.handles[worker_id] = handle
+            self.dead.discard(worker_id)
         threading.Thread(
             target=self._reader_loop, args=(handle,), daemon=True,
             name=f"pg-reader-{worker_id}",
@@ -121,6 +123,7 @@ class ProcessGroup:
         if h is not None:
             h.alive = False
             h.conn.close()
+        self.dead.add(worker_id)
         self.bump_epoch()
 
     def mark_suspended(self, worker_id: int) -> None:
@@ -155,6 +158,24 @@ class ProcessGroup:
     def heartbeat_ages(self) -> Dict[int, float]:
         now = time.monotonic()
         return {wid: now - self.handles[wid].last_seen for wid in self.live()}
+
+    def suspended(self) -> List[int]:
+        return sorted(wid for wid, h in self.handles.items() if h.suspended)
+
+    def health(self) -> Dict[str, object]:
+        """One JSON-able membership snapshot — the ``/healthz`` payload's
+        group half (the coordinator layers round progress on top)."""
+        now = time.monotonic()
+        return {
+            "epoch": self.epoch,
+            "live": self.live(),
+            "suspended": self.suspended(),
+            "dead": sorted(self.dead),
+            "heartbeat_age_s": {
+                str(wid): round(now - h.last_seen, 3)
+                for wid, h in sorted(self.handles.items())
+            },
+        }
 
     # -- messaging ---------------------------------------------------------
     def send(self, worker_id: int, msg: dict) -> bool:

@@ -48,6 +48,9 @@ class ElasticResult:
     wall_s: float
     run_dir: str                        # resync bundles + worker logs
     stream_path: Optional[str] = None
+    trace_path: Optional[str] = None    # stitched Chrome/Perfetto trace file
+    http_address: Optional[str] = None  # fleet-health plane URL (if served)
+    diagnostics: Optional[dict] = None  # DiagnosticsMonitor.diagnose() report
 
     @property
     def rounds_per_sec(self) -> float:
@@ -76,6 +79,8 @@ def launch(
     stream_path: Optional[str] = None,
     run_dir: Optional[str] = None,
     env_overrides: Optional[Dict[str, str]] = None,
+    trace_path: Optional[str] = None,
+    http_port: Optional[int] = None,
 ) -> ElasticResult:
     """Run ``config.n_rounds`` elastic rounds over ``n_workers`` processes.
 
@@ -84,6 +89,12 @@ def launch(
                   streams) lands in this one run-stamped JSONL.
     run_dir:      holds resync bundles and per-worker logs (a temp dir by
                   default; kept on failure for post-mortem).
+    trace_path:   when set, the coordinator stitches every process's span
+                  events into ONE Chrome trace-event / Perfetto JSON file
+                  (shared per-round trace ids; see repro.telemetry.trace).
+    http_port:    when set (0 = ephemeral), serve the live fleet-health
+                  plane — /metrics, /healthz, /trace, /diagnostics — from
+                  the coordinator for the duration of the run.
     """
     if config.jax_distributed and any(
         ev.action in ("kill", "rejoin") for ev in plan or ()
@@ -124,8 +135,21 @@ def launch(
         config, n_workers, group,
         controller=controller, plan=plan,
         stream_path=stream_path, resync_dir=resync_dir,
-        jax_coordinator=jax_coordinator,
+        jax_coordinator=jax_coordinator, trace_path=trace_path,
     )
+    server = None
+    http_address = None
+    if http_port is not None:
+        from ..telemetry import FleetServer
+
+        server = FleetServer(
+            port=http_port,
+            metrics=coordinator.metrics_text,
+            health=coordinator.health,
+            trace=coordinator.recent_trace,
+            diagnostics=coordinator.diagnose,
+        ).start()
+        http_address = server.url
     try:
         for wid in range(n_workers):
             controller.spawn(wid)
@@ -142,6 +166,8 @@ def launch(
     finally:
         controller.shutdown()
         group.close()
+        if server is not None:
+            server.close()
 
     return ElasticResult(
         config=config,
@@ -156,4 +182,7 @@ def launch(
         wall_s=res.wall_s,
         run_dir=run_dir,
         stream_path=stream_path,
+        trace_path=res.trace_path,
+        http_address=http_address,
+        diagnostics=res.diagnostics,
     )

@@ -22,9 +22,26 @@ import struct
 import threading
 from typing import Any, Dict, Optional
 
-__all__ = ["send_msg", "recv_msg", "MessageSocket", "connect_with_retry"]
+__all__ = [
+    "send_msg", "recv_msg", "MessageSocket", "connect_with_retry",
+    "TRACE_FIELD", "attach_trace",
+]
 
 _LEN = struct.Struct(">Q")
+
+#: the causal-tracing carrier: every round-scoped control message (round,
+#: gather, resync) carries the coordinator-minted per-round trace id under
+#: this key; workers tag their span events with it so the coordinator-side
+#: drain can stitch all processes' spans into one timeline
+#: (``repro.telemetry.trace``).  Optional on the wire — old peers ignore it.
+TRACE_FIELD = "trace"
+
+
+def attach_trace(msg: Dict[str, Any], trace: Optional[str]) -> Dict[str, Any]:
+    """Stamp ``msg`` with the round's trace id (no-op for ``trace=None``)."""
+    if trace is not None:
+        msg[TRACE_FIELD] = trace
+    return msg
 #: hard cap on one control message (corrupt length prefixes fail fast
 #: instead of attempting a multi-GB allocation)
 MAX_MESSAGE_BYTES = 1 << 33

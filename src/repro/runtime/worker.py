@@ -57,7 +57,8 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
     import jax.numpy as jnp
 
     from ..telemetry import (
-        RecordCursor, Telemetry, register_runtime_streams, run_metadata,
+        RecordCursor, Telemetry, TraceRecorder, register_runtime_streams,
+        run_metadata,
     )
     from .engine import WorkerEngine, restore_wire_leaves, wire_leaves
 
@@ -82,6 +83,10 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
     )
     register_runtime_streams(hub)
     cursor = RecordCursor(hub)
+    # span events (with their wall-clock anchors + the coordinator-minted
+    # trace id off each round/resync message) ride the same cursor drain
+    # in DONE messages — the coordinator stitches them into one timeline
+    tracer = TraceRecorder(hub)
 
     stop = threading.Event()
     threading.Thread(
@@ -119,10 +124,14 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
                 # adopt the canonical state wholesale (rejoin or in-place
                 # recovery after a stall) — template comes from our own
                 # engine, only the leaf VALUES cross the wire
-                committed = (
-                    restore_wire_leaves(committed[0], msg["leaves"]),
-                    jax.random.wrap_key_data(jnp.asarray(msg["key"])),
-                )
+                with tracer.span("resync", trace=msg.get("trace"),
+                                 step=int(msg["round"]),
+                                 epoch=int(msg["epoch"])):
+                    committed = (
+                        restore_wire_leaves(committed[0], msg["leaves"]),
+                        jax.random.wrap_key_data(jnp.asarray(msg["key"])),
+                    )
+                    jax.block_until_ready(committed[0])
                 committed_round = int(msg["round"])
                 epoch = int(msg["epoch"])
                 pending = None
@@ -141,16 +150,20 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
                 # resyncs stragglers explicitly, so just wait
                 continue
 
+            trace = msg.get("trace")
             sleep_s = float(msg.get("sleep") or 0.0)
             t0 = time.perf_counter()
             if sleep_s:
-                time.sleep(sleep_s)  # the REAL straggler
+                with tracer.span("straggler_sleep", trace=trace, step=r,
+                                 epoch=epoch):
+                    time.sleep(sleep_s)  # the REAL straggler
             st, k = committed
-            post_local, k = engine.run_local(st, k, np.asarray(msg["local_mask"]))
-            k, last = engine.sample_comm_batch(k)
-            owned = np.asarray(engine.owned)
-            state_rows = engine.owned_rows(post_local)  # np.asarray fences device work
-            batch_rows = tuple(np.asarray(b)[owned] for b in last)
+            with tracer.span("local", trace=trace, step=r, epoch=epoch):
+                post_local, k = engine.run_local(st, k, np.asarray(msg["local_mask"]))
+                k, last = engine.sample_comm_batch(k)
+                owned = np.asarray(engine.owned)
+                state_rows = engine.owned_rows(post_local)  # np.asarray fences device work
+                batch_rows = tuple(np.asarray(b)[owned] for b in last)
             contrib_s = time.perf_counter() - t0
             hub.record("contrib_seconds", contrib_s, step=r)
             conn.send({
@@ -166,13 +179,15 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
                 t2 = m2.get("type")
                 if (t2 == "gather" and int(m2["round"]) == r
                         and int(m2["epoch"]) == epoch):
-                    assembled = engine.set_stacked(post_local, m2["state"])
-                    post_comm = engine.run_comm(
-                        assembled, m2["batch"],
-                        (msg["w"], msg["active"], msg["local_mask"],
-                         msg["pattern"], msg.get("comp_scale"), msg.get("trigger")),
-                    )
-                    jax.block_until_ready(post_comm)
+                    with tracer.span("gossip", trace=m2.get("trace", trace),
+                                     step=r, epoch=epoch):
+                        assembled = engine.set_stacked(post_local, m2["state"])
+                        post_comm = engine.run_comm(
+                            assembled, m2["batch"],
+                            (msg["w"], msg["active"], msg["local_mask"],
+                             msg["pattern"], msg.get("comp_scale"), msg.get("trigger")),
+                        )
+                        jax.block_until_ready(post_comm)
                     pending = (post_comm, k)
                     pending_round = r + 1
                     conn.send({

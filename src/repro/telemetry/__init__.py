@@ -9,8 +9,11 @@
     print(hub.prometheus())                # text exposition
 
 See ``registry.py`` (the hub + typed stream registry), ``spans.py``
-(fenced phase timers, ``--profile`` trace bracketing) and ``export.py``
-(JSONL sink, Prometheus text, run metadata).
+(fenced phase timers, ``--profile`` trace bracketing), ``export.py``
+(JSONL sink, Prometheus text, run metadata), ``trace.py`` (cross-process
+causal tracing -> Chrome trace-event / Perfetto JSON), ``diagnostics.py``
+(online convergence diagnostics + anomaly events) and ``http.py`` (the
+coordinator's live /metrics /healthz /trace fleet-health plane).
 """
 from .registry import (
     RUNTIME_STREAM_FIELDS,
@@ -32,6 +35,16 @@ from .export import (
     write_jsonl,
 )
 from .spans import fence, profile_trace, span
+from .trace import (
+    TraceRecorder,
+    new_run_id,
+    round_trace_id,
+    trace_events,
+    trace_index,
+    write_chrome_trace,
+)
+from .diagnostics import DiagnosticsMonitor, OnlineStat
+from .http import FleetServer
 
 __all__ = [
     "Telemetry",
@@ -52,4 +65,13 @@ __all__ = [
     "span",
     "profile_trace",
     "fence",
+    "TraceRecorder",
+    "new_run_id",
+    "round_trace_id",
+    "trace_events",
+    "trace_index",
+    "write_chrome_trace",
+    "DiagnosticsMonitor",
+    "OnlineStat",
+    "FleetServer",
 ]

@@ -74,35 +74,18 @@ def write_jsonl(hub, path: str) -> int:
     Line 1 is a ``meta`` record; then every raw event (phase spans, in
     emission order) and every stream sample, each stamped with the run
     metadata under ``"run"``.
-    """
-    dirname = os.path.dirname(os.path.abspath(path))
-    os.makedirs(dirname, exist_ok=True)
-    n = 0
-    with open(path, "w") as f:
-        def emit(rec: Dict[str, Any]) -> None:
-            nonlocal n
-            rec["run"] = hub.meta
-            f.write(json.dumps(rec) + "\n")
-            n += 1
 
-        emit({"event": "meta", "streams": list(hub.streams)})
-        for ev in hub.events:
-            emit(dict(ev))
-        for name, entry in hub.collect().items():
-            spec = entry["spec"]
-            for label, series in entry["series"].items():
-                for step, value in zip(series["steps"], series["values"]):
-                    emit({
-                        "event": "sample", "stream": name,
-                        "kind": spec["kind"], "axis": spec["axis"],
-                        "label": label, "step": step, "value": value,
-                    })
-                if spec["kind"] == "counter":
-                    emit({
-                        "event": "total", "stream": name, "label": label,
-                        "total": series["total"],
-                    })
-    return n
+    This is :class:`RecordCursor` + :class:`JsonlWriter` — the exact
+    stamping path the elastic runtime drains workers through — run once
+    over a whole hub, so locally-exported and runtime-drained records can
+    never skew in shape.
+    """
+    writer = JsonlWriter(path, hub.meta, streams=list(hub.streams))
+    try:
+        writer.append(RecordCursor(hub).drain(totals=True))
+    finally:
+        writer.close()
+    return writer.count
 
 
 class RecordCursor:
@@ -118,7 +101,12 @@ class RecordCursor:
         self._event_pos = 0
         self._series_pos: Dict[Any, int] = {}
 
-    def drain(self) -> list:
+    def drain(self, *, totals: bool = False) -> list:
+        """``totals=True`` additionally emits each counter's running total
+        after its samples — only meaningful for a one-shot full dump (a
+        periodic drainer would re-emit the totals every period; the runtime
+        drains with the default and reads totals off ``/metrics`` instead).
+        """
         out = []
 
         def stamp(rec: Dict[str, Any]) -> Dict[str, Any]:
@@ -142,6 +130,11 @@ class RecordCursor:
                         "label": label, "step": int(step), "value": v,
                     }))
                 self._series_pos[(name, label)] = len(steps)
+                if totals and spec.kind == "counter":
+                    out.append(stamp({
+                        "event": "total", "stream": name, "label": label,
+                        "total": self.hub.total(name, label),
+                    }))
         return out
 
 
@@ -151,13 +144,18 @@ class JsonlWriter:
     cursors into one file).  Line 1 is a ``meta`` record stamped with the
     OWNING hub's metadata, mirroring :func:`write_jsonl`'s layout."""
 
-    def __init__(self, path: str, meta: Dict[str, Any]):
+    def __init__(self, path: str, meta: Dict[str, Any],
+                 streams: Optional[list] = None):
         dirname = os.path.dirname(os.path.abspath(path))
         os.makedirs(dirname, exist_ok=True)
         self.path = path
         self.count = 0
         self._f = open(path, "w")
-        self.append([{"event": "meta", "run": dict(meta)}])
+        head: Dict[str, Any] = {"event": "meta"}
+        if streams is not None:
+            head["streams"] = list(streams)
+        head["run"] = dict(meta)
+        self.append([head])
 
     def append(self, records) -> int:
         for rec in records:
@@ -202,17 +200,23 @@ def prometheus_text(hub, prefix: str = "repro") -> str:
 
     for name, entry in hub.collect().items():
         spec = entry["spec"]
-        if not entry["series"]:
-            continue
-        metric = f"{prefix}_{_prom_name(name)}"
         kind = spec["kind"]
+        series_map = entry["series"]
+        if not series_map:
+            if kind == "gauge":
+                continue  # a never-sampled gauge has no meaningful value
+            # counters/histograms are well-defined at zero records: scrapes
+            # must see `_total 0` / `_count 0` so rate() starts from zero
+            series_map = {"": {"total": 0.0,
+                               "summary": {"count": 0, "sum": 0.0}}}
+        metric = f"{prefix}_{_prom_name(name)}"
         prom_type = {"gauge": "gauge", "counter": "counter",
                      "histogram": "summary"}[kind]
         suffix = "_total" if kind == "counter" else ""
         if spec["doc"]:
             lines.append(f"# HELP {metric}{suffix} {spec['doc']}")
         lines.append(f"# TYPE {metric}{suffix} {prom_type}")
-        for label, series in entry["series"].items():
+        for label, series in series_map.items():
             if kind == "counter":
                 lines.append(fmt(metric + "_total", series["total"], label))
             elif kind == "histogram":

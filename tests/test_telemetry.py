@@ -137,6 +137,63 @@ def test_prometheus_exposition_shape():
     assert "repro_bytes_total 1024" in text
 
 
+def test_prometheus_zero_record_streams_still_exposed():
+    """Counters and histograms must be scrapeable BEFORE the first sample:
+    rate()/increase() need the zero point.  Gauges stay absent (a gauge with
+    no sample has no meaningful value)."""
+    hub = Telemetry(config={}, spans=False)
+    hub.register_stream(StreamSpec("silent_gauge", kind="gauge"))
+    text = prometheus_text(hub, prefix="repro")
+    # built-in histogram/counter streams, never sampled on this hub
+    assert "repro_span_seconds_count 0" in text
+    assert "repro_span_seconds_sum 0" in text
+    assert "repro_link_bytes_total 0" in text
+    assert "repro_kernel_launches_total 0" in text
+    assert "repro_silent_gauge" not in text
+    # ... and once sampled, the zero synthesis is replaced by real series
+    hub.record("span_seconds", 0.25, label="round")
+    text = prometheus_text(hub, prefix="repro")
+    assert 'repro_span_seconds_count{label="round"} 1' in text
+    assert 'repro_span_seconds_sum{label="round"} 0.25' in text
+    assert "repro_span_seconds_count 0" not in text
+
+
+def test_prometheus_replica_vector_gets_index_labels():
+    hub = Telemetry(config={}, spans=False)
+    hub.register_stream(StreamSpec("staleness", kind="gauge", axis="replica"))
+    hub.record("staleness", np.array([0.0, 2.0, 5.0]), step=0)
+    hub.record("staleness", np.array([1.0, 3.0, 7.0]), step=1)
+    text = prometheus_text(hub, prefix="repro")
+    # latest sample, one line per replica, addressable by index label
+    assert 'repro_staleness{index="0"} 1' in text
+    assert 'repro_staleness{index="1"} 3' in text
+    assert 'repro_staleness{index="2"} 7' in text
+    assert 'repro_staleness{index="3"}' not in text
+
+
+def test_prometheus_counter_monotonic_across_collects():
+    """collect()/prometheus_text are read-only: totals keep growing across
+    scrapes and never reset — the Prometheus counter contract."""
+    hub = Telemetry(config={}, spans=False)
+    hub.register_stream(StreamSpec("sent", kind="counter"))
+
+    def scrape_total():
+        for line in prometheus_text(hub, prefix="repro").splitlines():
+            if line.startswith("repro_sent_total"):
+                return float(line.split()[-1])
+        raise AssertionError("repro_sent_total missing from exposition")
+
+    assert scrape_total() == 0.0
+    totals = []
+    for inc in (100.0, 50.0, 25.0):
+        hub.record("sent", inc)
+        hub.collect()                      # interleaved reads must not reset
+        totals.append(scrape_total())
+    assert totals == [100.0, 150.0, 175.0]
+    assert totals == sorted(totals)        # monotone non-decreasing
+    assert scrape_total() == 175.0         # idempotent re-scrape
+
+
 # ------------------------------------------------------------------- spans
 def test_span_noop_when_disabled():
     with span(None, "local") as sp:

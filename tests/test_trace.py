@@ -1,0 +1,400 @@
+"""Observability-layer tests: causal tracing, diagnostics, fleet health.
+
+Covers the PR's tentpole pieces:
+
+  * unit layer: TraceRecorder span/instant events carry wall-clock anchors
+    + trace ids; trace_events stitches multi-process records into valid
+    Chrome trace-event JSON (metadata-first, monotonic ts per pid/tid);
+    write_chrome_trace round-trips through json.load; trace_index
+    summarizes per trace id; DiagnosticsMonitor fires stall / divergence /
+    consensus-blowup anomalies with hysteresis and renders diagnose();
+    FleetServer serves /metrics /healthz /trace /diagnostics from
+    callbacks; the benchmark sentinel's tolerance bands;
+  * process layer (skip-marked like tests/test_runtime.py): a 4-process
+    kill+rejoin+pause run produces ONE Perfetto-loadable trace file whose
+    per-round trace ids stitch coordinator and all worker spans — including
+    the abandoned round attempt, the epoch-bump instants and the resync
+    spans — while /healthz observed DURING the run reflects the membership
+    epoch bump.
+"""
+import json
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.telemetry import (
+    DiagnosticsMonitor, FleetServer, Telemetry, TraceRecorder, new_run_id,
+    round_trace_id, trace_events, trace_index, write_chrome_trace,
+)
+
+
+def _can_spawn() -> bool:
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", "print('ok')"],
+            capture_output=True, timeout=60,
+        )
+        return out.returncode == 0
+    except Exception:
+        return False
+
+
+needs_spawn = pytest.mark.skipif(
+    not _can_spawn(), reason="subprocess spawning unavailable"
+)
+
+
+def _hub(process, pid=1):
+    return Telemetry(spans=False, meta={"pid": str(pid), "process": process})
+
+
+# ------------------------------------------------------------ trace ids
+def test_round_trace_ids_share_run_prefix():
+    run = new_run_id()
+    t0, t1 = round_trace_id(run, 0), round_trace_id(run, 1)
+    assert t0 != t1
+    assert t0.startswith(run) and t1.startswith(run)
+    # every attempt of the SAME round gets the SAME id
+    assert round_trace_id(run, 1) == t1
+
+
+# ------------------------------------------------- recorder + stitching
+def test_trace_recorder_span_carries_anchor_trace_and_extra_args():
+    hub = _hub("coordinator")
+    rec = TraceRecorder(hub)
+    before = time.time()
+    with rec.span("round", trace="r/r00000", step=0, epoch=3) as info:
+        info["abandoned"] = True
+    (ev,) = hub.events
+    assert ev["event"] == "span" and ev["phase"] == "round"
+    assert before <= ev["t0"] <= time.time()
+    assert ev["seconds"] >= 0.0
+    assert ev["trace"] == "r/r00000" and ev["epoch"] == 3
+    assert ev["abandoned"] is True
+    # the duration also lands in the span_seconds histogram
+    _, vals = hub.series("span_seconds", "round")
+    assert len(vals) == 1
+
+
+def test_trace_recorder_none_hub_is_noop():
+    rec = TraceRecorder(None)
+    with rec.span("x") as info:
+        info["y"] = 1
+    rec.instant("z")  # must not raise
+
+
+def test_trace_events_stitches_processes_and_orders_ts():
+    """Records from three differently-stamped hubs stitch into one event
+    list: process_name metadata first, then spans with monotonic ts within
+    each pid track."""
+    from repro.telemetry import RecordCursor
+
+    records = []
+    for pid, proc in enumerate(("coordinator", "worker:0", "worker:1"),
+                               start=100):
+        hub = _hub(proc, pid)
+        rec = TraceRecorder(hub)
+        for r in range(3):
+            with rec.span("local", trace=f"run/r{r:05d}", step=r):
+                pass
+        rec.instant("epoch_bump", trace="run/r00001", step=1, worker=1)
+        records += RecordCursor(hub).drain()
+
+    events = trace_events(records)
+    metas = [e for e in events if e["ph"] == "M"]
+    spans = [e for e in events if e["ph"] == "X"]
+    instants = [e for e in events if e["ph"] == "i"]
+    assert len(metas) == 3 and len(spans) == 9 and len(instants) == 3
+    names = {e["args"]["name"] for e in metas}
+    assert names == {"coordinator", "worker:0", "worker:1"}
+    # monotonic ts per (pid, tid) — the Chrome trace-event contract
+    by_track = {}
+    for e in spans + instants:
+        by_track.setdefault((e["pid"], e["tid"]), []).append(e["ts"])
+    order = [e for e in events if e["ph"] != "M"]
+    for i in range(1, len(order)):
+        a, b = order[i - 1], order[i]
+        if (a["pid"], a["tid"]) == (b["pid"], b["tid"]):
+            assert a["ts"] <= b["ts"]
+    assert all(ts >= 0.0 for track in by_track.values() for ts in track)
+
+    idx = trace_index(events)
+    assert set(idx) == {f"run/r{r:05d}" for r in range(3)}
+    assert len(idx["run/r00000"]["pids"]) == 3
+    assert idx["run/r00001"]["phases"] == ["epoch_bump", "local"]
+
+
+def test_trace_events_skips_unanchored_and_empty():
+    assert trace_events([]) == []
+    # engine-style span events (no t0 anchor) are not stitchable
+    assert trace_events([{"event": "span", "phase": "local", "seconds": 1.0,
+                          "run": {"pid": "1"}}]) == []
+
+
+def test_write_chrome_trace_round_trip(tmp_path):
+    hub = _hub("coordinator")
+    rec = TraceRecorder(hub)
+    with rec.span("round", trace="x/r00000", step=0):
+        pass
+    from repro.telemetry import RecordCursor
+
+    path = str(tmp_path / "trace.json")
+    n = write_chrome_trace(path, RecordCursor(hub).drain())
+    with open(path) as f:
+        doc = json.load(f)          # MUST be valid JSON
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == n == 2  # metadata + span
+    span = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]
+    assert span["name"] == "round" and span["dur"] >= 0.0
+    assert span["args"]["trace"] == "x/r00000"
+    assert span["args"]["round"] == 0
+
+
+# --------------------------------------------------------- diagnostics
+def test_diagnostics_healthy_run_decays():
+    mon = DiagnosticsMonitor()
+    for s in range(16):
+        mon.observe(s, epoch=0, consensus=2.0 ** -s, loss=1.0 + 2.0 ** -s,
+                    grad_norm=2.0 ** -s)
+    rep = mon.diagnose()
+    assert rep["verdict"] == "healthy" and rep["anomalies"] == []
+    assert rep["stationarity_decay"] < 0     # log-slope of a decaying series
+    assert rep["consensus_decay"] < 0
+    assert rep["series"]["loss"]["n"] == 16
+
+
+def test_diagnostics_divergence_and_nonfinite():
+    mon = DiagnosticsMonitor(patience=3)
+    fired = []
+    for s in range(10):
+        fired += mon.observe(s, loss=1.0 + 0.5 * s)   # steadily rising
+    kinds = [a["kind"] for a in fired]
+    assert "divergence" in kinds
+    assert kinds.count("divergence") == 1             # hysteresis: one episode
+    m2 = DiagnosticsMonitor()
+    fired = m2.observe(0, loss=float("nan"))
+    assert [a["kind"] for a in fired] == ["divergence"]
+    assert m2.diagnose()["verdict"] == "unhealthy"
+
+
+def test_diagnostics_stall_flat_loss_no_decay():
+    mon = DiagnosticsMonitor(window=4, patience=3)
+    fired = []
+    for s in range(14):
+        fired += mon.observe(s, loss=0.7, grad_norm=0.5)   # flat everything
+    assert "stall" in [a["kind"] for a in fired]
+    # flat loss with DECAYING gradient norm is convergence, not a stall
+    m2 = DiagnosticsMonitor(window=4, patience=3)
+    fired2 = []
+    for s in range(14):
+        fired2 += m2.observe(s, loss=0.7, grad_norm=2.0 ** -s)
+    assert "stall" not in [a["kind"] for a in fired2]
+
+
+def test_diagnostics_consensus_blowup_needs_fault_context():
+    # a 100x consensus jump right after an epoch bump -> consensus_blowup
+    mon = DiagnosticsMonitor(hub := Telemetry(spans=False))
+    for s in range(6):
+        mon.observe(s, epoch=0, consensus=1.0)
+    fired = mon.observe(6, epoch=1, consensus=100.0)
+    assert [a["kind"] for a in fired] == ["consensus_blowup"]
+    # ... and it lands in the hub as a first-class event + counter sample
+    assert any(e.get("event") == "anomaly" for e in hub.events)
+    assert hub.total("anomalies", "consensus_blowup") == 1.0
+    # the same jump with NO epoch change is suspicious but not this anomaly
+    m2 = DiagnosticsMonitor()
+    for s in range(6):
+        m2.observe(s, epoch=0, consensus=1.0)
+    assert m2.observe(6, epoch=0, consensus=100.0) == []
+
+
+def test_diagnostics_observe_streams_offline():
+    mon = DiagnosticsMonitor()
+    streams = {"consensus": [1.0, 0.5, 0.25, 0.125],
+               "tracking_err": [2.0, 1.0, 0.5, 0.25]}
+    mon.observe_streams(streams)
+    rep = mon.diagnose()
+    assert rep["steps"] == 4
+    assert rep["effective_heterogeneity"] is not None
+    assert rep["verdict"] == "healthy"
+
+
+# --------------------------------------------------------- fleet server
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5) as r:
+        return r.status, r.read().decode()
+
+
+def test_fleet_server_routes():
+    hub = Telemetry(spans=False)
+    hub.gauge("x", 1.25, step=0)
+    health = {"epoch": 0, "dead": [], "suspended": [], "ok": True}
+    srv = FleetServer(
+        port=0,
+        metrics=hub.prometheus,
+        health=lambda: health,
+        trace=lambda: [{"name": "round", "ph": "X", "ts": 0.0, "dur": 1.0,
+                        "pid": 1, "tid": 1, "args": {}}],
+        diagnostics=lambda: {"verdict": "healthy"},
+    ).start()
+    try:
+        status, body = _get(srv.url + "/metrics")
+        assert status == 200 and "repro_x 1.25" in body
+        status, body = _get(srv.url + "/healthz")
+        assert status == 200 and json.loads(body)["epoch"] == 0
+        status, body = _get(srv.url + "/trace")
+        doc = json.loads(body)
+        assert doc["traceEvents"][0]["name"] == "round"
+        status, body = _get(srv.url + "/diagnostics")
+        assert json.loads(body)["verdict"] == "healthy"
+        # unhealthy flips /healthz to 503 (load-balancer semantics)
+        health["ok"] = False
+        health["dead"] = [2]
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get(srv.url + "/healthz")
+        assert err.value.code == 503
+        assert json.loads(err.value.read())["dead"] == [2]
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get(srv.url + "/nope")
+        assert err.value.code == 404
+    finally:
+        srv.close()
+
+
+def test_fleet_server_broken_probe_is_500_not_fatal():
+    def boom():
+        raise RuntimeError("probe broke")
+
+    srv = FleetServer(port=0, metrics=boom,
+                      health=lambda: {"ok": True}).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get(srv.url + "/metrics")
+        assert err.value.code == 500
+        status, _ = _get(srv.url + "/healthz")   # server survived
+        assert status == 200
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------------------- sentinel
+def test_sentinel_tolerance_bands():
+    from benchmarks.sentinel import compare_rows
+
+    base = [{"bench": "kernel", "name": "op/a", "us_per_call": 100.0,
+             "launches_per_tree": 1, "final_train_loss": 0.5,
+             "bit_identical": True}]
+    # within bands: 2x timing, tiny loss wiggle
+    ok = [{"bench": "kernel", "name": "op/a", "us_per_call": 200.0,
+           "launches_per_tree": 1, "final_train_loss": 0.55,
+           "bit_identical": True}]
+    failures, _ = compare_rows("F.json", base, ok)
+    assert failures == []
+    # 4x timing -> timing band (3x) fails
+    slow = [dict(ok[0], us_per_call=400.0)]
+    failures, _ = compare_rows("F.json", base, slow)
+    assert any("us_per_call" in f for f in failures)
+    # loss +50% -> quality band fails; loss IMPROVING never fails
+    worse = [dict(ok[0], final_train_loss=0.75)]
+    assert any("final_train_loss" in f
+               for f in compare_rows("F.json", base, worse)[0])
+    better = [dict(ok[0], final_train_loss=0.1, us_per_call=10.0)]
+    assert compare_rows("F.json", base, better)[0] == []
+    # invariants are exact
+    flipped = [dict(ok[0], bit_identical=False)]
+    assert any("bit_identical" in f
+               for f in compare_rows("F.json", base, flipped)[0])
+    # a vanished row is a coverage regression; a new row is a note
+    failures, notes = compare_rows("F.json", base, [])
+    assert any("missing" in f for f in failures)
+    _, notes = compare_rows(
+        "F.json", base, ok + [{"bench": "kernel", "name": "op/b"}]
+    )
+    assert any("new row" in n for n in notes)
+    # null baselines (metric not applicable) never regress against null
+    nb = [{"name": "q", "mean_tracking_err": None}]
+    assert compare_rows("F.json", nb, [{"name": "q",
+                                        "mean_tracking_err": None}])[0] == []
+
+
+# -------------------------------------------- process-layer acceptance
+@needs_spawn
+def test_elastic_4proc_trace_and_healthz(tmp_path):
+    """THE acceptance run for this layer: 4 processes with a kill+rejoin
+    AND a pause-induced abandoned attempt produce one Perfetto-loadable
+    trace; /healthz polled DURING the run observes the epoch bump."""
+    from repro.runtime import RuntimeConfig, launch
+    from repro.runtime.chaos import ChaosEvent
+    from repro.runtime.launch import _free_port
+
+    cfg = RuntimeConfig(n_nodes=8, n_rounds=6, batch_size=4,
+                        heartbeat_timeout_s=2.0)
+    plan = (ChaosEvent(round=1, action="pause", worker=3),
+            ChaosEvent(round=2, action="resume", worker=3),
+            ChaosEvent(round=3, action="kill", worker=1),
+            ChaosEvent(round=4, action="rejoin", worker=1))
+    trace_path = str(tmp_path / "trace.json")
+    port = _free_port()
+
+    observed = []
+    stop = threading.Event()
+
+    def poll():
+        while not stop.is_set():
+            try:
+                with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/healthz", timeout=2
+                ) as r:
+                    observed.append(json.loads(r.read()))
+            except urllib.error.HTTPError as e:     # 503 while degraded
+                observed.append(json.loads(e.read()))
+            except OSError:
+                pass                                 # not up yet / closing
+            time.sleep(0.2)
+
+    poller = threading.Thread(target=poll, daemon=True)
+    poller.start()
+    try:
+        res = launch(cfg, 4, plan=plan, trace_path=trace_path,
+                     http_port=port)
+    finally:
+        stop.set()
+        poller.join(timeout=5)
+
+    # -- the run itself behaved (pause, kill and rejoin all bumped)
+    assert res.epochs[-1] >= 3
+    assert res.diagnostics is not None
+    assert res.trace_path == trace_path
+
+    # -- /healthz DURING the run saw the membership epoch move
+    assert observed, "healthz poller never reached the coordinator"
+    epochs_seen = [snap["epoch"] for snap in observed]
+    assert epochs_seen[-1] > min(epochs_seen)
+    assert any(not snap["ok"] for snap in observed)   # degraded was visible
+    assert any(snap["ok"] for snap in observed)
+
+    # -- ONE Perfetto-loadable trace stitching every process
+    with open(trace_path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    span_pids = {e["pid"] for e in events if e["ph"] != "M"}
+    # coordinator + 4 original workers + the respawned worker-1 process
+    assert len(span_pids) >= 6
+    idx = trace_index(events)
+    assert len(idx) == cfg.n_rounds               # one trace id per round
+    run_ids = {t.split("/")[0] for t in idx}
+    assert len(run_ids) == 1                      # one run id stitches all
+    # the paused round renders the abandoned attempt under the SAME id
+    abandoned = [t for t, e in idx.items() if e["abandoned"]]
+    assert abandoned, "no abandoned round attempt in the trace"
+    # resync spans (pause-recovery and rejoin) + epoch bumps are in-trace
+    phases = {p for e in idx.values() for p in e["phases"]}
+    assert {"round", "local", "gossip", "resync", "epoch_bump"} <= phases
+    # worker + coordinator spans share each round's trace id
+    for t, entry in idx.items():
+        assert len(entry["pids"]) >= 2, f"{t} not cross-process"
