@@ -30,7 +30,7 @@ def _csv(rows):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry,elastic",
+    p.add_argument("--only", default="table2,curves,comm,kernels,roofline,executor,compression,gossip,serving,telemetry,elastic,transport",
                    help="comma-separated bench selection; add 'sentinel' to "
                         "diff fresh results against the committed BENCH_*.json "
                         "baselines (benchmarks/sentinel.py; non-zero exit on "
@@ -115,6 +115,11 @@ def _run_selected(only, args):
     if "elastic" in only:
         from . import elastic_bench
         rows = elastic_bench.main(smoke=args.fast)
+        all_rows += rows
+        _csv(rows)
+    if "transport" in only:
+        from . import transport_bench
+        rows = transport_bench.main(smoke=args.fast)
         all_rows += rows
         _csv(rows)
     if "sentinel" in only:

@@ -66,6 +66,10 @@ METRIC_BANDS: Dict[str, Tuple[str, str]] = {
     "overhead_pct": ("quality", "down"),
     "bytes_ratio": ("quality", "up"),
     "bytes_ratio_vs_raw": ("quality", "up"),
+    # wire-true transport: measured HLO/socket link traffic per round
+    # (BENCH_transport.json) — smaller is better, same band as quality
+    "measured_link_kb": ("quality", "down"),
+    "socket_kb_per_round": ("quality", "down"),
     # invariants — exact match required
     "bit_identical": ("invariant", ""),
     "launches_per_tree": ("invariant", ""),

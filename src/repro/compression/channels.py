@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -118,13 +118,52 @@ class Transport:
                        which permutes the *packed* arrays so the measured
                        link bytes are the payload's); falls back to mixing
                        the locally decoded message through ``mix``.
+    ``neighbor``     — packed neighbor exchange for shift-structured gossip
+                       (``gossip.neighbor_exchange``): rolls a payload tree
+                       along the node axis and contracts per-shift replica
+                       trees with the rotation weights, so choco/async
+                       difference payloads cross the links packed.
+    ``gather_payload`` — compressed-allgather delivery (``mixing.
+                       replicate_gather``): reshards a payload tree to fully
+                       replicated, which under GSPMD all-gathers exactly the
+                       packed arrays; decode-then-weight then runs locally.
+    ``pin_replicated`` — a bare replicated sharding constraint (no data
+                       movement when the value already computes replicated):
+                       applied to the post-gather replica trees so sharding
+                       propagation cannot re-shard them and pay a DENSE
+                       all-gather at the W contraction — which would cost
+                       more link bytes than the dense fallback the
+                       compressed allgather replaces.
+    At most one of ``neighbor`` / ``gather_payload`` is set; channels fall
+    back to ``mix`` on the locally decoded message when neither is.
     """
 
     def __init__(self, mix_fn: Callable, scheduled: bool = False,
-                 payload_combine: Optional[Callable] = None):
+                 payload_combine: Optional[Callable] = None,
+                 neighbor: Optional[Any] = None,
+                 gather_payload: Optional[Callable] = None,
+                 pin_replicated: Optional[Callable] = None,
+                 run_local: Optional[Callable] = None,
+                 pin_node: Optional[Callable] = None):
         self._mix_fn = mix_fn
         self._scheduled = scheduled
         self._payload_combine = payload_combine
+        self.neighbor = neighbor
+        self.gather_payload = gather_payload
+        self.pin_replicated = pin_replicated
+        self.run_local = run_local
+        self.pin_node = pin_node
+
+    def pin(self, tree: PyTree) -> PyTree:
+        return tree if self.pin_replicated is None else self.pin_replicated(tree)
+
+    def node(self, tree: PyTree) -> PyTree:
+        return tree if self.pin_node is None else self.pin_node(tree)
+
+    def local(self, fn: Callable) -> Callable:
+        """Force a replicated->replicated tree fn to lower device-locally
+        (``mixing.replicated_local``); identity wrapper off-engine."""
+        return fn if self.run_local is None else self.run_local(fn)
 
     def mix(self, tree: PyTree, ctx=None) -> PyTree:
         if self._scheduled:
@@ -203,9 +242,13 @@ class GossipChannel:
     def abstract_wire(self, params: PyTree) -> Optional[PyTree]:
         return None
 
-    def wire_spec(self, param_spec: PyTree, node_spec: Any) -> Optional[PyTree]:
+    def wire_spec(self, param_spec: PyTree, node_spec: Any,
+                  params: Optional[PyTree] = None) -> Optional[PyTree]:
         """PartitionSpec tree mirroring :meth:`init_wire`: ``param_spec``
-        for params-shaped subtrees, ``node_spec`` for (N,) per-node leaves."""
+        for params-shaped subtrees, ``node_spec`` for (N,) per-node leaves.
+        ``params`` (abstract node-stacked tree) is required by layouts whose
+        wire carries encoded payloads (overlap in-flight buffers) — their
+        spec trees must mirror the codec's packed structure."""
         return None
 
     # -- the protocol -------------------------------------------------------
@@ -238,7 +281,7 @@ class SyncChannel(GossipChannel):
             return {"res": _sds_like(params)}
         return None
 
-    def wire_spec(self, param_spec, node_spec):
+    def wire_spec(self, param_spec, node_spec, params=None):
         if self.compression is not None and self.compression.uses_residual:
             return {"res": param_spec}
         return None
@@ -275,11 +318,46 @@ class ChocoChannel(GossipChannel):
     """
 
     gamma: float = 1.0
+    #: packed neighbor-replica mode: the engine's shift set (union over its
+    #: rotation schedule).  The wire grows one hat-replica tree per shift —
+    #: row i of ``nbr[k]`` is node i's replica of ``x̂`` at node i+shifts[k]
+    #: — kept consistent by rolling the SAME packed payload every node
+    #: transmits, so only the encoded difference crosses the links.
+    neighbor_shifts: Tuple[int, ...] = ()
+    #: compressed-allgather mode: the whole wire is stored fully replicated;
+    #: the payload is resharded to replicated at encode time (an all-gather
+    #: of exactly the packed arrays) and the W contraction runs locally —
+    #: this is what serves fault-rewritten / non-shift-structured W_t.
+    replicated_wire: bool = False
+    #: comm/compute overlap: double-buffer the send.  The wire grows a
+    #: ``fly`` entry holding the in-flight encoded payload; a round first
+    #: APPLIES the previous round's in-flight message (replica update +
+    #: consensus step), then encodes a fresh payload from the new iterate
+    #: and stores it for the next round.  The wire message therefore lands
+    #: one round late — one unit of staleness, which is why the async
+    #: channel requires ``max_staleness >= 2`` with overlap on.  Round 0
+    #: consumes the zero payload: a pipeline-fill round where the consensus
+    #: step is the identity.
+    overlap: bool = False
+    #: overlap scheduling knob (test-only): ``False`` pre-rolls the payload
+    #: per neighbor shift at encode time (the collective issues in the
+    #: previous round, before the τ local steps of the round that consumes
+    #: it); ``True`` stores the payload unrolled and rolls at consume time.
+    #: Both orders are numerically identical — rolling commutes bitwise with
+    #: the rowwise decode — which is the overlap bit-parity guarantee.
+    defer_roll: bool = False
     name = "choco"
 
     def __post_init__(self):
         if not 0.0 < float(self.gamma) <= 1.0:
             raise ValueError(f"choco gamma must be in (0, 1], got {self.gamma}")
+        if self.neighbor_shifts and self.replicated_wire:
+            raise ValueError(
+                "neighbor_shifts and replicated_wire are mutually exclusive "
+                "wire modes"
+            )
+        if self.defer_roll and not self.overlap:
+            raise ValueError("defer_roll only applies with overlap=True")
 
     def bind(self, compression):
         if self.compression is not None or compression is None:
@@ -290,15 +368,98 @@ class ChocoChannel(GossipChannel):
             compression = compression.inner
         return dataclasses.replace(self, compression=compression)
 
+    # -- wire layout --------------------------------------------------------
+    def _payload_struct(self, params):
+        """Abstract (ShapeDtypeStruct) encoded-payload tree for this buffer:
+        the codec's packed structure over a params-shaped difference."""
+        comp = self.compression
+        if comp is None or comp.is_identity:
+            return _sds_like(params)
+        return jax.eval_shape(
+            lambda t: comp.encode_tree(t, jax.random.key(0)), _sds_like(params)
+        )
+
+    def _sends_mask(self) -> bool:
+        """Whether the in-flight message carries a per-node send mask
+        (event-triggered channels override)."""
+        return False
+
+    def _build_wire(self, params, concrete: bool):
+        z = _zeros_like if concrete else _sds_like
+
+        def payload():
+            st = self._payload_struct(params)
+            if concrete:
+                return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), st)
+            return st
+
+        def vec(dtype):
+            n = _n_nodes(params)
+            if concrete:
+                return jnp.zeros((n,), dtype)
+            return jax.ShapeDtypeStruct((n,), np.dtype(dtype))
+
+        wire = {"hat": z(params)}
+        if self.neighbor_shifts:
+            wire["nbr"] = tuple(z(params) for _ in self.neighbor_shifts)
+        if self.overlap:
+            fly = {"payload": payload()}
+            if self._sends_mask():
+                fly["sent"] = vec(jnp.bool_)
+            if self.neighbor_shifts and not self.defer_roll:
+                fly["rolled"] = tuple(payload() for _ in self.neighbor_shifts)
+                if self._sends_mask():
+                    fly["rolled_sent"] = tuple(
+                        vec(jnp.bool_) for _ in self.neighbor_shifts
+                    )
+            wire["fly"] = fly
+        return wire
+
     def init_wire(self, params):
-        return {"hat": _zeros_like(params)}
+        return self._build_wire(params, concrete=True)
 
     def abstract_wire(self, params):
-        return {"hat": _sds_like(params)}
+        return self._build_wire(params, concrete=False)
 
-    def wire_spec(self, param_spec, node_spec):
-        return {"hat": param_spec}
+    def wire_spec(self, param_spec, node_spec, params=None):
+        if self.replicated_wire:
+            # the payload all-gather at store time IS the transmission;
+            # the replicas and everything downstream are local per device
+            from jax.sharding import PartitionSpec
 
+            if params is None:
+                raise ValueError(
+                    "replicated_wire needs the abstract params tree to "
+                    "derive its wire spec"
+                )
+            return jax.tree.map(
+                lambda _: PartitionSpec(), self.abstract_wire(params)
+            )
+        wire = {"hat": param_spec}
+        if self.neighbor_shifts:
+            wire["nbr"] = tuple(param_spec for _ in self.neighbor_shifts)
+        if self.overlap:
+            if params is None:
+                raise ValueError(
+                    "overlap=True needs the abstract params tree to derive "
+                    "the in-flight payload's wire spec"
+                )
+            pspec = jax.tree.map(
+                lambda _: node_spec, self._payload_struct(params)
+            )
+            fly = {"payload": pspec}
+            if self._sends_mask():
+                fly["sent"] = node_spec
+            if self.neighbor_shifts and not self.defer_roll:
+                fly["rolled"] = tuple(pspec for _ in self.neighbor_shifts)
+                if self._sends_mask():
+                    fly["rolled_sent"] = tuple(
+                        node_spec for _ in self.neighbor_shifts
+                    )
+            wire["fly"] = fly
+        return wire
+
+    # -- shared protocol pieces --------------------------------------------
     def _encode_diff(self, diff, key, ctx):
         comp = self.compression
         if comp is None or comp.is_identity:
@@ -306,10 +467,32 @@ class ChocoChannel(GossipChannel):
         payload = comp.encode_tree(diff, key, scale=_ctx_scale(ctx))
         return payload, comp.decode_tree(payload)
 
-    def _consensus_step(self, tree, hat_new, ctx, transport):
-        """x ← x + γ (W x̂⁺ − x̂⁺): the replica consensus step shared by
-        difference (choco) and stale-mix (async) gossip."""
-        mixed_hat = transport.mix(hat_new, ctx)
+    def _decode(self, payload):
+        comp = self.compression
+        if comp is None or comp.is_identity:
+            return payload
+        return comp.decode_tree(payload)
+
+    def _gated_add(self, hat, dec, send):
+        """Replica update ``x̂⁺ = x̂ + D(q)``, rows gated by the sender's
+        ``send`` mask when the protocol is event-triggered."""
+        if send is None:
+            return _tree_add_f32(hat, dec)
+        n = _n_nodes(hat)
+        return jax.tree.map(
+            lambda h, d: (
+                h.astype(jnp.float32)
+                + jnp.where(
+                    send.reshape((n,) + (1,) * (d.ndim - 1)),
+                    d.astype(jnp.float32),
+                    0.0,
+                )
+            ).astype(h.dtype),
+            hat,
+            dec,
+        )
+
+    def _consensus_from(self, tree, mixed_hat, hat_new):
         g = jnp.float32(self.gamma)
         return jax.tree.map(
             lambda x, m, h: (
@@ -321,13 +504,157 @@ class ChocoChannel(GossipChannel):
             hat_new,
         )
 
-    def gossip(self, tree, wire, key, ctx, transport):
+    def _consensus_step(self, tree, hat_new, ctx, transport):
+        """x ← x + γ (W x̂⁺ − x̂⁺): the replica consensus step shared by
+        difference (choco) and stale-mix (async) gossip."""
+        return self._consensus_from(tree, transport.mix(hat_new, ctx), hat_new)
+
+    def _neighbor_update(self, nbr, payload, sent, transport):
+        """Advance the per-shift replica trees with the rolled payload:
+        ``nbr⁺[k] = roll(x̂⁺, -s_k)`` by induction, because decode is rowwise
+        (permutation-equivariant) and the replica update is elementwise."""
+        ex = transport.neighbor
+        out = []
+        for k, s in enumerate(self.neighbor_shifts):
+            p_s = ex.roll(payload, s)
+            s_s = None if sent is None else ex.roll(sent, s)
+            out.append(self._gated_add(nbr[k], self._decode(p_s), s_s))
+        return tuple(out)
+
+    def _deliver(self, hat, nbr, payload, dec, sent, ctx, transport):
+        """Apply one wire message: replica update(s) + the W contraction.
+        Returns ``(mixed, hat_new, nbr_new)``."""
+        if transport.gather_payload is not None:
+            payload = transport.gather_payload(payload)
+            if sent is not None:
+                sent = transport.gather_payload(sent)
+            # decode + replica update DEVICE-LOCALLY (transport.local =
+            # shard_map with unmapped specs).  Sharding constraints can't
+            # express this: left to propagation, the partitioner computes
+            # x̂⁺ = x̂ + D(q) sharded (free slices of the replicated
+            # operands, preferred by the sharded consensus consumer) and
+            # then pays a DENSE all-gather to store x̂⁺ back into the
+            # replicated wire — erasing the packed gather's wire win.
+            # Inside shard_map x̂⁺ computes replicated, so the wire store
+            # and the consensus slices are both collective-free.
+            hat_new = transport.local(
+                lambda h, p, s: self._gated_add(h, self._decode(p), s)
+            )(hat, payload, sent)
+        else:
+            hat_new = self._gated_add(hat, dec, sent)
+        if nbr is not None:
+            if transport.neighbor is None:
+                raise ValueError(
+                    "channel has neighbor-replica wire state but the "
+                    "transport provides no neighbor exchange"
+                )
+            nbr_new = self._neighbor_update(nbr, payload, sent, transport)
+            mixed = transport.neighbor.contract(hat_new, nbr_new, ctx)
+        else:
+            nbr_new = None
+            mixed = transport.mix(hat_new, ctx)
+        return mixed, hat_new, nbr_new
+
+    # -- overlap (double-buffered) bookkeeping hooks ------------------------
+    def _overlap_pre(self, wire):
+        """Consume-side bookkeeping: ``(sent_in, extra_wire_entries)`` for
+        the in-flight message being applied this round."""
+        return None, {}
+
+    def _overlap_send(self, tree, diff, extra, ctx):
+        """Encode-side send decision for the NEXT in-flight message (None =
+        unconditional send)."""
+        return None
+
+    def _gossip_overlap(self, tree, wire, key, ctx, transport):
         hat = wire["hat"]
+        nbr = wire.get("nbr")
+        fly = wire["fly"]
+        sent_in, extra = self._overlap_pre(wire)
+
+        # 1. consume: apply the message encoded LAST round (zeros on the
+        #    pipeline-fill round 0, where the consensus step is the identity)
+        if transport.gather_payload is not None:
+            # decode + replica update device-locally — see _deliver
+            hat_new = transport.local(
+                lambda h, p, s: self._gated_add(h, self._decode(p), s)
+            )(hat, fly["payload"], sent_in)
+        else:
+            hat_new = self._gated_add(hat, self._decode(fly["payload"]), sent_in)
+        if nbr is not None:
+            if transport.neighbor is None:
+                raise ValueError(
+                    "channel has neighbor-replica wire state but the "
+                    "transport provides no neighbor exchange"
+                )
+            ex = transport.neighbor
+            nbr_new = []
+            for k, s in enumerate(self.neighbor_shifts):
+                if self.defer_roll:
+                    p_s = ex.roll(fly["payload"], s)
+                    s_s = None if sent_in is None else ex.roll(sent_in, s)
+                else:
+                    p_s = fly["rolled"][k]
+                    s_s = None if sent_in is None else fly["rolled_sent"][k]
+                nbr_new.append(self._gated_add(nbr[k], self._decode(p_s), s_s))
+            nbr_new = tuple(nbr_new)
+            mixed = ex.contract(hat_new, nbr_new, ctx)
+        else:
+            nbr_new = None
+            mixed = transport.mix(hat_new, ctx)
+        out = self._consensus_from(tree, mixed, hat_new)
+        if transport.gather_payload is not None:
+            out = transport.node(out)  # see gossip
+
+        # 2. encode: the next in-flight message, from the fresh iterate
+        #    against the just-advanced replica
+        diff = _tree_sub_f32(out, hat_new)
+        send = self._overlap_send(out, diff, extra, ctx)
+        payload, _ = self._encode_diff(diff, key, ctx)
+        if transport.gather_payload is not None:
+            # the all-gather happens at store time: the stored in-flight
+            # payload is already replicated, next round's consume is local
+            payload = transport.gather_payload(payload)
+            if send is not None:
+                send = transport.gather_payload(send)
+        fly_new = {"payload": payload}
+        if send is not None:
+            fly_new["sent"] = send
+        if nbr is not None and not self.defer_roll:
+            ex = transport.neighbor
+            fly_new["rolled"] = tuple(
+                ex.roll(payload, s) for s in self.neighbor_shifts
+            )
+            if send is not None:
+                fly_new["rolled_sent"] = tuple(
+                    ex.roll(send, s) for s in self.neighbor_shifts
+                )
+        new_wire = {"hat": hat_new, "fly": fly_new}
+        if nbr_new is not None:
+            new_wire["nbr"] = nbr_new
+        new_wire.update(extra)
+        return out, new_wire
+
+    def gossip(self, tree, wire, key, ctx, transport):
+        if self.overlap:
+            return self._gossip_overlap(tree, wire, key, ctx, transport)
+        hat = wire["hat"]
+        nbr = wire.get("nbr")
         diff = _tree_sub_f32(tree, hat)
-        _, dec = self._encode_diff(diff, key, ctx)
-        hat_new = _tree_add_f32(hat, dec)
-        out = self._consensus_step(tree, hat_new, ctx, transport)
-        return out, {"hat": hat_new}
+        payload, dec = self._encode_diff(diff, key, ctx)
+        mixed, hat_new, nbr_new = self._deliver(
+            hat, nbr, payload, dec, None, ctx, transport
+        )
+        out = self._consensus_from(tree, mixed, hat_new)
+        if transport.gather_payload is not None:
+            # keep the iterate node-sharded: without the pin the replicated
+            # wire's preference propagates back into the local-update scan
+            # and the partitioner gathers the DENSE params every round
+            out = transport.node(out)
+        new_wire = {"hat": hat_new}
+        if nbr_new is not None:
+            new_wire["nbr"] = nbr_new
+        return out, new_wire
 
 
 @dataclasses.dataclass(frozen=True)
@@ -364,25 +691,34 @@ class AsyncChannel(ChocoChannel):
             raise ValueError(
                 f"async threshold must be >= 0, got {self.threshold}"
             )
+        if self.overlap and int(self.max_staleness) < 2:
+            raise ValueError(
+                "overlap=True double-buffers the send, so the wire message "
+                "lands one round late — one unit of staleness the bound must "
+                f"cover: max_staleness >= 2 required, got {self.max_staleness}"
+            )
 
-    def init_wire(self, params):
+    def _sends_mask(self) -> bool:
+        return True
+
+    def _build_wire(self, params, concrete: bool):
+        wire = super()._build_wire(params, concrete)
         n = _n_nodes(params)
-        return {
-            "hat": _zeros_like(params),
-            "age": jnp.zeros((n,), jnp.int32),
-            "sent": jnp.zeros((n,), jnp.bool_),
-        }
+        if concrete:
+            wire["age"] = jnp.zeros((n,), jnp.int32)
+            wire["sent"] = jnp.zeros((n,), jnp.bool_)
+        else:
+            wire["age"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+            wire["sent"] = jax.ShapeDtypeStruct((n,), jnp.bool_)
+        return wire
 
-    def abstract_wire(self, params):
-        n = _n_nodes(params)
-        return {
-            "hat": _sds_like(params),
-            "age": jax.ShapeDtypeStruct((n,), jnp.int32),
-            "sent": jax.ShapeDtypeStruct((n,), jnp.bool_),
-        }
-
-    def wire_spec(self, param_spec, node_spec):
-        return {"hat": param_spec, "age": node_spec, "sent": node_spec}
+    def wire_spec(self, param_spec, node_spec, params=None):
+        spec = super().wire_spec(param_spec, node_spec, params)
+        if self.replicated_wire:
+            return spec  # super already replicated the full (async) layout
+        spec["age"] = node_spec
+        spec["sent"] = node_spec
+        return spec
 
     @property
     def _raw(self) -> bool:
@@ -395,6 +731,36 @@ class AsyncChannel(ChocoChannel):
         # structurally identical plain path — the bound-1 ≡ sync guarantee
         # is bit-exact on BOTH engines by construction, like identity codecs
         return int(self.max_staleness) == 1 and self._raw
+
+    def _trigger_send(self, tree, diff, age, ctx):
+        """The event trigger: forced on age hitting the bound, or relative
+        drift ``‖x − x̂‖² > θ² ‖x‖²`` (``ctx.trigger`` overrides θ)."""
+        n = _n_nodes(tree)
+        drift2 = sum(
+            jnp.sum(d.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
+            for d in jax.tree.leaves(diff)
+        )
+        ref2 = sum(
+            jnp.sum(x.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
+            for x in jax.tree.leaves(tree)
+        )
+        thr = jnp.float32(self.threshold)
+        ctx_thr = getattr(ctx, "trigger", None) if ctx is not None else None
+        if ctx_thr is not None:
+            thr = jnp.where(ctx_thr >= 0, ctx_thr.astype(jnp.float32), thr)
+        forced = (age + 1) >= jnp.int32(self.max_staleness)
+        return forced | (drift2 > thr * thr * (ref2 + 1e-12))
+
+    def _overlap_pre(self, wire):
+        sent_in = wire["fly"]["sent"]
+        age_new = jnp.where(sent_in, 0, wire["age"] + 1).astype(jnp.int32)
+        # ``sent`` (the send-rate metrics stream) reports the mask actually
+        # APPLIED this round — the in-flight message's, one round after the
+        # trigger fired, matching the overlap delivery semantics
+        return sent_in, {"age": age_new, "sent": sent_in}
+
+    def _overlap_send(self, tree, diff, extra, ctx):
+        return self._trigger_send(tree, diff, extra["age"], ctx)
 
     def gossip(self, tree, wire, key, ctx, transport):
         n = _n_nodes(tree)
@@ -410,42 +776,25 @@ class AsyncChannel(ChocoChannel):
             }
             return mixed, wire_new
 
-        hat, age = wire["hat"], wire["age"]
-        diff = _tree_sub_f32(tree, hat)
-        drift2 = sum(
-            jnp.sum(d.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
-            for d in jax.tree.leaves(diff)
-        )
-        ref2 = sum(
-            jnp.sum(x.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
-            for x in jax.tree.leaves(tree)
-        )
-        thr = jnp.float32(self.threshold)
-        ctx_thr = getattr(ctx, "trigger", None) if ctx is not None else None
-        if ctx_thr is not None:
-            thr = jnp.where(ctx_thr >= 0, ctx_thr.astype(jnp.float32), thr)
-        forced = (age + 1) >= jnp.int32(self.max_staleness)
-        send = forced | (drift2 > thr * thr * (ref2 + 1e-12))
+        if self.overlap:
+            return self._gossip_overlap(tree, wire, key, ctx, transport)
 
-        _, dec = self._encode_diff(diff, key, ctx)
-        hat_new = jax.tree.map(
-            lambda h, d: (
-                h.astype(jnp.float32)
-                + jnp.where(
-                    send.reshape((n,) + (1,) * (d.ndim - 1)),
-                    d.astype(jnp.float32),
-                    0.0,
-                )
-            ).astype(h.dtype),
-            hat,
-            dec,
+        hat, age = wire["hat"], wire["age"]
+        nbr = wire.get("nbr")
+        diff = _tree_sub_f32(tree, hat)
+        send = self._trigger_send(tree, diff, age, ctx)
+        payload, dec = self._encode_diff(diff, key, ctx)
+        mixed, hat_new, nbr_new = self._deliver(
+            hat, nbr, payload, dec, send, ctx, transport
         )
-        out = self._consensus_step(tree, hat_new, ctx, transport)
+        out = self._consensus_from(tree, mixed, hat_new)
         wire_new = {
             "hat": hat_new,
             "age": jnp.where(send, 0, age + 1).astype(jnp.int32),
             "sent": send,
         }
+        if nbr_new is not None:
+            wire_new["nbr"] = nbr_new
         return out, wire_new
 
 

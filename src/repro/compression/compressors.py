@@ -189,8 +189,13 @@ class TopK(Compressor):
         return max(1, min(d, int(math.ceil(float(self.ratio) * d))))
 
     def _indices(self, flat: jnp.ndarray, key, k: int) -> jnp.ndarray:
-        _, idx = lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
-        return idx.astype(jnp.int32)
+        # stable argsort, not ``lax.top_k``: same selection (descending
+        # |x|, ties to the lower index), but the sort partitions along a
+        # sharded batch dim under SPMD while the TopK custom-call forces
+        # an all-gather of the full dense leaf — exactly the wire traffic
+        # the packed transport is meant to eliminate
+        order = jnp.argsort(-jnp.abs(flat.astype(jnp.float32)), axis=1)
+        return order[:, :k].astype(jnp.int32)
 
     def encode(self, x, key, scale=None):
         flat, shape = _flat(x)

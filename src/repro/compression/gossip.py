@@ -26,13 +26,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.mixing import Rotation
+from ..core.mixing import (Rotation, _dense_contract, replicate_gather,
+                           replicated_local)
 from .base import Compressor
 
 PyTree = Any
 Combine = Callable[[PyTree, PyTree, Optional[Any]], PyTree]
 
-__all__ = ["rotation_combine"]
+__all__ = [
+    "rotation_combine",
+    "NeighborExchange",
+    "neighbor_exchange",
+    "allgather_combine",
+]
 
 # (The dense transport — mix the decoded messages through the engine's
 # opaque linear gossip — is Transport's built-in fallback in channels.py;
@@ -82,5 +88,99 @@ def rotation_combine(
             payload,
             dec,
         )
+
+    return combine
+
+
+class NeighborExchange:
+    """Packed neighbor exchange for the difference-gossip channels.
+
+    Where :func:`rotation_combine` serves the *sync* channel (stateless:
+    roll, decode, weight-sum in one shot), choco/async channels keep
+    per-shift replica trees ``nbr[k] ≡ roll(x̂, -shifts[k])`` alive in their
+    wire state and advance them incrementally from the SAME packed payload
+    every node transmits.  This object is the engine half of that contract:
+
+      * ``shifts``   — the union of shifts across the rotation schedule, in
+                       first-appearance order (the channel's ``nbr`` layout);
+      * ``roll``     — roll every array of a (payload) tree by ``-s`` along
+                       the node axis: ``collective-permute`` of exactly the
+                       packed arrays under GSPMD;
+      * ``contract`` — the rotation-weighted combine over the self replica
+                       plus the per-shift replicas, with the SAME f32
+                       accumulation order as ``Rotation.apply`` (self weight
+                       first, then shifts in rotation order) — so the packed
+                       path computes the dense rolled-``x̂`` contraction
+                       exactly, given the replica invariant.  (Bit-identity
+                       additionally requires XLA to fuse both programs the
+                       same way; in practice it holds for the choco channel
+                       and is within one f32 ulp for async+qsgd, where the
+                       compiler FMA-contracts one program but not the other.)
+    """
+
+    def __init__(self, rotations: Sequence[Rotation], scheduled: bool = False):
+        self.rotations = tuple(rotations)
+        if not self.rotations:
+            raise ValueError("neighbor exchange needs at least one rotation")
+        self.scheduled = scheduled
+        self.shifts = tuple(
+            dict.fromkeys(s for rot in self.rotations for s in rot.shifts)
+        )
+
+    def roll(self, tree: PyTree, shift: int) -> PyTree:
+        return jax.tree.map(lambda a: jnp.roll(a, -shift, axis=0), tree)
+
+    def contract(self, self_tree: PyTree, nbr_trees, ctx) -> PyTree:
+        by_shift = dict(zip(self.shifts, nbr_trees))
+
+        def one(rot: Rotation):
+            acc = jax.tree.map(
+                lambda x: rot.self_weight * x.astype(jnp.float32), self_tree
+            )
+            for s, wgt in zip(rot.shifts, rot.weights):
+                acc = jax.tree.map(
+                    lambda a, r: a + wgt * r.astype(jnp.float32),
+                    acc,
+                    by_shift[s],
+                )
+            return jax.tree.map(lambda a, x: a.astype(x.dtype), acc, self_tree)
+
+        if len(self.rotations) == 1 or not self.scheduled:
+            return one(self.rotations[0])
+        return lax.switch(
+            ctx.pattern, [functools.partial(one, r) for r in self.rotations]
+        )
+
+
+def neighbor_exchange(
+    rotations: Sequence[Rotation], scheduled: bool = False
+) -> NeighborExchange:
+    """Build the engine-side neighbor exchange for a rotation schedule."""
+    return NeighborExchange(rotations, scheduled=scheduled)
+
+
+def allgather_combine(
+    comp: Compressor, mesh, w=None, scheduled: bool = False, node_axes=None
+) -> Combine:
+    """Compressed allgather for the sync channel on graphs with no shift
+    structure (fault-rewritten / arbitrary ``W_t``): all-gather the *packed*
+    payload via a replicated resharding constraint, decode the full message
+    set locally, and contract with W — ``x_i ← Σ_j w_ij D(m_j)`` with only
+    payload bytes on the links.  ``scheduled=True`` takes ``W_t`` from the
+    round context; otherwise ``w`` is the static matrix.
+    """
+    if not scheduled and w is None:
+        raise ValueError("static allgather_combine needs the mixing matrix w")
+    gather = replicate_gather(mesh, node_axes=node_axes)
+    local = replicated_local(mesh)
+    w_static = None if w is None else jnp.asarray(w)
+
+    def combine(payload, dec, ctx):
+        # decode the gathered message set DEVICE-LOCALLY: letting the
+        # partitioner shard the decode means it re-gathers the DENSE
+        # messages at the contraction below, out-spending the packed gather
+        dec_full = local(comp.decode_tree)(gather(payload))
+        w_t = ctx.w if scheduled else w_static
+        return _dense_contract(w_t, dec_full)
 
     return combine

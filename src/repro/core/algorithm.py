@@ -92,6 +92,14 @@ class CommSpec:
               spec's ``compression`` codec (difference-gossip channels
               unwrap the error-feedback default — the replica is the
               memory).
+    overlap:  comm/compute overlap — double-buffer the channel's sends
+              against the τ local steps.  Requires a difference/stale-mix
+              channel (choco/async) on every buffer: the channel's wire
+              state grows an in-flight payload, each round applies the
+              PREVIOUS round's message and encodes the next, so the wire
+              hides behind the local phase at the documented cost of one
+              round of delivery delay (one staleness unit — async channels
+              therefore need ``max_staleness >= 2``).
     """
 
     cadence: str = "every_tau"
@@ -99,6 +107,7 @@ class CommSpec:
     reset: str = "none"
     compression: Any = None
     channel: Any = None
+    overlap: bool = False
 
     def __post_init__(self):
         if self.cadence not in CADENCES:
@@ -131,6 +140,35 @@ class CommSpec:
             else:
                 chan = make_channel(chan)
             object.__setattr__(self, "channel", chan.bind(self.compression))
+        if self.overlap:
+            from ..compression.channels import (  # lazy: no cycle
+                ChocoChannel,
+                PerBufferChannel,
+            )
+
+            chan = self.channel
+            if chan is None:
+                raise ValueError(
+                    "overlap=True double-buffers a stateful channel's sends; "
+                    "set channel='choco'/'async:k' (sync gossip has no "
+                    "replica to mix against while the message is in flight)"
+                )
+
+            def _ov(c):
+                if not isinstance(c, ChocoChannel):
+                    raise ValueError(
+                        "overlap=True requires a difference/stale-mix channel "
+                        f"(choco/async) per buffer, got {c.name!r}"
+                    )
+                return c if c.overlap else dataclasses.replace(c, overlap=True)
+
+            if isinstance(chan, PerBufferChannel):
+                chan = dataclasses.replace(
+                    chan, channels=tuple(_ov(c) for c in chan.channels)
+                )
+            else:
+                chan = _ov(chan)
+            object.__setattr__(self, "channel", chan)
 
     def round_len(self, tau: int) -> int:
         """Steps per communication round (1 for every-step methods)."""
@@ -278,15 +316,23 @@ class DecentralizedAlgorithm:
     #: None keeps the class spec's channel (usually None = sync)
     channel: Any = None
 
+    #: per-instance comm/compute overlap (``CommSpec.overlap``): double-buffer
+    #: the channel's sends so each round mixes against the PREVIOUS round's
+    #: in-flight message.  Requires a choco-family ``channel``.
+    overlap: bool = False
+
     def __post_init__(self):
         comp = getattr(self, "compression", None)
         chan = getattr(self, "channel", None)
-        if comp is not None or chan is not None:
+        overlap = bool(getattr(self, "overlap", False))
+        if comp is not None or chan is not None or overlap:
             repl = {}
             if comp is not None:
                 repl["compression"] = comp
             if chan is not None:
                 repl["channel"] = chan
+            if overlap:
+                repl["overlap"] = True
             object.__setattr__(
                 self,
                 "comm",
@@ -360,6 +406,7 @@ def make_round_step(
     gate_local: bool = True,
     gate_active: bool = True,
     compressed_combine=None,
+    transport_hooks: Optional[dict] = None,
 ):
     """The ONE generic round executor shared by simulator and runtime.
 
@@ -399,8 +446,13 @@ def make_round_step(
     ``compressed_combine`` — a ``(payload, decoded, ctx) -> mixed`` payload
     transport (the sharded runtime's payload-rolling collective-permute
     backend); without one, decoded messages mix through ``mix_fn`` (the
-    dense engines).  No channel and no codec skips this machinery entirely,
-    so the plain path is untouched — bit-identical by construction.
+    dense engines).  ``transport_hooks`` optionally extends the Transport
+    with engine wire backends for the difference-gossip channels —
+    ``{"neighbor": NeighborExchange}`` (packed payload rolls + per-shift
+    replica contraction) and/or ``{"gather_payload": fn}`` (compressed
+    allgather via replicated resharding); see ``repro.compression.gossip``.
+    No channel and no codec skips this machinery entirely, so the plain
+    path is untouched — bit-identical by construction.
     """
     spec = algorithm.comm
     round_len = spec.round_len(getattr(algorithm, "tau", 1))
@@ -431,7 +483,8 @@ def make_round_step(
         session = ChannelSession(
             channel, len(spec.buffers), chan_state,
             Transport(mix_fn, scheduled=scheduled,
-                      payload_combine=compressed_combine),
+                      payload_combine=compressed_combine,
+                      **(transport_hooks or {})),
         )
         new = algorithm.comm_update(
             state, lambda tree: session.mix(tree, ctx), gf, _reset_fn(gf)
@@ -476,7 +529,16 @@ def make_round_step(
             def body(st, xs):
                 mb, mask = xs
                 new = algorithm.local_update(st, lambda p: grad_of_batch(p, mb))
-                return _select_nodes(mask, new, st), ()
+                gated = _select_nodes(mask, new, st)
+                if getattr(new, "comp", None) is not None:
+                    # local updates never touch the channel wire: pass it
+                    # through un-gated.  The where is semantically identity
+                    # here, but an open-coded select over a REPLICATED wire
+                    # (compressed-allgather mode) is computed node-sharded
+                    # by the partitioner and re-gathered DENSE every scan
+                    # iteration — link bytes for a no-op.
+                    gated = dataclasses.replace(gated, comp=new.comp)
+                return gated, ()
 
             # None is an empty pytree, so a missing mask scans transparently
             state, _ = lax.scan(body, state, (micro, masks))
@@ -486,7 +548,22 @@ def make_round_step(
         with jax.named_scope("repro/gossip"):
             gf = lambda p: comm_gb(p, last)
             new = _comm(state, gf, ctx)
-        return _select_nodes(ctx.active if gate_active else None, new, state)
+        mask = ctx.active if gate_active else None
+        gated = _select_nodes(mask, new, state)
+        run_local = (transport_hooks or {}).get("run_local")
+        if (mask is not None and run_local is not None
+                and getattr(new, "comp", None) is not None):
+            # gate the channel wire DEVICE-LOCALLY: in the compressed-
+            # allgather wire mode the wire is stored replicated, and an
+            # open-coded where over it computes node-sharded (free slices)
+            # then pays a dense all-gather back to replicated, per buffer.
+            # run_local (mixing.replicated_local) is only installed for
+            # that mode, so sharded wires never take this path.
+            comp_gated = run_local(
+                lambda m, n_, o_: _select_nodes(m, n_, o_)
+            )(mask, new.comp, state.comp)
+            gated = dataclasses.replace(gated, comp=comp_gated)
+        return gated
 
     def round_step_scheduled(state, batches, ctx: RoundCtx):
         if round_len > 1:

@@ -56,6 +56,7 @@ class DLSGD(DecentralizedAlgorithm):
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
     channel: Any = None       # gossip channel protocol (sync/choco/async)
+    overlap: bool = False     # comm/compute overlap (double-buffered sends)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -109,6 +110,7 @@ class GTDSGD(DecentralizedAlgorithm):
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
     channel: Any = None       # gossip channel protocol (sync/choco/async)
+    overlap: bool = False     # comm/compute overlap (double-buffered sends)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -162,6 +164,7 @@ class GTHSGD(DecentralizedAlgorithm):
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
     channel: Any = None       # gossip channel protocol (sync/choco/async)
+    overlap: bool = False     # comm/compute overlap (double-buffered sends)
 
     comm = CommSpec(cadence="every_step", buffers=("params", "y"))
     tracking_buffer = "y"  # y tracks the global gradient (scenario metrics)
@@ -221,6 +224,7 @@ class PDSGDM(DecentralizedAlgorithm):
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
     channel: Any = None       # gossip channel protocol (sync/choco/async)
+    overlap: bool = False     # comm/compute overlap (double-buffered sends)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 
@@ -281,6 +285,7 @@ class SlowMoD(DecentralizedAlgorithm):
     use_fused: bool = False   # fused-op backend for the update arithmetic
     compression: Any = None   # gossip wire codec (repro.compression name/instance)
     channel: Any = None       # gossip channel protocol (sync/choco/async)
+    overlap: bool = False     # comm/compute overlap (double-buffered sends)
 
     comm = CommSpec(cadence="every_tau", buffers=("params",))
 

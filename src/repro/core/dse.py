@@ -115,6 +115,8 @@ class DSEMVR(DecentralizedAlgorithm):
     #: gossip channel protocol ("sync" / "choco" / "async:2" / instance);
     #: None keeps synchronous gossip
     channel: Any = None
+    #: comm/compute overlap: double-buffer the channel's sends
+    overlap: bool = False
 
     # one comm event per round, two param-sized messages (SGT y + SPA x);
     # v resets with the full/large-batch local gradient (Alg. 1 line 11)

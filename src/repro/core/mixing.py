@@ -46,6 +46,8 @@ AxisName = Union[str, tuple[str, ...]]
 __all__ = [
     "dense_mix", "allgather_mix", "ring_mix", "make_mix_fn", "identity_mix",
     "Rotation", "scheduled_dense_mix", "scheduled_rotation_mix",
+    "replicate_gather", "replicate_pin", "replicated_local",
+    "node_pin",
 ]
 
 
@@ -206,6 +208,120 @@ def scheduled_rotation_mix(rotations: Sequence[Rotation]) -> Callable[[PyTree, A
         )
 
     return mix
+
+
+def replicate_gather(mesh, node_axes=None) -> Callable[[PyTree], PyTree]:
+    """The compressed-allgather transport primitive: reshard every array of
+    a (packed payload) tree to fully replicated.
+
+    Under GSPMD the node-sharded → replicated reshard lowers to an
+    ``all-gather`` of exactly the arrays it is applied to — apply it to a
+    codec's packed payload and ONLY payload bytes cross the links, after
+    which decode-then-weight runs locally per device.  This is the wire
+    backend for topologies with no shift structure (fault-rewritten ``W_t``,
+    arbitrary graphs), where neighbor rolls cannot express the contraction.
+
+    ``node_axes`` (the mesh axes the leading node dim shards over) pins the
+    payload node-sharded behind an optimization barrier before the
+    replicated constraint.  Without the pin, sharding propagation hoists
+    the reshard INTO the encode computation — gathering the full argsort
+    order and the pack's dense operands instead of the k-slice payload —
+    and the "compressed" allgather moves more bytes than the dense
+    fallback it replaces.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    replicated = NamedSharding(mesh, PartitionSpec())
+    sharded = (
+        None if node_axes is None
+        else NamedSharding(mesh, PartitionSpec(node_axes))
+    )
+
+    def gather(tree: PyTree) -> PyTree:
+        if sharded is not None:
+            tree = jax.tree.map(
+                lambda a: lax.with_sharding_constraint(a, sharded)
+                if a.ndim >= 1 else a,
+                tree,
+            )
+            tree = lax.optimization_barrier(tree)
+        return jax.tree.map(
+            lambda a: lax.with_sharding_constraint(a, replicated), tree
+        )
+
+    return gather
+
+
+def replicate_pin(mesh) -> Callable[[PyTree], PyTree]:
+    """A bare replicated sharding constraint — free when the value already
+    computes replicated.  Applied to trees DERIVED from gathered payloads
+    (replica estimates, decoded message sets) so sharding propagation
+    cannot re-shard them and then pay a dense all-gather at the W
+    contraction, which would out-spend the packed gather."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    replicated = NamedSharding(mesh, PartitionSpec())
+
+    def pin(tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda a: lax.with_sharding_constraint(a, replicated), tree
+        )
+
+    return pin
+
+
+def node_pin(mesh, node_axes) -> Callable[[PyTree], PyTree]:
+    """Constrain every array of a node-stacked tree to shard its leading
+    (node) dim over ``node_axes``.  Applied to the consensus OUTPUT in the
+    compressed-allgather wire mode: the replicated wire's preference
+    otherwise propagates backwards through ``x + γ(Wx̂⁺ − x̂⁺)`` into the
+    local-update scan, and the partitioner all-gathers the dense params
+    every round to compute the iterate replicated — re-spending the bytes
+    the packed gather saved.  Slicing the replicated gossip terms down to
+    the node shard is free; gathering the params is not."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharded = NamedSharding(mesh, PartitionSpec(node_axes))
+
+    def pin(tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda a: lax.with_sharding_constraint(a, sharded)
+            if a.ndim >= 1 else a,
+            tree,
+        )
+
+    return pin
+
+
+def replicated_local(mesh) -> Callable[[Callable], Callable]:
+    """Wrap a replicated-tree -> replicated-tree function so it runs
+    DEVICE-LOCALLY on every device (``shard_map`` with unmapped in/out
+    specs: each device sees the full arrays and recomputes the result
+    redundantly).
+
+    Sharding constraints alone cannot express this: the partitioner is
+    free to shard the function's interior (scatter-based sparse decodes
+    actively prefer a sharded batch dim) and then re-gather the DENSE
+    result at the constraint — which puts the decoded messages on the
+    links and erases the compressed-allgather's wire win.  Inside
+    shard_map there is nothing to re-shard, so a collective-free body is
+    guaranteed collective-free in the lowering; redundant decode compute
+    is the (cheap, elementwise) price of wire-true link accounting."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    spec = PartitionSpec()
+
+    def wrap(fn: Callable) -> Callable:
+        def run(*trees: PyTree) -> PyTree:
+            return shard_map(
+                fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                check_rep=False,
+            )(*trees)
+
+        return run
+
+    return wrap
 
 
 def make_mix_fn(

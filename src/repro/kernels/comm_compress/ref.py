@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the communication-compression fused ops."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 __all__ = [
@@ -34,8 +35,13 @@ def top_k_pack_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
 
 
 def top_k_unpack_ref(idx: jnp.ndarray, vals: jnp.ndarray, d: int) -> jnp.ndarray:
-    """Scatter-add vals back into a dense zeros (N, d) buffer."""
-    n, _ = idx.shape
-    out = jnp.zeros((n, d), vals.dtype)
-    rows = jnp.arange(n, dtype=idx.dtype)[:, None]
-    return out.at[rows, idx].add(vals)
+    """Scatter-add vals back into a dense zeros (N, d) buffer.
+
+    Written as a vmapped PER-ROW scatter, not 2-D advanced indexing: the
+    batched scatter keeps the op row-local under SPMD when the leading
+    (node) axis is sharded, while ``out.at[rows, idx].add(vals)`` emits
+    2-component index vectors that force the partitioner to all-gather
+    every node's packed payload — the exact wire traffic the packed
+    transport exists to avoid."""
+    zero = jnp.zeros((d,), vals.dtype)
+    return jax.vmap(lambda i, v: zero.at[i].add(v))(idx, vals)

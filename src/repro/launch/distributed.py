@@ -33,14 +33,22 @@ from ..compression.base import (
     abstract_channel_state,
     attach_channel_state,
 )
-from ..compression.channels import SyncChannel
-from ..compression.gossip import rotation_combine
+from ..compression.channels import ChocoChannel, SyncChannel
+from ..compression.gossip import (
+    allgather_combine,
+    neighbor_exchange,
+    rotation_combine,
+)
 from ..core import make_algorithm, ring
 from ..core.algorithm import DecentralizedAlgorithm, RoundCtx, make_round_step
 from ..core.mixing import (
     Rotation,
     dense_mix,
     identity_mix,
+    replicate_gather,
+    replicate_pin,
+    node_pin,
+    replicated_local,
     roll_mix,
     scheduled_dense_mix,
     scheduled_rotation_mix,
@@ -180,6 +188,8 @@ def make_train_job(
     use_fused: bool = False,
     compression=None,
     channel=None,
+    wire_mode: str = "auto",
+    overlap: bool = False,
 ) -> TrainJob:
     """Build a sharded decentralized training round for ANY registered
     algorithm: ``algorithm`` is a name from ``repro.core.ALGORITHMS`` (or a
@@ -206,10 +216,29 @@ def make_train_job(
     ``"choco"`` — compressed-difference gossip against replica estimates;
     ``"async:k"`` — stale-mix with staleness bound k and event-triggered
     sends).  Channel wire state (replicas, ages) is node-sharded like any
-    other state buffer; difference/stale channels deliver through the
-    engine's mix operator (replica trees move on the wire — the payload-
-    rolling win currently applies to the sync channel's packed messages).
-    Like ``compression``, ignored when ``algorithm`` is a ready instance.
+    other state buffer.  Like ``compression``, ignored when ``algorithm``
+    is a ready instance.
+
+    ``wire_mode`` picks the wire backend for difference/stale channels:
+
+      * ``"neighbor"``  — packed neighbor-replica gossip: the channel keeps
+        one replica tree per incoming shift and only the encoded difference
+        payload rolls through collective-permute (bitwise identical to the
+        dense rolled-replica path).  Requires a shift-structured schedule.
+      * ``"allgather"`` — compressed allgather: the packed payload is
+        resharded to replicated (an all-gather of exactly the packed
+        arrays); replica update and W contraction run locally.  Serves
+        fault-rewritten / non-shift W_t, and sync-channel codecs on dense
+        contractions via ``allgather_combine``.
+      * ``"dense"``     — the pre-wire-true behavior: replica trees move
+        through the engine mix operator dense.
+      * ``"auto"``      — neighbor on shift-structured schedules; allgather
+        for choco/async + active codec when faults rewrite W (where the
+        fallback used to be dense); dense otherwise.
+
+    ``overlap=True`` double-buffers the channel's sends against the τ local
+    steps (requires choco/async; the message lands one round late — one
+    staleness unit, so async bounds must be ≥ 2; see ``CommSpec.overlap``).
 
     With a ``scenario`` (``repro.scenarios.Scenario``), the train step
     consumes a per-round :class:`RoundCtx` and gossips over the scenario's
@@ -233,12 +262,43 @@ def make_train_job(
             **(algorithm_kwargs or {}),
         )
     round_len = alg.comm.round_len(getattr(alg, "tau", 1))
+    if wire_mode not in ("auto", "dense", "neighbor", "allgather"):
+        raise ValueError(
+            f"wire_mode must be auto/dense/neighbor/allgather, got {wire_mode!r}"
+        )
     chan = alg.comm.resolved_channel()
-    # only the sync channel encodes the buffers themselves — its packed
-    # payloads are what the roll backends permute; difference/stale channels
-    # gossip replica trees through the engine mix operator instead
+    if overlap:
+        if not isinstance(chan, ChocoChannel):
+            raise ValueError(
+                "overlap=True requires a choco/async channel (got "
+                f"{getattr(chan, 'name', None)!r}) — sync gossip has no "
+                "replica to mix against while the message is in flight"
+            )
+        alg = dataclasses.replace(alg, channel=dataclasses.replace(chan, overlap=True))
+        chan = alg.comm.resolved_channel()
+
+    def _rebind_channel(**updates):
+        """Rewire the difference channel's wire mode and rebuild the
+        algorithm so executor, state attachment and sharding derivation all
+        see the same channel instance."""
+        nonlocal alg, chan
+        alg = dataclasses.replace(
+            alg, channel=dataclasses.replace(chan, **updates)
+        )
+        chan = alg.comm.resolved_channel()
+
+    # the sync channel encodes the buffers themselves — its packed payloads
+    # move through the payload combine; difference/stale channels encode
+    # replica diffs and deliver through the neighbor/allgather wire hooks
     comp = chan.compression if isinstance(chan, SyncChannel) else None
+    diff_chan = isinstance(chan, ChocoChannel)
+    diff_codec = (
+        diff_chan
+        and chan.compression is not None
+        and not chan.compression.is_identity
+    )
     compressed_combine = None   # None => mix the decoded messages densely
+    transport_hooks: Dict[str, Any] = {}
 
     if scenario is not None:
         scenario.warn_if_vacuous(round_len, runtime_batches=True)
@@ -249,7 +309,7 @@ def make_train_job(
         )
         if n_nodes == 1:
             mix_fn = lambda tree, ctx: tree
-        elif gossip == "roll" and rotations:
+        elif gossip == "roll" and rotations and wire_mode != "allgather":
             mix_fn = scheduled_rotation_mix(rotations)
             if comp is not None:
                 # compress before collective-permute: only the packed payload
@@ -257,20 +317,68 @@ def make_train_job(
                 compressed_combine = rotation_combine(
                     comp, rotations, scheduled=True
                 )
+            if diff_chan and wire_mode in ("auto", "neighbor"):
+                ex = neighbor_exchange(rotations, scheduled=True)
+                _rebind_channel(neighbor_shifts=ex.shifts)
+                transport_hooks["neighbor"] = ex
         elif gossip in ("roll", "dense"):
             mix_fn = scheduled_dense_mix()
+            # "auto" goes allgather only where the fallback used to be dense
+            # with NO wire win at all: fault-rewritten W on the roll backend
+            rewritten = gossip == "roll" and scenario.mutates_w
+            want_ag = wire_mode == "allgather" or (
+                wire_mode == "auto" and rewritten
+            )
+            if want_ag and comp is not None:
+                compressed_combine = allgather_combine(
+                    comp, mesh, scheduled=True, node_axes=node_axes
+                )
+            if want_ag and diff_codec:
+                _rebind_channel(replicated_wire=True)
+                transport_hooks["gather_payload"] = replicate_gather(mesh, node_axes=node_axes)
+                transport_hooks["pin_replicated"] = replicate_pin(mesh)
+                transport_hooks["run_local"] = replicated_local(mesh)
+                transport_hooks["pin_node"] = node_pin(mesh, node_axes)
         else:
             raise ValueError(gossip)
     elif n_nodes == 1:
         mix_fn = identity_mix
     elif gossip == "dense":
         mix_fn = dense_mix(topology.w)
+        if wire_mode == "allgather":
+            if comp is not None:
+                compressed_combine = allgather_combine(comp, mesh, w=topology.w,
+                                                      node_axes=node_axes)
+            if diff_codec:
+                _rebind_channel(replicated_wire=True)
+                transport_hooks["gather_payload"] = replicate_gather(mesh, node_axes=node_axes)
+                transport_hooks["pin_replicated"] = replicate_pin(mesh)
+                transport_hooks["run_local"] = replicated_local(mesh)
+                transport_hooks["pin_node"] = node_pin(mesh, node_axes)
     elif gossip == "roll":
-        mix_fn = roll_mix(topology)
-        if comp is not None:
-            compressed_combine = rotation_combine(
-                comp, (Rotation.from_topology(topology),)
-            )
+        if wire_mode == "allgather":
+            mix_fn = dense_mix(topology.w)
+            if comp is not None:
+                compressed_combine = allgather_combine(comp, mesh, w=topology.w,
+                                                      node_axes=node_axes)
+            if diff_codec:
+                _rebind_channel(replicated_wire=True)
+                transport_hooks["gather_payload"] = replicate_gather(mesh, node_axes=node_axes)
+                transport_hooks["pin_replicated"] = replicate_pin(mesh)
+                transport_hooks["run_local"] = replicated_local(mesh)
+                transport_hooks["pin_node"] = node_pin(mesh, node_axes)
+        else:
+            mix_fn = roll_mix(topology)
+            if comp is not None:
+                compressed_combine = rotation_combine(
+                    comp, (Rotation.from_topology(topology),)
+                )
+            if diff_chan and wire_mode in ("auto", "neighbor"):
+                ex = neighbor_exchange(
+                    (Rotation.from_topology(topology),), scheduled=False
+                )
+                _rebind_channel(neighbor_shifts=ex.shifts)
+                transport_hooks["neighbor"] = ex
     else:
         raise ValueError(gossip)
 
@@ -352,6 +460,7 @@ def make_train_job(
                     alg, mix_fn, grad_of_batch=vgrad,
                     comm_grad_of_batch=_make_comm_grad(loss_cell),
                     compressed_combine=compressed_combine,
+                    transport_hooks=transport_hooks or None,
                 )
                 state = round_step(state, batches)
                 return state, _base_metrics(state, loss_cell)
@@ -375,6 +484,7 @@ def make_train_job(
                     gate_local=scenario.needs_local_gate,
                     gate_active=scenario.needs_active_gate,
                     compressed_combine=compressed_combine,
+                    transport_hooks=transport_hooks or None,
                 )
                 state = round_step(state, batches, ctx)
                 metrics = _base_metrics(state, loss_cell)
@@ -411,7 +521,9 @@ def make_train_job(
             node_vec_spec = P(node_axes if node_axes else None)
             state_spec_fields[f.name] = ChannelState(
                 wire=tuple(
-                    chan.for_buffer(i).wire_spec(param_spec, node_vec_spec)
+                    chan.for_buffer(i).wire_spec(
+                        param_spec, node_vec_spec, stacked_struct
+                    )
                     for i in range(len(v.wire))
                 ),
                 key=P(),

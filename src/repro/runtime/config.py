@@ -40,6 +40,21 @@ class RuntimeConfig:
                 (global device mesh across the group — the transport ROADMAP
                 item 2 builds on).  Incompatible with kill/restart chaos:
                 the jax process group is fixed at initialize time.
+    packed_transport: "auto" rides the packed (wire-true) round protocol
+                whenever the algorithm qualifies (every gossiped buffer on
+                an overlap choco-family channel — see
+                ``repro.runtime.engine.packed_transport``): the ROUND message
+                broadcasts the canonical encoded payload, workers return
+                packed owned payload rows, and the dense contrib/gather
+                exchange disappears.  "off" forces the dense protocol.
+    snapshot_every: packed-mode cadence (in rounds) of full-state DONEs —
+                the rounds whose canonical state feeds the resync store and
+                consensus diagnostics.  1 (default) keeps a fresh canonical
+                every round (dense-mode semantics for dead-node freezing);
+                larger values shrink uplink bytes further, at the cost of
+                dead workers' node rows freezing at the LAST SNAPSHOT
+                rather than the death round.  The final round is always a
+                snapshot.  Ignored by the dense protocol.
     """
 
     problem: str = "mlp_blobs"
@@ -55,6 +70,8 @@ class RuntimeConfig:
     host_devices: int = 1
     jax_distributed: bool = False
     jax_coordinator_port: int = 0   # 0 = coordinator picks a free port
+    packed_transport: str = "auto"  # "auto" | "off"
+    snapshot_every: int = 1
 
     @property
     def hyperparams(self) -> Dict[str, Any]:

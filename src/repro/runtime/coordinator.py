@@ -46,6 +46,7 @@ from ..telemetry import (
 )
 from .chaos import ChaosController, ChaosEvent, by_round
 from .config import RuntimeConfig, owned_nodes
+from .engine import packed_transport
 from .group import ProcessGroup
 from .protocol import attach_trace
 
@@ -76,6 +77,7 @@ class CoordinatorResult:
         self.wall_s: float = 0.0
         self.trace_path: Optional[str] = None
         self.diagnostics: Optional[Dict[str, Any]] = None
+        self.socket_bytes: Optional[Dict[str, int]] = None
 
 
 class Coordinator:
@@ -134,10 +136,23 @@ class Coordinator:
         self.schedule = base_scenario(config).materialize(
             config.n_nodes, config.n_rounds, self.round_len, config.batch_size
         )
+        # packed (wire-true) transport: rounds broadcast the canonical
+        # encoded payload and collect packed owned rows — no dense
+        # contrib/gather.  Derived from the config alone, so every worker
+        # reaches the same verdict from its WELCOME copy.
+        self.packed = (
+            config.packed_transport != "off" and packed_transport(alg)
+        )
 
         self.stacked_mask: Optional[List[bool]] = None
         self.canonical: Optional[List[np.ndarray]] = None
         self.canonical_key: Optional[np.ndarray] = None
+        self.fly_mask: Optional[List[bool]] = None
+        self.canonical_fly: Optional[List[np.ndarray]] = None
+        self._fly_idx: List[int] = []
+        self._canonical_round = 0   # the round self.canonical reflects
+        self._saved_round = -1      # the round the resync store holds
+        self._last_socket_bytes = 0
         self.result = CoordinatorResult()
         self._pending_joins: List[Tuple[int, bool, Any]] = []
         self._sleep_map: Dict[int, float] = {}
@@ -208,8 +223,53 @@ class Coordinator:
             "jax_coordinator": self.jax_coordinator,
         })
 
+    def _ensure_snapshot(self, round_: int) -> None:
+        """Make sure the resync store holds a bundle for ``round_``.
+
+        The dense protocol saves every round, so this is a no-op there.  The
+        packed protocol only refreshes the canonical state on snapshot
+        rounds; a join/recovery at any other boundary triggers this one
+        extra SNAPSHOT round-trip — workers ship owned rows + scalars of
+        their committed state and the coordinator folds them over the last
+        canonical (rows owned by dead workers keep their last-snapshot
+        values, the same freezing rule the snapshot rounds apply)."""
+        if self._saved_round == round_:
+            return
+        while True:
+            live = self.group.live()
+            if not live:
+                raise RuntimeError(f"snapshot at round {round_}: no live workers")
+            ep = self.group.epoch
+            for wid in live:
+                self.group.send(wid, {
+                    "type": "snapshot", "round": round_, "epoch": ep,
+                })
+            rows = self._collect("snapshot_rows", round_, ep, live)
+            if rows is not None:
+                break
+        lead = min(rows)
+        stacked_idx = [i for i, m in enumerate(self.stacked_mask) if m]
+        scalar_idx = [i for i, m in enumerate(self.stacked_mask) if not m]
+        new = [np.array(l, copy=True) for l in self.canonical]
+        for wid in live:
+            rrows = self.owned[wid]
+            for j, i in enumerate(stacked_idx):
+                new[i][rrows] = np.asarray(rows[wid]["state_rows"][j])
+        for j, i in enumerate(scalar_idx):
+            new[i] = np.asarray(rows[lead]["scalar_leaves"][j])
+        if self.canonical_fly is not None:
+            for j, i in enumerate(self._fly_idx):
+                new[i] = np.array(self.canonical_fly[j], copy=True)
+        self.canonical = new
+        self.canonical_key = np.asarray(rows[lead]["key"])
+        self._canonical_round = round_
+        self.store.save(round_, self.canonical, self.canonical_key,
+                        {"epoch": self.group.epoch})
+        self._saved_round = round_
+
     def _resync(self, wid: int, round_: int) -> None:
         """Serve the canonical bundle FROM DISK and wait for the ack."""
+        self._ensure_snapshot(round_)
         trace = round_trace_id(self.run_id, round_)
         t0 = time.perf_counter()
         with self.tracer.span("resync", trace=trace, step=round_,
@@ -293,11 +353,26 @@ class Coordinator:
         if len(masks) != 1:
             raise RuntimeError(f"workers disagree on stacked leaves: {masks}")
         self.stacked_mask = list(masks.pop())
+        fly = {tuple(m.get("fly_mask", ())) for m in readys.values()}
+        if len(fly) != 1:
+            raise RuntimeError(f"workers disagree on fly leaves: {fly}")
+        self.fly_mask = list(fly.pop())
+        self._fly_idx = [i for i, m in enumerate(self.fly_mask) if m]
         init = readys[0]
         self.canonical = [np.asarray(l) for l in init["leaves"]]
         self.canonical_key = np.asarray(init["key"])
+        if self.packed:
+            if not self._fly_idx:
+                raise RuntimeError(
+                    "packed transport selected but the state has no fly "
+                    "(in-flight payload) leaves"
+                )
+            self.canonical_fly = [
+                np.array(self.canonical[i], copy=True) for i in self._fly_idx
+            ]
         self.store.save(0, self.canonical, self.canonical_key,
                         {"epoch": self.group.epoch})
+        self._saved_round = 0
 
     # -- the round ------------------------------------------------------
     def _collect(self, want: str, round_: int, epoch: int,
@@ -389,21 +464,25 @@ class Coordinator:
         ).astype(np.float32)
         lm_r = self.schedule.local_mask[r] & active[None, :]
         ep = self.group.epoch
+        base_msg = {
+            "type": "round", "round": r, "epoch": ep,
+            "w": w_r, "active": active, "local_mask": lm_r,
+            "pattern": int(self.schedule.pattern[r]),
+            "comp_scale": (
+                None if self.schedule.comp_scale is None
+                else self.schedule.comp_scale[r]
+            ),
+            "trigger": (
+                None if self.schedule.trigger is None
+                else self.schedule.trigger[r]
+            ),
+        }
+        if self.packed:
+            return self._packed_round(r, ep, live, active, base_msg)
         for wid in live:
-            self.group.send(wid, attach_trace({
-                "type": "round", "round": r, "epoch": ep,
-                "w": w_r, "active": active, "local_mask": lm_r,
-                "pattern": int(self.schedule.pattern[r]),
-                "comp_scale": (
-                    None if self.schedule.comp_scale is None
-                    else self.schedule.comp_scale[r]
-                ),
-                "trigger": (
-                    None if self.schedule.trigger is None
-                    else self.schedule.trigger[r]
-                ),
-                "sleep": self._sleep_map.get(wid, 0.0),
-            }, self._cur_trace))
+            self.group.send(wid, attach_trace(
+                dict(base_msg, sleep=self._sleep_map.get(wid, 0.0)),
+                self._cur_trace))
         contribs = self._collect("contrib", r, ep, live)
         if contribs is None:
             return False
@@ -433,8 +512,59 @@ class Coordinator:
                 new[i][inactive] = self.canonical[i][inactive]
         self.canonical = new
         self.canonical_key = np.asarray(dones[lead]["key"])
+        self._canonical_round = r + 1
         self.result.active_log[r] = active
+        self._merge_done_records(dones)
+        return True
 
+    def _packed_round(self, r: int, ep: int, live: Sequence[int],
+                      active: np.ndarray, base_msg: dict) -> bool:
+        """One wire-true round: broadcast the canonical in-flight payload
+        (the ONLY cross-worker state the round needs — every worker evolves
+        the full wire trees identically from it), collect packed owned
+        payload rows back, and only reassemble the dense canonical state on
+        snapshot rounds.  The dense contrib/gather exchange never happens."""
+        full = ((r + 1) % max(1, self.cfg.snapshot_every) == 0
+                or r == self.cfg.n_rounds - 1)
+        for wid in live:
+            self.group.send(wid, attach_trace(
+                dict(base_msg, payload=self.canonical_fly, full=full,
+                     sleep=self._sleep_map.get(wid, 0.0)),
+                self._cur_trace))
+        dones = self._collect("done", r, ep, live)
+        if dones is None:
+            return False
+        self._sleep_map.clear()
+
+        # next round's broadcast payload: owner rows from each live worker,
+        # dead-owner rows frozen (they are gated by ``active`` everywhere)
+        new_fly = [np.array(a, copy=True) for a in self.canonical_fly]
+        for wid in live:
+            rows = self.owned[wid]
+            for j, arr in enumerate(dones[wid]["fly_rows"]):
+                new_fly[j][rows] = np.asarray(arr)
+        self.canonical_fly = new_fly
+        lead = min(dones)
+        self.canonical_key = np.asarray(dones[lead]["key"])
+        if full:
+            stacked_idx = [i for i, m in enumerate(self.stacked_mask) if m]
+            scalar_idx = [i for i, m in enumerate(self.stacked_mask) if not m]
+            new = [np.array(l, copy=True) for l in self.canonical]
+            for wid in live:
+                rows = self.owned[wid]
+                for j, i in enumerate(stacked_idx):
+                    new[i][rows] = np.asarray(dones[wid]["state_rows"][j])
+            for j, i in enumerate(scalar_idx):
+                new[i] = np.asarray(dones[lead]["scalar_leaves"][j])
+            for j, i in enumerate(self._fly_idx):
+                new[i] = np.array(new_fly[j], copy=True)
+            self.canonical = new
+            self._canonical_round = r + 1
+        self.result.active_log[r] = active
+        self._merge_done_records(dones)
+        return True
+
+    def _merge_done_records(self, dones: Dict[int, dict]) -> None:
         for wid in sorted(dones):
             recs = dones[wid].get("records") or []
             self.result.worker_records.extend(recs)
@@ -442,7 +572,6 @@ class Coordinator:
                 self._records.extend(recs)
             if self.writer is not None:
                 self.writer.append(recs)
-        return True
 
     def _consensus_error(self, active: np.ndarray) -> Optional[float]:
         """Host-side ``||X - X̄||²`` over the canonical stacked leaves,
@@ -501,10 +630,17 @@ class Coordinator:
             for wid, age in self.group.heartbeat_ages().items():
                 self.hub.record("heartbeat_age", age, step=r,
                                 label=f"worker:{wid}")
-            self.diag.observe(
-                r, epoch=self.group.epoch,
-                consensus=self._consensus_error(self.result.active_log[r]),
+            sb = self.group.socket_bytes()
+            self.hub.record("socket_round_bytes",
+                            sb["total"] - self._last_socket_bytes, step=r)
+            self._last_socket_bytes = sb["total"]
+            # packed rounds between snapshots leave self.canonical stale —
+            # only feed the consensus watcher a value it can trust
+            consensus = (
+                self._consensus_error(self.result.active_log[r])
+                if self._canonical_round == r + 1 else None
             )
+            self.diag.observe(r, epoch=self.group.epoch, consensus=consensus)
             chunk = self._cursor.drain()
             self._records.extend(chunk)
             if self.writer is not None:
@@ -530,8 +666,10 @@ class Coordinator:
             self.result.round_seconds.append(dt)
             self.result.epochs.append(self.group.epoch)
             self._observe_round(r, dt)
-            self.store.save(r + 1, self.canonical, self.canonical_key,
-                            {"epoch": self.group.epoch})
+            if self._canonical_round == r + 1:
+                self.store.save(r + 1, self.canonical, self.canonical_key,
+                                {"epoch": self.group.epoch})
+                self._saved_round = r + 1
         for wid in self.group.live():
             self.group.send(wid, {"type": "shutdown"})
         with self.obs_lock:
@@ -548,5 +686,6 @@ class Coordinator:
                 self.result.trace_path = self.trace_path
         self.result.final_leaves = self.canonical
         self.result.final_key = self.canonical_key
+        self.result.socket_bytes = self.group.socket_bytes()
         self.result.wall_s = time.perf_counter() - t_start
         return self.result

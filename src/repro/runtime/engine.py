@@ -41,12 +41,38 @@ import numpy as np
 
 from ..checkpoint.checkpoint import _like_leaf, _to_array
 from ..compression.base import attach_channel_state
+from ..compression.channels import ChocoChannel
 from ..core import RoundCtx, make_algorithm, make_round_step
 from ..core.mixing import scheduled_dense_mix
 from .config import RuntimeConfig, owned_nodes
 from .problems import localize, make_problem
 
-__all__ = ["WorkerEngine", "wire_leaves", "restore_wire_leaves"]
+__all__ = [
+    "WorkerEngine", "wire_leaves", "restore_wire_leaves", "packed_transport",
+]
+
+
+def packed_transport(algorithm) -> bool:
+    """Whether this algorithm's rounds can ride the PACKED socket protocol:
+    every gossiped buffer drives an overlap (double-buffered) choco-family
+    channel, so the only cross-worker state a round needs is the previous
+    round's encoded payload (the channel wire's ``"fly"`` entry) — known at
+    round START and broadcast in the ROUND message, eliminating the dense
+    contrib/gather exchange entirely.
+
+    Derived from the algorithm spec alone, so the coordinator and every
+    worker — each holding the same :class:`RuntimeConfig` — agree without
+    negotiation."""
+    chan = algorithm.comm.resolved_channel()
+    if chan is None:
+        return False
+    buffers = (
+        chan.channels if hasattr(chan, "channels") else
+        (chan,) * len(algorithm.comm.buffers)
+    )
+    return all(
+        isinstance(c, ChocoChannel) and c.overlap for c in buffers
+    )
 
 
 def wire_leaves(tree: Any) -> List[np.ndarray]:
@@ -185,6 +211,59 @@ class WorkerEngine:
         if rest:
             raise ValueError(f"{rest} gathered arrays beyond the stacked leaves")
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- packed (wire-true) transport ----------------------------------
+    def fly_mask(self, state: Any) -> List[bool]:
+        """Which state leaves are the channel wire's in-flight message (the
+        ``"fly"`` entries of ``state.comp.wire``) — the ONLY cross-worker
+        state a packed round moves.  Positional over ``tree_leaves(state)``,
+        same convention as :meth:`stacked_mask`."""
+        paths = jax.tree_util.tree_flatten_with_path(state)[0]
+        return [
+            "['fly']" in jax.tree_util.keystr(path) for path, _ in paths
+        ]
+
+    def fly_rows(self, state: Any) -> List[np.ndarray]:
+        """Wire arrays of this worker's owned rows of every fly leaf (all
+        fly leaves are node-stacked: packed payloads and send masks)."""
+        rows = np.asarray(self.owned)
+        out = []
+        for leaf, m in zip(jax.tree_util.tree_leaves(state),
+                           self.fly_mask(state)):
+            if not m:
+                continue
+            arr = np.asarray(_to_array(leaf))
+            if arr.ndim == 0 or arr.shape[0] != self.n_nodes:
+                raise ValueError(
+                    f"fly leaf of shape {arr.shape} is not node-stacked"
+                )
+            out.append(arr[rows])
+        return out
+
+    def set_fly(self, state: Any, arrays: Sequence[np.ndarray]) -> Any:
+        """Overwrite the fly leaves with the coordinator's canonical packed
+        payload (full N-row arrays, broadcast in the ROUND message)."""
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        mask = self.fly_mask(state)
+        it = iter(arrays)
+        out = []
+        for leaf, m in zip(leaves, mask):
+            out.append(_like_leaf(jnp.asarray(next(it)), leaf) if m else leaf)
+        rest = sum(1 for _ in it)
+        if rest:
+            raise ValueError(f"{rest} payload arrays beyond the fly leaves")
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def scalar_leaves(self, state: Any) -> List[np.ndarray]:
+        """Wire arrays of every NON-stacked leaf (step counters, the channel
+        codec key) — these advance identically on all workers, so the
+        coordinator takes them from the lead DONE on snapshot rounds."""
+        return [
+            np.asarray(_to_array(l))
+            for l, m in zip(jax.tree_util.tree_leaves(state),
+                            self.stacked_mask(state))
+            if not m
+        ]
 
     # ------------------------------------------------------------------
     def run_local(self, state: Any, key: jax.Array, local_mask: np.ndarray):

@@ -48,6 +48,10 @@ class ProcessGroup:
         self.handles: Dict[int, WorkerHandle] = {}
         self.dead: set = set()  # EOF'd workers not (yet) reconnected
         self.epoch = 0
+        # byte totals of retired (dead) connections, so socket_bytes() stays
+        # monotonic across kills/rejoins
+        self._retired_tx = 0
+        self._retired_rx = 0
         self._lock = threading.Lock()
         self._closed = False
         self._listener = socket.create_server((host, port))
@@ -122,6 +126,8 @@ class ProcessGroup:
         h = self.handles.pop(worker_id, None)
         if h is not None:
             h.alive = False
+            self._retired_tx += h.conn.tx_bytes
+            self._retired_rx += h.conn.rx_bytes
             h.conn.close()
         self.dead.add(worker_id)
         self.bump_epoch()
@@ -161,6 +167,19 @@ class ProcessGroup:
 
     def suspended(self) -> List[int]:
         return sorted(wid for wid, h in self.handles.items() if h.suspended)
+
+    def socket_bytes(self) -> Dict[str, int]:
+        """Measured control-channel traffic, coordinator side: framed bytes
+        sent to / received from every worker connection (dead ones included).
+        ``tx`` is round/gather/resync downlink, ``rx`` is contrib/done/
+        heartbeat uplink."""
+        tx = self._retired_tx + sum(
+            h.conn.tx_bytes for h in self.handles.values()
+        )
+        rx = self._retired_rx + sum(
+            h.conn.rx_bytes for h in self.handles.values()
+        )
+        return {"tx": tx, "rx": rx, "total": tx + rx}
 
     def health(self) -> Dict[str, object]:
         """One JSON-able membership snapshot — the ``/healthz`` payload's

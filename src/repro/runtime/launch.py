@@ -51,6 +51,7 @@ class ElasticResult:
     trace_path: Optional[str] = None    # stitched Chrome/Perfetto trace file
     http_address: Optional[str] = None  # fleet-health plane URL (if served)
     diagnostics: Optional[dict] = None  # DiagnosticsMonitor.diagnose() report
+    socket_bytes: Optional[dict] = None  # measured {tx, rx, total} framed bytes
 
     @property
     def rounds_per_sec(self) -> float:
@@ -185,4 +186,5 @@ def launch(
         trace_path=res.trace_path,
         http_address=http_address,
         diagnostics=res.diagnostics,
+        socket_bytes=res.socket_bytes,
     )

@@ -20,11 +20,11 @@ import pickle
 import socket
 import struct
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 __all__ = [
-    "send_msg", "recv_msg", "MessageSocket", "connect_with_retry",
-    "TRACE_FIELD", "attach_trace",
+    "send_msg", "recv_msg", "recv_msg_sized", "MessageSocket",
+    "connect_with_retry", "TRACE_FIELD", "attach_trace",
 ]
 
 _LEN = struct.Struct(">Q")
@@ -47,9 +47,11 @@ def attach_trace(msg: Dict[str, Any], trace: Optional[str]) -> Dict[str, Any]:
 MAX_MESSAGE_BYTES = 1 << 33
 
 
-def send_msg(sock: socket.socket, msg: Dict[str, Any]) -> None:
+def send_msg(sock: socket.socket, msg: Dict[str, Any]) -> int:
+    """Send one framed message; returns the on-wire byte count (frame + body)."""
     blob = pickle.dumps(msg, protocol=4)
     sock.sendall(_LEN.pack(len(blob)) + blob)
+    return _LEN.size + len(blob)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
@@ -62,34 +64,49 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     return bytes(buf)
 
 
-def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
-    """One framed message, or None on a clean EOF."""
+def recv_msg_sized(
+    sock: socket.socket,
+) -> Tuple[Optional[Dict[str, Any]], int]:
+    """One framed message plus its on-wire size, or (None, 0) on clean EOF."""
     head = _recv_exact(sock, _LEN.size)
     if head is None:
-        return None
+        return None, 0
     (n,) = _LEN.unpack(head)
     if n > MAX_MESSAGE_BYTES:
         raise ValueError(f"control message of {n} bytes exceeds cap")
     body = _recv_exact(sock, n)
     if body is None:
-        return None
-    return pickle.loads(body)
+        return None, 0
+    return pickle.loads(body), _LEN.size + n
+
+
+def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
+    """One framed message, or None on a clean EOF."""
+    return recv_msg_sized(sock)[0]
 
 
 class MessageSocket:
     """A socket plus a send lock, so a heartbeat thread and the main loop can
-    both write without interleaving frames."""
+    both write without interleaving frames.
+
+    Every framed byte through ``send``/``recv`` is counted (``tx_bytes`` /
+    ``rx_bytes``) — the measured per-round link traffic the wire-true
+    transport work reports, as opposed to an analytic payload model."""
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
         self._send_lock = threading.Lock()
+        self.tx_bytes = 0
+        self.rx_bytes = 0
 
     def send(self, msg: Dict[str, Any]) -> None:
         with self._send_lock:
-            send_msg(self.sock, msg)
+            self.tx_bytes += send_msg(self.sock, msg)
 
     def recv(self) -> Optional[Dict[str, Any]]:
-        return recv_msg(self.sock)
+        msg, n = recv_msg_sized(self.sock)
+        self.rx_bytes += n
+        return msg
 
     def close(self) -> None:
         try:

@@ -60,7 +60,9 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
         RecordCursor, Telemetry, TraceRecorder, register_runtime_streams,
         run_metadata,
     )
-    from .engine import WorkerEngine, restore_wire_leaves, wire_leaves
+    from .engine import (
+        WorkerEngine, packed_transport, restore_wire_leaves, wire_leaves,
+    )
 
     conn = connect_with_retry(coordinator)
     conn.send({"type": "hello", "worker": int(worker_id), "rejoin": bool(rejoin)})
@@ -98,10 +100,12 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
     committed = (state, key)
     committed_round = int(welcome["round"])
     epoch = int(welcome["epoch"])
+    packed = (cfg.packed_transport != "off") and packed_transport(engine.alg)
 
     ready = {
         "type": "ready", "worker": worker_id,
         "stacked_mask": engine.stacked_mask(state),
+        "fly_mask": engine.fly_mask(state),
     }
     if welcome.get("need_init"):
         ready["leaves"] = wire_leaves(state)
@@ -138,6 +142,29 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
                 conn.send({"type": "resync_ok", "worker": worker_id,
                            "round": committed_round})
                 continue
+            if mtype == "snapshot":
+                # packed-mode boundary snapshot: commit a matching pending
+                # round, then ship owned rows + scalars of the committed
+                # state so the coordinator can assemble a fresh resync bundle
+                r = int(msg["round"])
+                if pending is not None and r == pending_round:
+                    committed = pending
+                    committed_round = r
+                    pending = None
+                if committed_round != r:
+                    raise RuntimeError(
+                        f"snapshot for round {r} but committed state is at "
+                        f"round {committed_round}"
+                    )
+                st, k = committed
+                conn.send({
+                    "type": "snapshot_rows", "worker": worker_id,
+                    "round": r, "epoch": int(msg["epoch"]),
+                    "state_rows": engine.owned_rows(st),
+                    "scalar_leaves": engine.scalar_leaves(st),
+                    "key": wire_leaves(k)[0],
+                })
+                continue
             if mtype != "round":
                 continue
             r, epoch = int(msg["round"]), int(msg["epoch"])
@@ -158,6 +185,44 @@ def run_worker(coordinator: str, worker_id: int, rejoin: bool = False) -> int:
                                  epoch=epoch):
                     time.sleep(sleep_s)  # the REAL straggler
             st, k = committed
+            if packed and "payload" in msg:
+                # PACKED round: the broadcast canonical payload is the whole
+                # cross-worker exchange — overwrite the in-flight wire
+                # message, run local + comm back to back (the comm phase's
+                # only cross-row reads are the replica trees, which every
+                # worker evolves identically from the same payloads), and
+                # return packed owned payload rows instead of dense state
+                st = engine.set_fly(st, msg["payload"])
+                with tracer.span("local", trace=trace, step=r, epoch=epoch):
+                    post_local, k = engine.run_local(
+                        st, k, np.asarray(msg["local_mask"])
+                    )
+                    k, last = engine.sample_comm_batch(k)
+                with tracer.span("gossip", trace=trace, step=r, epoch=epoch):
+                    post_comm = engine.run_comm(
+                        post_local, last,
+                        (msg["w"], msg["active"], msg["local_mask"],
+                         msg["pattern"], msg.get("comp_scale"),
+                         msg.get("trigger")),
+                    )
+                    jax.block_until_ready(post_comm)
+                pending = (post_comm, k)
+                pending_round = r + 1
+                dt = time.perf_counter() - t0
+                hub.record("contrib_seconds", dt, step=r)
+                done = {
+                    "type": "done", "worker": worker_id, "round": r,
+                    "epoch": epoch,
+                    "fly_rows": engine.fly_rows(post_comm),
+                    "key": wire_leaves(k)[0],
+                    "seconds": dt,
+                    "records": cursor.drain(),
+                }
+                if msg.get("full"):
+                    done["state_rows"] = engine.owned_rows(post_comm)
+                    done["scalar_leaves"] = engine.scalar_leaves(post_comm)
+                conn.send(done)
+                continue
             with tracer.span("local", trace=trace, step=r, epoch=epoch):
                 post_local, k = engine.run_local(st, k, np.asarray(msg["local_mask"]))
                 k, last = engine.sample_comm_batch(k)

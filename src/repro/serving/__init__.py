@@ -10,6 +10,10 @@ channels use:
   * :class:`ReplicaSet` — the subscriber set: dequantized snapshots with a
     per-replica staleness bound (the freshness SLO) and the serving metrics
     streams (``replicas.py`` / ``metrics.py``);
+  * :class:`SnapshotFeed` / :class:`RemoteReplica` — the same contract over
+    a real socket: pull-based packed-snapshot fetch on the elastic runtime's
+    framed control channel, byte-equal with the in-process subscriber
+    (``remote.py``);
   * :func:`scan_prefill` / :class:`RequestDriver` — single-dispatch prefill
     and continuous batching over ``Model.decode_step`` for load testing
     (``driver.py``).
@@ -18,6 +22,7 @@ See README "Serving plane" and ``examples/serve_while_training.py``.
 """
 from .driver import RequestDriver, scan_prefill
 from .metrics import SERVING_STREAM_FIELDS, ServingMetrics
+from .remote import RemoteReplica, SnapshotFeed
 from .replicas import ReplicaSet
 from .snapshot import SnapshotPublisher, SnapshotState
 
@@ -25,6 +30,8 @@ __all__ = [
     "SnapshotPublisher",
     "SnapshotState",
     "ReplicaSet",
+    "SnapshotFeed",
+    "RemoteReplica",
     "ServingMetrics",
     "SERVING_STREAM_FIELDS",
     "RequestDriver",

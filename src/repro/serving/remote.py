@@ -1,0 +1,214 @@
+"""Pull-based remote snapshot subscribers over the runtime's control channel.
+
+The in-process :class:`~repro.serving.ReplicaSet` already treats an
+inference replica as one more gossip subscriber; this module puts a real
+socket between the two halves of that contract.  The training side runs a
+:class:`SnapshotFeed` — :meth:`SnapshotPublisher.publish_packed` per round,
+with every packed message (send mask + ENCODED payload + codec key, never
+the raw parameters) appended to an in-memory log and served over the same
+length-prefixed :class:`~repro.runtime.protocol.MessageSocket` framing the
+elastic runtime's coordinator speaks.  A :class:`RemoteReplica` in another
+process dials in and PULLS whatever messages it has not yet applied:
+
+    feed = SnapshotFeed(publisher, params)          # training process
+    for round in training:
+        state = run_round(state)
+        feed.publish(node_mean(state.params))
+
+    sub = RemoteReplica(feed.address, publisher, params)   # serving process
+    sub.pull()                                             # catch up
+    serve(sub.params_for(0))
+
+Because the publisher itself advances through ``apply_packed`` (the CHOCO
+publisher==subscriber invariant), a remote replica that has applied the
+publisher's messages in sequence holds a snapshot state BYTE-EQUAL to the
+in-process one — the wire adds latency, never drift.  The only arrays that
+ever cross the socket are the packed wire messages, so the measured link
+traffic (``MessageSocket.tx_bytes``/``rx_bytes``) scales with the codec's
+wire bytes, not the parameter count — the same wire-true accounting the
+packed elastic-runtime transport reports.
+
+The trust model is the runtime control plane's (pickled frames between
+processes the operator launched), not an internet-facing API.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.protocol import MessageSocket, connect_with_retry, recv_msg
+from .snapshot import SnapshotPublisher, SnapshotState
+
+PyTree = Any
+
+__all__ = ["SnapshotFeed", "RemoteReplica"]
+
+
+def _host_packed(packed) -> Any:
+    """Device -> host numpy, so the log (and the pickled frames) never pin
+    device buffers.  The codec key is a typed PRNG key: ship its raw key
+    data (the same convention as the runtime's resync bundle)."""
+    wire = dict(packed)
+    wire["key"] = np.asarray(jax.random.key_data(wire["key"]))
+    return jax.tree.map(np.asarray, wire)
+
+
+def _unwire_packed(packed) -> Any:
+    wire = dict(packed)
+    wire["key"] = jax.random.wrap_key_data(jnp.asarray(wire["key"]))
+    return wire
+
+
+class SnapshotFeed:
+    """Training-side publisher + snapshot wire server (one thread per
+    subscriber connection, same accept idiom as the runtime's ProcessGroup).
+
+    Serves three request types:
+
+      * ``fetch``  {"since": n} -> ``packed`` {"messages": log[n:], "seq"}
+      * ``stat``   {}           -> ``stat``   {"seq", "tag", "bounds"}
+      * ``close``  (or EOF)     -> connection teardown
+    """
+
+    def __init__(
+        self,
+        publisher: SnapshotPublisher,
+        params: PyTree,
+        key: Optional[jax.Array] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ):
+        self.publisher = publisher
+        self.state: SnapshotState = publisher.init(params, key=key)
+        self._publish = jax.jit(publisher.publish_packed)
+        self._log: List[Any] = []
+        self._lock = threading.Lock()
+        self._conns: List[MessageSocket] = []
+        self._closed = False
+        self._listener = socket.create_server((host, port))
+        self.address = f"{host}:{self._listener.getsockname()[1]}"
+        threading.Thread(
+            target=self._accept_loop, daemon=True, name="snapshot-feed-accept"
+        ).start()
+
+    # -- training side --------------------------------------------------
+    def publish(self, live_params: PyTree) -> dict:
+        """One publish tick: advance the publisher state, append the packed
+        message to the wire log, return the (host numpy) info dict."""
+        self.state, info, packed = self._publish(self.state, live_params)
+        with self._lock:
+            self._log.append(_host_packed(packed))
+        return {k: np.asarray(v) for k, v in info.items()}
+
+    @property
+    def seq(self) -> int:
+        with self._lock:
+            return len(self._log)
+
+    def link_bytes(self) -> dict:
+        """Measured framed bytes across every subscriber socket so far."""
+        with self._lock:
+            tx = sum(c.tx_bytes for c in self._conns)
+            rx = sum(c.rx_bytes for c in self._conns)
+        return {"tx": tx, "rx": rx, "total": tx + rx}
+
+    # -- wire side ------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                raw, _ = self._listener.accept()
+            except OSError:
+                return
+            conn = MessageSocket(raw)
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(
+                target=self._serve_loop, args=(conn,), daemon=True,
+                name="snapshot-feed-serve",
+            ).start()
+
+    def _serve_loop(self, conn: MessageSocket) -> None:
+        try:
+            while True:
+                msg = conn.recv()
+                if msg is None or msg.get("type") == "close":
+                    return
+                if msg.get("type") == "fetch":
+                    since = int(msg.get("since", 0))
+                    with self._lock:
+                        batch = list(self._log[since:])
+                        seq = len(self._log)
+                    conn.send({"type": "packed", "since": since,
+                               "seq": seq, "messages": batch})
+                elif msg.get("type") == "stat":
+                    conn.send({"type": "stat", "seq": self.seq,
+                               "tag": self.publisher.tag,
+                               "bounds": self.publisher.bounds})
+        except OSError:
+            return
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns, self._conns = list(self._conns), []
+        for c in conns:
+            c.close()
+
+
+class RemoteReplica:
+    """Serving-side subscriber: pulls packed messages and applies them in
+    sequence through the publisher's own ``apply_packed``, so its snapshot
+    state stays byte-equal with the in-process publisher estimate."""
+
+    def __init__(
+        self,
+        address: str,
+        publisher: SnapshotPublisher,
+        params: PyTree,
+        key: Optional[jax.Array] = None,
+    ):
+        self.publisher = publisher
+        self.state: SnapshotState = publisher.init(params, key=key)
+        self._apply = jax.jit(publisher.apply_packed)
+        self.conn = connect_with_retry(address)
+        self.applied = 0
+
+    def pull(self) -> int:
+        """Fetch-and-apply every message published since the last pull;
+        returns how many messages were applied."""
+        self.conn.send({"type": "fetch", "since": self.applied})
+        msg = self.conn.recv()
+        if msg is None:
+            raise ConnectionError("snapshot feed closed while fetching")
+        if msg.get("type") != "packed" or int(msg["since"]) != self.applied:
+            raise RuntimeError(f"unexpected feed reply: {msg.get('type')}")
+        for packed in msg["messages"]:
+            self.state = self._apply(self.state, _unwire_packed(packed))
+            self.applied += 1
+        return len(msg["messages"])
+
+    def link_bytes(self) -> dict:
+        return {"tx": self.conn.tx_bytes, "rx": self.conn.rx_bytes,
+                "total": self.conn.tx_bytes + self.conn.rx_bytes}
+
+    def params_for(self, i: int) -> PyTree:
+        return self.publisher.replica_params(self.state, i)
+
+    def ages(self) -> np.ndarray:
+        return np.asarray(self.state.age)
+
+    def close(self) -> None:
+        try:
+            self.conn.send({"type": "close"})
+        except OSError:
+            pass
+        self.conn.close()

@@ -333,3 +333,8 @@ def register_runtime_streams(hub: Telemetry) -> None:
     hub.register_stream(StreamSpec("resync_seconds", kind="histogram", unit="s",
                                    doc="rejoin resync latency (checkpoint "
                                        "bundle -> RESYNC_OK)"))
+    hub.register_stream(StreamSpec("socket_round_bytes", kind="histogram",
+                                   unit="B",
+                                   doc="measured control-channel bytes (tx+rx, "
+                                       "framed) that crossed the coordinator's "
+                                       "sockets during one round"))

@@ -1,0 +1,312 @@
+"""Wire-true transport acceptance tests (perf_opt criteria):
+
+  * codec regression guard: the SPMD-friendly top-k (stable argsort + vmapped
+    per-row scatter) selects and reconstructs EXACTLY what the previous
+    ``lax.top_k`` / 2-D-advanced-indexing implementation did — the rewrite
+    only changes how the ops partition, never what they compute;
+  * overlap scheduling: ``defer_roll`` demands ``overlap=True``, and on the
+    sharded engine the pre-rolled and roll-at-consume packed messages are
+    BIT-identical — the double-buffered send hides latency without touching
+    numerics;
+  * measured link bytes: on a data-only 8-node mesh the packed
+    neighbor-replica wire moves >= 4x fewer collective-permute bytes than the
+    dense replica gossip (choco + top_k:0.1), and on a fault-rewritten
+    (dropout_ring) schedule the compressed allgather moves fewer all-gather
+    bytes than the dense fallback while staying numerically equivalent;
+  * elastic socket plane: the packed round protocol replays BIT-identically
+    against the single-process reference and moves fewer framed socket bytes
+    than the dense contrib/gather exchange; ``packed_transport`` derives
+    eligibility from the algorithm spec alone;
+  * serving pull plane: a ``RemoteReplica`` draining a ``SnapshotFeed`` over
+    a real socket lands byte-equal with the in-process publisher state.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.compression import make_compressor
+from repro.compression.compressors import TopK
+from repro.kernels.comm_compress.ref import top_k_unpack_ref
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _can_spawn() -> bool:
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", "print('ok')"],
+            capture_output=True, timeout=60,
+        )
+        return out.returncode == 0
+    except Exception:
+        return False
+
+
+needs_spawn = pytest.mark.skipif(
+    not _can_spawn(), reason="subprocess spawning unavailable"
+)
+
+
+def run_sub(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}"
+    )
+    return out.stdout
+
+
+# ------------------------------------------------------------ codec guard
+def test_top_k_argsort_matches_lax_top_k():
+    """The stable argsort selection is the SAME selection ``lax.top_k``
+    makes (descending |x|, ties to the lower index) — forced ties included.
+    The argsort form exists because the TopK custom-call cannot be
+    partitioned over a sharded node axis; selection semantics must not
+    move."""
+    key = jax.random.key(7)
+    # quantize hard so rows contain genuine |x| ties
+    x = jnp.round(jax.random.normal(key, (8, 64)) * 3.0) / 3.0
+    comp = TopK(ratio=0.25)
+    k = 16
+    idx = comp._indices(x, jax.random.key(0), k)
+    _, ref_idx = lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+
+
+def test_top_k_unpack_matches_2d_indexing():
+    """The vmapped per-row scatter is bit-identical to the 2-D advanced
+    indexing it replaced (including duplicate-index accumulation)."""
+    key = jax.random.key(11)
+    vals = jax.random.normal(key, (4, 12))
+    idx = jax.random.randint(jax.random.key(12), (4, 12), 0, 40)
+    d = 40
+    new = top_k_unpack_ref(idx, vals, d)
+    rows = jnp.arange(4)[:, None]
+    old = jnp.zeros((4, d), vals.dtype).at[rows, idx].add(vals)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+def test_top_k_roundtrip_unchanged():
+    """encode -> decode reconstructs exactly the k largest-|x| entries."""
+    comp = make_compressor("top_k:0.25")
+    x = jax.random.normal(jax.random.key(3), (4, 32))
+    payload = comp.encode(x, jax.random.key(4))
+    dec = comp.decode(payload)
+    k = max(1, int(round(32 * 0.25)))
+    _, top_idx = lax.top_k(jnp.abs(x), k)
+    mask = jnp.zeros((4, 32), bool)
+    mask = jax.vmap(lambda m, i: m.at[i].set(True))(mask, top_idx)
+    np.testing.assert_array_equal(
+        np.asarray(dec), np.asarray(jnp.where(mask, x, 0.0))
+    )
+
+
+# --------------------------------------------------------- overlap plumbing
+def test_defer_roll_requires_overlap():
+    from repro.compression import ChocoChannel
+
+    with pytest.raises(ValueError, match="overlap"):
+        ChocoChannel(compression=make_compressor("top_k:0.25"),
+                     defer_roll=True)
+
+
+@needs_spawn
+def test_sharded_defer_roll_bit_parity():
+    """Packed neighbor gossip with pre-rolled vs roll-at-consume in-flight
+    messages must be BIT-identical — the overlap schedule is a pure
+    latency-hiding rewrite."""
+    run_sub("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.distributed import make_train_job
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import ModelConfig
+
+        cfg = ModelConfig(name="lm-tiny", arch_type="dense", n_layers=1,
+                          d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                          vocab_size=256, block_unit=("attn",),
+                          tie_embeddings=True)
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        job = make_train_job(cfg, mesh, tau=3, lr=1e-2, alpha=0.1,
+                             gossip="roll", channel="choco",
+                             compression="top_k:0.25", overlap=True)
+        alg = job.algorithm
+        chan = alg.comm.resolved_channel()
+        assert chan.overlap and not chan.defer_roll
+        alg2 = dataclasses.replace(
+            alg, channel=dataclasses.replace(chan, defer_roll=True))
+        job2 = make_train_job(cfg, mesh, tau=3, lr=1e-2, alpha=0.1,
+                              gossip="roll", algorithm=alg2)
+
+        def drive(j):
+            state = j.init_state(jax.random.key(0))
+            bkey = jax.random.key(1)
+            shape = (j.round_len, j.n_nodes, 2, 16)
+            batches = {
+                "tokens": jax.random.randint(bkey, shape, 0, 256),
+                "targets": jax.random.randint(
+                    jax.random.fold_in(bkey, 1), shape, 0, 256),
+            }
+            for _ in range(3):
+                state, _ = jax.jit(j.step_fn)(state, batches)
+            return state
+
+        a, b = drive(job), drive(job2)
+        for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        print("defer_roll parity ok")
+    """)
+
+
+# ------------------------------------------------------- measured link bytes
+@needs_spawn
+def test_sharded_packed_byte_reduction_and_fault_equivalence():
+    """One subprocess, four compiled jobs on a data-only 8-node mesh:
+
+      * ring: packed neighbor wire >= 4x fewer collective bytes than dense;
+      * dropout_ring: compressed allgather strictly fewer all-gather bytes
+        than the dense fallback, AND the two wire modes stay numerically
+        equivalent over real fault-scheduled rounds.
+    """
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.distributed import make_train_job
+        from repro.launch.hlo_analysis import analyze_module
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import ModelConfig
+        from repro.scenarios import make_scenario
+
+        # data-only mesh: every counted collective is an inter-node (wire)
+        # transfer; a model axis would bury gossip in resharding noise
+        mesh = make_test_mesh((8, 1), ("data", "model"))
+        cfg = ModelConfig(name="lm-tiny", arch_type="dense", n_layers=1,
+                          d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                          vocab_size=256, block_unit=("attn",),
+                          tie_embeddings=True)
+
+        def build(wire_mode, scen):
+            scenario = make_scenario(scen, seed=0) if scen else None
+            return make_train_job(
+                cfg, mesh, tau=3, lr=1e-2, alpha=0.1, gossip="roll",
+                channel="choco", compression="top_k:0.1",
+                wire_mode=wire_mode, scenario=scenario)
+
+        def link(job):
+            costs = analyze_module(job.lower(16, 8).compile().as_text())
+            return costs.collective_link_bytes
+
+        dense = link(build("dense", None))
+        packed = link(build("auto", None))
+        ratio = dense["collective-permute"] / packed["collective-permute"]
+        print("ring ratio", round(ratio, 2))
+        assert ratio >= 4.0, ratio
+
+        fdense_job = build("dense", "dropout_ring")
+        fpacked_job = build("auto", "dropout_ring")
+        fdense, fpacked = link(fdense_job), link(fpacked_job)
+        print("fault AG bytes", fdense["all-gather"], fpacked["all-gather"])
+        assert fpacked["all-gather"] < fdense["all-gather"]
+
+        # numerically equivalent over real scheduled rounds
+        def drive(j, rounds=3):
+            state = j.init_state(jax.random.key(0))
+            sched = j.schedule_for(rounds)
+            bkey = jax.random.key(1)
+            shape = (j.round_len, j.n_nodes, 1, 16)
+            batches = {
+                "tokens": jax.random.randint(bkey, shape, 0, 256),
+                "targets": jax.random.randint(
+                    jax.random.fold_in(bkey, 1), shape, 0, 256),
+            }
+            step = jax.jit(j.step_fn)
+            for r in range(rounds):
+                state, _ = step(state, batches, j.round_ctx(sched, r))
+            return state
+
+        a, b = drive(fdense_job), drive(fpacked_job)
+        for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), atol=1e-5, rtol=0)
+        print("fault wire-mode equivalence ok")
+    """)
+
+
+# ----------------------------------------------------------- elastic sockets
+def test_packed_transport_eligibility():
+    from repro.core import make_algorithm
+    from repro.runtime.engine import packed_transport
+
+    yes = make_algorithm("dse_mvr", lr=0.05, tau=2, alpha=0.1,
+                         channel="choco", compression="top_k:0.25",
+                         overlap=True)
+    assert packed_transport(yes)
+    no_overlap = make_algorithm("dse_mvr", lr=0.05, tau=2, alpha=0.1,
+                                channel="choco", compression="top_k:0.25")
+    assert not packed_transport(no_overlap)
+    no_channel = make_algorithm("dse_mvr", lr=0.05, tau=2, alpha=0.1)
+    assert not packed_transport(no_channel)
+
+
+@needs_spawn
+def test_elastic_packed_parity_and_fewer_bytes():
+    """The packed socket protocol is a transport rewrite: final state
+    BIT-identical to the single-process replay reference, with strictly
+    fewer framed socket bytes than the dense contrib/gather exchange."""
+    from repro.runtime import launch, simulate_reference
+    from repro.runtime.config import RuntimeConfig
+    from repro.runtime.replay import leaves_equal
+
+    cfg = RuntimeConfig(
+        n_nodes=4, n_rounds=4, batch_size=4,
+        hyper=(("lr", 0.05), ("tau", 4), ("alpha", 0.1),
+               ("channel", "choco"), ("compression", "top_k:0.25"),
+               ("overlap", True)),
+    )
+    packed = launch(cfg.with_(packed_transport="auto"), 2)
+    ref = simulate_reference(cfg, packed.active_log)
+    ok, bad = leaves_equal(packed.final_leaves, ref["wire_leaves"],
+                           verbose=True)
+    assert ok, bad
+    dense = launch(cfg.with_(packed_transport="off"), 2)
+    assert packed.socket_bytes["total"] < dense.socket_bytes["total"], (
+        packed.socket_bytes, dense.socket_bytes)
+
+
+# ------------------------------------------------------------- serving pull
+def test_remote_replica_byte_equal_with_feed():
+    """A RemoteReplica pulling packed snapshot messages over a real socket
+    reconstructs the publisher's replica state byte-for-byte."""
+    from repro.runtime.engine import wire_leaves
+    from repro.serving import RemoteReplica, SnapshotFeed, SnapshotPublisher
+
+    pub = SnapshotPublisher(bounds=(1, 3), codec="qsgd")
+    params = {
+        "w": jnp.linspace(-1.0, 1.0, 24).reshape(4, 6),
+        "b": jnp.zeros((4,)),
+    }
+    feed = SnapshotFeed(pub, params, key=jax.random.key(5))
+    replica = RemoteReplica(feed.address, pub, params, key=jax.random.key(5))
+    try:
+        for t in range(4):
+            live = jax.tree.map(lambda p: p + 0.1 * (t + 1), params)
+            feed.publish(live)
+        assert replica.pull() == 4
+        assert replica.pull() == 0  # drained: no re-transfer
+        for a, b in zip(wire_leaves(replica.state), wire_leaves(feed.state)):
+            np.testing.assert_array_equal(a, b)
+        assert replica.link_bytes()["total"] > 0
+    finally:
+        replica.close()
+        feed.close()
